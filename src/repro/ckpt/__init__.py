@@ -1,0 +1,3 @@
+from .store import AsyncCheckpointer, restore_checkpoint, save_checkpoint
+
+__all__ = ["AsyncCheckpointer", "restore_checkpoint", "save_checkpoint"]

@@ -1,0 +1,13 @@
+from .base import LONG_CONTEXT_ARCHS, ModelConfig, SHAPES, ShapeConfig, replace
+from .registry import ARCHS, get_config, smoke_config
+
+__all__ = [
+    "ARCHS",
+    "LONG_CONTEXT_ARCHS",
+    "ModelConfig",
+    "SHAPES",
+    "ShapeConfig",
+    "get_config",
+    "replace",
+    "smoke_config",
+]

@@ -1,0 +1,170 @@
+"""Model/run configuration dataclasses and the assigned input shapes."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                   # query heads (0 for attention-free)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    mlp: str = "swiglu"              # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    # layer pattern, repeated over depth: entries in {"attn","local","ssm","rglru"}
+    layer_pattern: tuple[str, ...] = ("attn",)
+    sliding_window: int = 1024       # for "local" layers
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    # Mamba2 / SSD
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    ssm_conv_width: int = 4
+    # RG-LRU (RecurrentGemma / Griffin)
+    lru_width: int = 0               # 0 → d_model
+    lru_conv_width: int = 4
+    # modality frontend stub ("vision" | "audio" | None): inputs are
+    # precomputed frame/patch embeddings per the brief
+    frontend: str | None = None
+    # numerics / distribution
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    tp_multiple: int = 16            # pad query heads to a multiple of this for TP
+    vocab_pad_multiple: int = 128
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def padded_heads(self) -> int:
+        """Query heads padded for TP divisibility (zero out-proj rows ⇒ exact)."""
+        if self.num_heads == 0:
+            return 0
+        m = self.tp_multiple
+        return -(-self.num_heads // m) * m
+
+    @property
+    def padded_kv_heads(self) -> int:
+        """KV heads; padded along with q for MHA (kv == q) archs so the
+        padded q heads still group evenly."""
+        if self.num_kv_heads == 0:
+            return 0
+        if self.num_kv_heads == self.num_heads:
+            return self.padded_heads
+        assert self.padded_heads % self.num_kv_heads == 0, self
+        return self.num_kv_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.padded_heads // max(self.padded_kv_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def d_inner(self) -> int:        # mamba2
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def rnn_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def pattern(self) -> tuple[str, ...]:
+        """Per-layer block kinds, length == num_layers."""
+        p = self.layer_pattern
+        reps = -(-self.num_layers // len(p))
+        return tuple((p * reps)[: self.num_layers])
+
+    @property
+    def period(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def full_periods(self) -> int:
+        return self.num_layers // self.period
+
+    @property
+    def tail_layers(self) -> tuple[str, ...]:
+        return self.pattern[self.full_periods * self.period:]
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings included once; see notes)."""
+        d, f, v = self.d_model, self.d_ff, self.padded_vocab
+        n = 0
+        per_kind: dict[str, int] = {}
+        hd = self.head_dim
+        attn = d * self.padded_heads * hd + 2 * d * self.padded_kv_heads * hd + self.padded_heads * hd * d
+        mlp_mats = 3 if self.mlp in ("swiglu", "geglu") else 2
+        dense_mlp = mlp_mats * d * f
+        per_kind["attn"] = attn + dense_mlp + 2 * d
+        per_kind["local"] = per_kind["attn"]
+        if self.num_experts:
+            router = d * self.num_experts
+            experts = self.num_experts * mlp_mats * d * f
+            per_kind["attn"] = attn + router + experts + 2 * d
+            per_kind["local"] = per_kind["attn"]
+        if self.ssm_state:
+            di, ns, nh = self.d_inner, self.ssm_state, self.ssm_heads
+            per_kind["ssm"] = (d * (2 * di + 2 * ns + nh)  # in_proj(x,z,B,C,dt)
+                               + self.ssm_conv_width * (di + 2 * ns)
+                               + 2 * nh + di * d + d)
+        if "rglru" in self.layer_pattern:
+            w = self.rnn_width
+            # in_proj (x+gate) + conv + RG-LRU gates (Wx, Wa) + Λ + out_proj + mlp + norms
+            per_kind["rglru"] = (2 * d * w + self.lru_conv_width * w
+                                 + 2 * w * w + w + w * d + dense_mlp + 2 * d)
+        for kind in self.pattern:
+            n += per_kind[kind]
+        n += 2 * v * d  # untied embedding + unembedding
+        n += d          # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if not self.num_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        mlp_mats = 3 if self.mlp in ("swiglu", "geglu") else 2
+        inactive = (self.num_experts - self.num_experts_per_tok) * mlp_mats * d * f
+        return self.param_count() - inactive * self.num_layers
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# Archs whose long-context cell runs (sub-quadratic sequence mixing).  All
+# others skip `long_500k` per the brief (recorded in DESIGN.md §5).
+LONG_CONTEXT_ARCHS = {"mamba2-780m", "recurrentgemma-9b"}
+
+
+def replace(cfg: ModelConfig, **kw) -> ModelConfig:
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,9 @@
+"""gemma3-12b — exact assigned config (defined in registry.py).
+
+Select with ``--arch gemma3-12b`` or ``get_config("gemma3-12b")``;
+reduced smoke twin via ``smoke_config("gemma3-12b")``.
+"""
+from .registry import get_config, smoke_config
+
+CONFIG = get_config("gemma3-12b")
+SMOKE = smoke_config("gemma3-12b")

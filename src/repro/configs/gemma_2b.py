@@ -1,0 +1,9 @@
+"""gemma-2b — exact assigned config (defined in registry.py).
+
+Select with ``--arch gemma-2b`` or ``get_config("gemma-2b")``;
+reduced smoke twin via ``smoke_config("gemma-2b")``.
+"""
+from .registry import get_config, smoke_config
+
+CONFIG = get_config("gemma-2b")
+SMOKE = smoke_config("gemma-2b")

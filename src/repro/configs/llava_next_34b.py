@@ -1,0 +1,9 @@
+"""llava-next-34b — exact assigned config (defined in registry.py).
+
+Select with ``--arch llava-next-34b`` or ``get_config("llava-next-34b")``;
+reduced smoke twin via ``smoke_config("llava-next-34b")``.
+"""
+from .registry import get_config, smoke_config
+
+CONFIG = get_config("llava-next-34b")
+SMOKE = smoke_config("llava-next-34b")

@@ -1,0 +1,9 @@
+"""mamba2-780m — exact assigned config (defined in registry.py).
+
+Select with ``--arch mamba2-780m`` or ``get_config("mamba2-780m")``;
+reduced smoke twin via ``smoke_config("mamba2-780m")``.
+"""
+from .registry import get_config, smoke_config
+
+CONFIG = get_config("mamba2-780m")
+SMOKE = smoke_config("mamba2-780m")

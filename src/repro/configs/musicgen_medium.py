@@ -1,0 +1,9 @@
+"""musicgen-medium — exact assigned config (defined in registry.py).
+
+Select with ``--arch musicgen-medium`` or ``get_config("musicgen-medium")``;
+reduced smoke twin via ``smoke_config("musicgen-medium")``.
+"""
+from .registry import get_config, smoke_config
+
+CONFIG = get_config("musicgen-medium")
+SMOKE = smoke_config("musicgen-medium")

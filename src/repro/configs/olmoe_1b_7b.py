@@ -1,0 +1,9 @@
+"""olmoe-1b-7b — exact assigned config (defined in registry.py).
+
+Select with ``--arch olmoe-1b-7b`` or ``get_config("olmoe-1b-7b")``;
+reduced smoke twin via ``smoke_config("olmoe-1b-7b")``.
+"""
+from .registry import get_config, smoke_config
+
+CONFIG = get_config("olmoe-1b-7b")
+SMOKE = smoke_config("olmoe-1b-7b")

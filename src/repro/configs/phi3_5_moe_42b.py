@@ -1,0 +1,9 @@
+"""phi3.5-moe-42b-a6.6b — exact assigned config (defined in registry.py).
+
+Select with ``--arch phi3.5-moe-42b-a6.6b`` or ``get_config("phi3.5-moe-42b-a6.6b")``;
+reduced smoke twin via ``smoke_config("phi3.5-moe-42b-a6.6b")``.
+"""
+from .registry import get_config, smoke_config
+
+CONFIG = get_config("phi3.5-moe-42b-a6.6b")
+SMOKE = smoke_config("phi3.5-moe-42b-a6.6b")

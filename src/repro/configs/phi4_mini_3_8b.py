@@ -1,0 +1,9 @@
+"""phi4-mini-3.8b — exact assigned config (defined in registry.py).
+
+Select with ``--arch phi4-mini-3.8b`` or ``get_config("phi4-mini-3.8b")``;
+reduced smoke twin via ``smoke_config("phi4-mini-3.8b")``.
+"""
+from .registry import get_config, smoke_config
+
+CONFIG = get_config("phi4-mini-3.8b")
+SMOKE = smoke_config("phi4-mini-3.8b")

@@ -1,0 +1,9 @@
+"""qwen2.5-14b — exact assigned config (defined in registry.py).
+
+Select with ``--arch qwen2.5-14b`` or ``get_config("qwen2.5-14b")``;
+reduced smoke twin via ``smoke_config("qwen2.5-14b")``.
+"""
+from .registry import get_config, smoke_config
+
+CONFIG = get_config("qwen2.5-14b")
+SMOKE = smoke_config("qwen2.5-14b")

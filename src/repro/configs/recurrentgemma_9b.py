@@ -1,0 +1,9 @@
+"""recurrentgemma-9b — exact assigned config (defined in registry.py).
+
+Select with ``--arch recurrentgemma-9b`` or ``get_config("recurrentgemma-9b")``;
+reduced smoke twin via ``smoke_config("recurrentgemma-9b")``.
+"""
+from .registry import get_config, smoke_config
+
+CONFIG = get_config("recurrentgemma-9b")
+SMOKE = smoke_config("recurrentgemma-9b")

@@ -1,0 +1,109 @@
+"""The 10 assigned architectures (exact public configs) + reduced smoke twins.
+
+Sources per the brief; `[source]` notes in ARCHS.  Full configs are exercised
+only via the dry-run (ShapeDtypeStruct, no allocation); smoke tests use
+``smoke_config(name)`` — same family/pattern, tiny dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .base import ModelConfig
+
+ARCHS: dict[str, ModelConfig] = {}
+
+
+def _reg(cfg: ModelConfig) -> ModelConfig:
+    ARCHS[cfg.name] = cfg
+    return cfg
+
+
+# --- MoE --------------------------------------------------------------------
+_reg(ModelConfig(  # [hf:microsoft/Phi-3.5-MoE-instruct]
+    name="phi3.5-moe-42b-a6.6b", family="moe", num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=8, head_dim=128, d_ff=6400, vocab_size=32064,
+    mlp="swiglu", num_experts=16, num_experts_per_tok=2, rope_theta=10_000.0))
+
+_reg(ModelConfig(  # [arXiv:2409.02060]
+    name="olmoe-1b-7b", family="moe", num_layers=16, d_model=2048,
+    num_heads=16, num_kv_heads=16, head_dim=128, d_ff=1024, vocab_size=50304,
+    mlp="swiglu", num_experts=64, num_experts_per_tok=8, rope_theta=10_000.0))
+
+# --- SSM --------------------------------------------------------------------
+_reg(ModelConfig(  # [arXiv:2405.21060]
+    name="mamba2-780m", family="ssm", num_layers=48, d_model=1536,
+    num_heads=0, num_kv_heads=0, head_dim=0, d_ff=0, vocab_size=50280,
+    layer_pattern=("ssm",), ssm_state=128, ssm_expand=2, ssm_head_dim=64,
+    ssm_chunk=128))
+
+# --- VLM / audio (stub frontends per the brief) ------------------------------
+_reg(ModelConfig(  # [hf:llava-hf/llava-v1.6 (34B variant)]
+    name="llava-next-34b", family="vlm", num_layers=60, d_model=7168,
+    num_heads=56, num_kv_heads=8, head_dim=128, d_ff=20480, vocab_size=64000,
+    mlp="swiglu", frontend="vision", rope_theta=1_000_000.0))
+
+_reg(ModelConfig(  # [arXiv:2306.05284]
+    name="musicgen-medium", family="audio", num_layers=48, d_model=1536,
+    num_heads=24, num_kv_heads=24, head_dim=64, d_ff=6144, vocab_size=2048,
+    mlp="gelu", frontend="audio", rope_theta=10_000.0))
+
+# --- dense -------------------------------------------------------------------
+_reg(ModelConfig(  # [arXiv:2412.08905]
+    name="phi4-mini-3.8b", family="dense", num_layers=32, d_model=3072,
+    num_heads=24, num_kv_heads=8, head_dim=128, d_ff=8192, vocab_size=200064,
+    mlp="swiglu", rope_theta=10_000.0))
+
+_reg(ModelConfig(  # [hf:google/gemma-3 family] 5:1 local:global
+    name="gemma3-12b", family="dense", num_layers=48, d_model=3840,
+    num_heads=16, num_kv_heads=8, head_dim=256, d_ff=15360, vocab_size=262144,
+    mlp="geglu", layer_pattern=("local", "local", "local", "local", "local", "attn"),
+    sliding_window=1024, rope_theta=1_000_000.0))
+
+_reg(ModelConfig(  # [arXiv:2403.08295] MQA, GeGLU, head_dim 256
+    name="gemma-2b", family="dense", num_layers=18, d_model=2048,
+    num_heads=8, num_kv_heads=1, head_dim=256, d_ff=16384, vocab_size=256000,
+    mlp="geglu", rope_theta=10_000.0))
+
+_reg(ModelConfig(  # [hf:Qwen/Qwen2.5 family] QKV bias
+    name="qwen2.5-14b", family="dense", num_layers=48, d_model=5120,
+    num_heads=40, num_kv_heads=8, head_dim=128, d_ff=13824, vocab_size=152064,
+    mlp="swiglu", qkv_bias=True, rope_theta=1_000_000.0))
+
+# --- hybrid -------------------------------------------------------------------
+_reg(ModelConfig(  # [arXiv:2402.19427] RG-LRU + local attn, (R,R,A) pattern
+    name="recurrentgemma-9b", family="hybrid", num_layers=38, d_model=4096,
+    num_heads=16, num_kv_heads=1, head_dim=256, d_ff=12288, vocab_size=256000,
+    mlp="geglu", layer_pattern=("rglru", "rglru", "local"), sliding_window=2048,
+    lru_width=4096, rope_theta=10_000.0))
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family twin: tiny dims, 1-device friendly, no TP padding."""
+    cfg = get_config(name)
+    kw: dict = dict(
+        name=cfg.name + "-smoke",
+        num_layers=2 * cfg.period,
+        d_model=64,
+        vocab_size=512,
+        tp_multiple=1,
+        vocab_pad_multiple=8,
+        sliding_window=8,
+        rope_theta=cfg.rope_theta,
+    )
+    if cfg.num_heads:
+        kw.update(num_heads=4, num_kv_heads=min(cfg.num_kv_heads, 2), head_dim=16)
+    if cfg.d_ff:
+        kw.update(d_ff=128)
+    if cfg.num_experts:
+        kw.update(num_experts=4, num_experts_per_tok=min(cfg.num_experts_per_tok, 2))
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=8)
+    if cfg.lru_width:
+        kw.update(lru_width=32)
+    return dataclasses.replace(cfg, **kw)

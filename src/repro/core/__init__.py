@@ -1,0 +1,30 @@
+"""Core of the reproduction: the MementoHash consistent-hashing family.
+
+Host control plane (paper-faithful):
+  * :class:`MementoHash`  — the paper's contribution (Algs. 1-4, Θ(r) state)
+  * :class:`JumpHash`     — the stateless core engine (LIFO-only)
+  * :class:`AnchorHash`   — fixed-capacity baseline (in-place, Θ(a))
+  * :class:`DxHash`       — fixed-capacity baseline (bit-array, Θ(a))
+
+Device data plane:
+  * :class:`MementoTables` — dense int32 image of a Memento state
+  * :mod:`repro.core.jax_lookup` — batched jnp lookup (oracle for kernels/)
+"""
+from .anchor import AnchorHash
+from .dx import DxHash
+from .jump import JumpHash, jump32, jump64, np_jump32
+from .memento import MementoHash, random_state
+from .tables import MementoTables, tables_from_state
+
+__all__ = [
+    "AnchorHash",
+    "DxHash",
+    "JumpHash",
+    "MementoHash",
+    "MementoTables",
+    "jump32",
+    "jump64",
+    "np_jump32",
+    "random_state",
+    "tables_from_state",
+]

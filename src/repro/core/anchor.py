@@ -1,0 +1,100 @@
+"""AnchorHash (Mendelson et al., 2020) — in-place variant.
+
+Fixed overall capacity ``a``; tracks every bucket (working and removed) with
+four int arrays (Θ(a) memory):
+
+  * ``A[b]`` — 0 if ``b`` is working, else the working-set size right after
+    ``b`` was removed (removal "timestamps" are strictly decreasing sizes),
+  * ``W[0..N-1]`` — the working buckets (order maintained by swap-removal),
+  * ``L[b]`` — index of working bucket ``b`` inside ``W``,
+  * ``K[b]`` — the bucket that replaced ``b`` in ``W`` when ``b`` was removed
+    (the "wrap" successor used by the lookup inner loop).
+
+Removals/additions must nest LIFO-per-bucket as in the original (random
+removals allowed; additions restore the most recent removal — same contract
+the AnchorHash paper uses for its stack-based resource management).
+"""
+from __future__ import annotations
+
+from .hashing import MASK64, fmix64, hash2_64
+
+
+class AnchorHash:
+    name = "anchor"
+
+    def __init__(self, capacity: int, initial_node_count: int):
+        if not (0 < initial_node_count <= capacity):
+            raise ValueError("need 0 < initial_node_count <= capacity")
+        a = capacity
+        self.a = a
+        self.N = a
+        self.A = [0] * a
+        self.W = list(range(a))
+        self.L = list(range(a))
+        self.K = list(range(a))
+        self.R: list[int] = []  # removal stack
+        for b in range(a - 1, initial_node_count - 1, -1):
+            self.remove(b)
+
+    # -- resource management ---------------------------------------------------
+    def remove(self, b: int) -> None:
+        if not (0 <= b < self.a) or self.A[b] != 0:
+            raise ValueError(f"bucket {b} is not working")
+        if self.N == 1:
+            raise ValueError("cannot remove the last working bucket")
+        self.R.append(b)
+        self.N -= 1
+        N = self.N
+        self.A[b] = N
+        moved = self.W[N]
+        pos = self.L[b]
+        self.W[pos] = moved
+        self.L[moved] = pos
+        self.K[b] = moved
+
+    def add(self) -> int:
+        if not self.R:
+            raise ValueError("AnchorHash capacity exhausted (fixed a)")
+        b = self.R.pop()
+        N = self.N
+        moved = self.K[b]
+        pos = self.L[moved]
+        self.W[N] = moved
+        self.L[moved] = N
+        self.W[pos] = b
+        self.L[b] = pos
+        self.A[b] = 0
+        self.K[b] = b
+        self.N += 1
+        return b
+
+    # -- lookup -----------------------------------------------------------------
+    def lookup(self, key: int) -> int:
+        key &= MASK64
+        A, K = self.A, self.K
+        b = fmix64(key) % self.a
+        while A[b] > 0:  # b is removed
+            h = hash2_64(key, b) % A[b]
+            while A[h] >= A[b]:  # h removed at-or-after b ⇒ wrap back in time
+                h = K[h]
+            b = h
+        return b
+
+    # -- introspection -------------------------------------------------------------
+    @property
+    def size(self) -> int:
+        return self.a
+
+    @property
+    def working(self) -> int:
+        return self.N
+
+    def is_working(self, b: int) -> bool:
+        return 0 <= b < self.a and self.A[b] == 0
+
+    def working_set(self) -> set[int]:
+        return set(self.W[: self.N])
+
+    def memory_bytes(self) -> int:
+        """Θ(a): four int32 arrays + the removal stack."""
+        return 16 * self.a + 4 * len(self.R) + 8

@@ -1,0 +1,72 @@
+"""Bounded-load overlay for MementoHash — the paper's §X future work.
+
+Implements "consistent hashing with bounded loads" (Mirrokni et al., 2016)
+on top of any engine with a ``lookup`` method: each bucket accepts at most
+``ceil(c · keys / working)`` assignments; overflowing keys walk a
+deterministic rehash chain to the next non-full bucket.  Guarantees a
+peak-to-mean load ≤ c while keeping (amortized) minimal movement.
+"""
+from __future__ import annotations
+
+import math
+
+from .hashing import MASK64, hash2_64
+from .memento import MementoHash
+
+
+class BoundedLoadMemento:
+    name = "memento-bounded"
+
+    def __init__(self, initial_node_count: int, c: float = 1.25):
+        if c <= 1.0:
+            raise ValueError("load factor c must exceed 1")
+        self.m = MementoHash(initial_node_count)
+        self.c = c
+        self.load: dict[int, int] = {}
+        self.assignment: dict[int, int] = {}
+
+    # -- capacity ---------------------------------------------------------
+    def capacity(self) -> int:
+        total = len(self.assignment) + 1
+        return max(1, math.ceil(self.c * total / self.m.working))
+
+    # -- key management -----------------------------------------------------
+    def assign(self, key: int) -> int:
+        key &= MASK64
+        cap = self.capacity()
+        b = self.m.lookup(key)
+        probe, k = 0, key
+        while self.load.get(b, 0) >= cap:
+            probe += 1
+            k = hash2_64(k, probe)
+            b = self.m.lookup(k)
+            if probe > 64 * self.m.working:  # cannot happen if c > 1
+                raise RuntimeError("no bucket below capacity")
+        self.assignment[key] = b
+        self.load[b] = self.load.get(b, 0) + 1
+        return b
+
+    def release(self, key: int) -> None:
+        b = self.assignment.pop(key & MASK64)
+        self.load[b] -= 1
+
+    # -- membership -----------------------------------------------------------
+    def remove(self, bucket: int) -> dict[int, int]:
+        """Remove a bucket; re-assign only the keys it held. Returns moves."""
+        self.m.remove(bucket)
+        victims = [k for k, b in self.assignment.items() if b == bucket]
+        for k in victims:
+            self.release(k)
+        moves = {}
+        for k in victims:
+            moves[k] = self.assign(k)
+        return moves
+
+    def add(self) -> int:
+        return self.m.add()
+
+    def peak_to_mean(self) -> float:
+        if not self.assignment:
+            return 0.0
+        mean = len(self.assignment) / self.m.working
+        return max(self.load.values(), default=0) / mean

@@ -1,0 +1,74 @@
+"""DxHash (Dong & Wang, 2021) — bit-array + pseudo-random probing.
+
+Fixed overall capacity ``a``; a bit-array marks working buckets (Θ(a) bits).
+Lookup draws the pseudo-random sequence ``hash(key, 0), hash(key, 1), ...``
+mod ``a`` and returns the first *working* bucket — expected O(a/w) probes.
+
+A removal stack provides the restore order for additions (the original keeps
+an analogous free-slot structure; its size is counted in ``memory_bytes``).
+"""
+from __future__ import annotations
+
+from .hashing import MASK64, hash2_64
+
+
+class DxHash:
+    name = "dx"
+
+    _MAX_PROBE_FACTOR = 64  # cap = factor * ceil(a/w) probes, then fallback scan
+
+    def __init__(self, capacity: int, initial_node_count: int):
+        if not (0 < initial_node_count <= capacity):
+            raise ValueError("need 0 < initial_node_count <= capacity")
+        self.a = capacity
+        self.N = initial_node_count
+        self.active = bytearray([1] * initial_node_count + [0] * (capacity - initial_node_count))
+        self.R: list[int] = list(range(capacity - 1, initial_node_count - 1, -1))
+
+    def remove(self, b: int) -> None:
+        if not (0 <= b < self.a) or not self.active[b]:
+            raise ValueError(f"bucket {b} is not working")
+        if self.N == 1:
+            raise ValueError("cannot remove the last working bucket")
+        self.active[b] = 0
+        self.R.append(b)
+        self.N -= 1
+
+    def add(self) -> int:
+        if not self.R:
+            raise ValueError("DxHash capacity exhausted (fixed a)")
+        b = self.R.pop()
+        self.active[b] = 1
+        self.N += 1
+        return b
+
+    def lookup(self, key: int) -> int:
+        key &= MASK64
+        a, active = self.a, self.active
+        max_probes = self._MAX_PROBE_FACTOR * max(1, (a + self.N - 1) // self.N)
+        for i in range(max_probes):
+            b = hash2_64(key, i) % a
+            if active[b]:
+                return b
+        for b in range(a):  # vanishing-probability fallback
+            if active[b]:
+                return b
+        raise RuntimeError("no working bucket")
+
+    @property
+    def size(self) -> int:
+        return self.a
+
+    @property
+    def working(self) -> int:
+        return self.N
+
+    def is_working(self, b: int) -> bool:
+        return 0 <= b < self.a and bool(self.active[b])
+
+    def working_set(self) -> set[int]:
+        return {b for b in range(self.a) if self.active[b]}
+
+    def memory_bytes(self) -> int:
+        """Θ(a): the availability bit-array + the free-slot stack."""
+        return (self.a + 7) // 8 + 4 * len(self.R) + 8

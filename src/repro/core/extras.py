@@ -1,0 +1,208 @@
+"""Survey extras: the other consistent-hashing algorithms from the authors'
+comparison papers [11][12] — Ring (Karger), Rendezvous (HRW), Maglev, and
+Multi-probe.  Useful as additional baselines in benchmarks and to sanity-check
+Memento's placement quality against the full literature.
+"""
+from __future__ import annotations
+
+import bisect
+
+from .hashing import MASK64, fmix64, hash2_64
+
+
+class RingHash:
+    """Karger consistent-hashing ring with virtual nodes."""
+
+    name = "ring"
+
+    def __init__(self, initial_node_count: int, vnodes: int = 100):
+        self.vnodes = vnodes
+        self.points: list[tuple[int, int]] = []  # (hash, bucket) sorted
+        self.n = 0
+        self._removed: list[int] = []
+        for _ in range(initial_node_count):
+            self.add()
+
+    def _bucket_points(self, b: int) -> list[tuple[int, int]]:
+        return [(hash2_64(b, v), b) for v in range(self.vnodes)]
+
+    def add(self) -> int:
+        b = self._removed.pop() if self._removed else self.n
+        if b == self.n:
+            self.n += 1
+        for pt in self._bucket_points(b):
+            bisect.insort(self.points, pt)
+        return b
+
+    def remove(self, b: int) -> None:
+        pts = set(self._bucket_points(b))
+        before = len(self.points)
+        self.points = [p for p in self.points if p not in pts]
+        if len(self.points) == before:
+            raise ValueError(f"bucket {b} not present")
+        if len(self.points) == 0:
+            raise ValueError("cannot remove the last bucket")
+        self._removed.append(b)
+
+    def lookup(self, key: int) -> int:
+        h = fmix64(key & MASK64)
+        i = bisect.bisect_right(self.points, (h, 1 << 62))
+        return self.points[i % len(self.points)][1]
+
+    def working_set(self) -> set[int]:
+        return {b for _, b in self.points}
+
+    @property
+    def working(self) -> int:
+        return len(self.working_set())
+
+    def memory_bytes(self) -> int:
+        return 12 * len(self.points)
+
+
+class RendezvousHash:
+    """Highest-random-weight (Thaler & Ravishankar): O(w) lookup, Θ(w) state."""
+
+    name = "rendezvous"
+
+    def __init__(self, initial_node_count: int):
+        self.buckets = set(range(initial_node_count))
+        self._next = initial_node_count
+
+    def add(self) -> int:
+        b = self._next
+        self._next += 1
+        self.buckets.add(b)
+        return b
+
+    def remove(self, b: int) -> None:
+        if b not in self.buckets:
+            raise ValueError(f"bucket {b} not present")
+        if len(self.buckets) == 1:
+            raise ValueError("cannot remove the last bucket")
+        self.buckets.discard(b)
+
+    def lookup(self, key: int) -> int:
+        return max(self.buckets, key=lambda b: hash2_64(key, b))
+
+    def working_set(self) -> set[int]:
+        return set(self.buckets)
+
+    @property
+    def working(self) -> int:
+        return len(self.buckets)
+
+    def memory_bytes(self) -> int:
+        return 4 * len(self.buckets)
+
+
+class MaglevHash:
+    """Maglev (Eisenbud et al.): O(1) lookup via a permutation-filled table;
+    table rebuild on membership change (Θ(M) with M ≳ 100·n)."""
+
+    name = "maglev"
+
+    def __init__(self, initial_node_count: int, table_size: int = 65537):
+        self.M = table_size  # prime
+        self.buckets = list(range(initial_node_count))
+        self._next = initial_node_count
+        self._build()
+
+    def _build(self) -> None:
+        if not self.buckets:
+            raise ValueError("empty cluster")
+        M = self.M
+        offsets = {b: hash2_64(b, 0xA) % M for b in self.buckets}
+        skips = {b: hash2_64(b, 0xB) % (M - 1) + 1 for b in self.buckets}
+        table = [-1] * M
+        nexts = {b: 0 for b in self.buckets}
+        filled = 0
+        while filled < M:
+            for b in self.buckets:
+                while True:
+                    c = (offsets[b] + nexts[b] * skips[b]) % M
+                    nexts[b] += 1
+                    if table[c] < 0:
+                        table[c] = b
+                        filled += 1
+                        break
+                if filled == M:
+                    break
+        self.table = table
+
+    def add(self) -> int:
+        b = self._next
+        self._next += 1
+        self.buckets.append(b)
+        self._build()
+        return b
+
+    def remove(self, b: int) -> None:
+        if b not in self.buckets or len(self.buckets) == 1:
+            raise ValueError(f"cannot remove {b}")
+        self.buckets.remove(b)
+        self._build()
+
+    def lookup(self, key: int) -> int:
+        return self.table[fmix64(key & MASK64) % self.M]
+
+    def working_set(self) -> set[int]:
+        return set(self.buckets)
+
+    @property
+    def working(self) -> int:
+        return len(self.buckets)
+
+    def memory_bytes(self) -> int:
+        return 4 * self.M + 4 * len(self.buckets)
+
+
+class MultiProbeHash:
+    """Multi-probe consistent hashing (Appleton & O'Reilly): one point per
+    node, k probes per key, closest-successor wins — Θ(w) state, O(k·log w)
+    lookup, balance improves with k."""
+
+    name = "multiprobe"
+
+    def __init__(self, initial_node_count: int, probes: int = 21):
+        self.k = probes
+        self.points: list[tuple[int, int]] = []
+        self.n = 0
+        self._removed: list[int] = []
+        for _ in range(initial_node_count):
+            self.add()
+
+    def add(self) -> int:
+        b = self._removed.pop() if self._removed else self.n
+        if b == self.n:
+            self.n += 1
+        bisect.insort(self.points, (hash2_64(b, 0xC), b))
+        return b
+
+    def remove(self, b: int) -> None:
+        pt = (hash2_64(b, 0xC), b)
+        if pt not in self.points or len(self.points) == 1:
+            raise ValueError(f"cannot remove {b}")
+        self.points.remove(pt)
+        self._removed.append(b)
+
+    def lookup(self, key: int) -> int:
+        best = None
+        for i in range(self.k):
+            h = hash2_64(key, i)
+            j = bisect.bisect_right(self.points, (h, 1 << 62))
+            ph, pb = self.points[j % len(self.points)]
+            dist = (ph - h) % (1 << 64)
+            if best is None or dist < best[0]:
+                best = (dist, pb)
+        return best[1]
+
+    def working_set(self) -> set[int]:
+        return {b for _, b in self.points}
+
+    @property
+    def working(self) -> int:
+        return len(self.points)
+
+    def memory_bytes(self) -> int:
+        return 12 * len(self.points)

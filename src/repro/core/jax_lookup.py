@@ -1,0 +1,106 @@
+"""Batched MementoHash lookup — pure-jnp data plane.
+
+Bit-identical to the numpy host plane (``jump.np_jump32`` / ``hashing``):
+32-bit murmur mixing, 24-bit uniform variates, f32 divides.  These functions
+are the oracle for the Pallas kernel (``kernels/ref.py`` re-exports them) and
+the CPU fallback used by the data/serving substrates for bulk routing.
+
+All loops are lane-synchronous masked ``lax.while_loop``s: a whole key block
+iterates until every lane settles.  Expected sweep counts are bounded by the
+paper's Props. VII.1-3 (E[τ], E[σ] ≤ ln(n/w)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import _C1_32, _C2_32, GOLDEN32
+
+_U = jnp.uint32
+
+
+def fmix32(h):
+    h = h.astype(_U)
+    h ^= h >> _U(16)
+    h = h * _U(_C1_32)
+    h ^= h >> _U(13)
+    h = h * _U(_C2_32)
+    h ^= h >> _U(16)
+    return h
+
+
+def hash2_32(keys, seed):
+    """(key, seed) hash; seed may be a traced int32 array (e.g. bucket ids)."""
+    s = fmix32(seed.astype(_U) * _U(GOLDEN32) + _U(1))
+    return fmix32(keys.astype(_U) ^ s)
+
+
+def _step_u24(keys, step):
+    s = jnp.asarray(step).astype(_U)
+    h = fmix32(keys.astype(_U) ^ (s * _U(GOLDEN32) + _U(0x2545F491)))
+    return h >> _U(8)
+
+
+def jump32(keys, n):
+    """Vectorized TPU-native JumpHash: keys uint32 [...], n dynamic int."""
+    nf = jnp.float32(n)
+    b0 = jnp.zeros(keys.shape, jnp.int32)
+    j0 = jnp.zeros(keys.shape, jnp.float32)
+
+    def cond(state):
+        _, j, _ = state
+        return jnp.any(j < nf)
+
+    def body(state):
+        b, j, i = state
+        active = j < nf
+        b = jnp.where(active, j.astype(jnp.int32), b)
+        u = _step_u24(keys, i)
+        r = (u.astype(jnp.float32) + jnp.float32(1.0)) * jnp.float32(2.0 ** -24)
+        jn = jnp.minimum(jnp.floor((b.astype(jnp.float32) + jnp.float32(1.0)) / r), nf)
+        j = jnp.where(active, jn, j)
+        return b, j, i + 1
+
+    b, _, _ = jax.lax.while_loop(cond, body, (b0, j0, jnp.int32(0)))
+    return b
+
+
+def memento_lookup(keys, repl, n):
+    """Paper Alg. 4, vectorized: keys uint32 [...], repl int32 [cap], n int.
+
+    Returns int32 bucket ids in [0, n) that are working buckets.
+    """
+    keys = keys.astype(_U)
+    b = jump32(keys, n)
+
+    def outer_cond(state):
+        b = state
+        return jnp.any(repl[b] >= 0)
+
+    def outer_body(b):
+        c = repl[b]
+        active = c >= 0
+        wb = jnp.where(active, c, 1)  # |W_b| (Prop. V.3); dummy 1 when settled
+        h = hash2_32(keys, b)
+        d = (h % wb.astype(_U)).astype(jnp.int32)
+
+        def inner_cond(state):
+            d = state
+            u = repl[d]
+            return jnp.any(active & (u >= 0) & (u >= wb))
+
+        def inner_body(d):
+            u = repl[d]
+            follow = active & (u >= 0) & (u >= wb)  # only while u ≥ w_b (balance)
+            return jnp.where(follow, u, d)
+
+        d = jax.lax.while_loop(inner_cond, inner_body, d)
+        return jnp.where(active, d, b)
+
+    return jax.lax.while_loop(outer_cond, outer_body, b)
+
+
+def memento_lookup_hosted(keys, memento_tables):
+    """Convenience: run the data plane against a host `MementoTables`."""
+    repl = jnp.asarray(memento_tables.repl)
+    return memento_lookup(jnp.asarray(keys, dtype=jnp.uint32), repl, memento_tables.n)

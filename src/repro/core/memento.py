@@ -1,0 +1,125 @@
+"""MementoHash — faithful implementation of the paper (Algs. 1-4).
+
+State ``S = ⟨n, R, l⟩``:
+  * ``n``  — size of the b-array,
+  * ``R``  — replacement set ``{b: (c, p)}`` (hash table, Θ(r) memory),
+  * ``l``  — last removed bucket (``l = n`` when ``R`` is empty).
+
+Engine: JumpHash (``jump64`` faithful / ``jump32`` TPU-native — the latter is
+bit-identical to the device data plane so lookups agree across planes).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .hashing import MASK32, MASK64, hash2_32, hash2_64
+from .jump import jump32, jump64
+
+
+class MementoHash:
+    name = "memento"
+
+    def __init__(self, initial_node_count: int, variant: str = "64"):
+        if initial_node_count <= 0:
+            raise ValueError("initial_node_count must be positive")
+        # Alg. 1 (Init).
+        self.n = initial_node_count
+        self.l = self.n
+        self.R: dict[int, tuple[int, int]] = {}
+        self.variant = variant
+        if variant == "64":
+            self._jump, self._hash2, self._mask = jump64, hash2_64, MASK64
+        elif variant == "32":
+            self._jump, self._hash2, self._mask = jump32, hash2_32, MASK32
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+
+    # -- state inspection ---------------------------------------------------
+    @property
+    def size(self) -> int:
+        """Size of the b-array (paper's n)."""
+        return self.n
+
+    @property
+    def working(self) -> int:
+        """Number of working buckets w = n − r (Prop. V.6)."""
+        return self.n - len(self.R)
+
+    def is_working(self, b: int) -> bool:
+        return 0 <= b < self.n and b not in self.R
+
+    def working_set(self) -> set[int]:
+        return {b for b in range(self.n) if b not in self.R}
+
+    def memory_bytes(self) -> int:
+        """Θ(r): one ⟨b → c, p⟩ tuple per removed bucket (3 × int32) + ⟨n, l⟩."""
+        return 8 + 12 * len(self.R)
+
+    # -- Alg. 2 (Remove) ------------------------------------------------------
+    def remove(self, b: int) -> None:
+        if not self.is_working(b):
+            raise ValueError(f"bucket {b} is not a working bucket")
+        if self.working == 1:
+            raise ValueError("cannot remove the last working bucket")
+        if b == self.n - 1 and not self.R:
+            # LIFO removal: shrink the b-array, stay in the Jump regime.
+            self.n -= 1
+            self.l = self.n
+        else:
+            w = self.working  # before this removal
+            self.R[b] = (w - 1, self.l)  # ⟨b → w−1, l⟩  (Prop. V.3: c = new w)
+            self.l = b
+
+    # -- Alg. 3 (Add) ---------------------------------------------------------
+    def add(self) -> int:
+        if not self.R:
+            b = self.n  # append to the tail
+            self.n += 1
+            self.l = self.n
+            return b
+        b = self.l  # restore the last removed bucket (untangles chains)
+        _, p = self.R.pop(b)
+        self.l = p
+        return b
+
+    # -- Alg. 4 (Lookup) -------------------------------------------------------
+    def lookup(self, key) -> int:
+        key &= self._mask
+        b = self._jump(key, self.n)
+        R = self.R
+        while b in R:
+            c, _ = R[b]
+            wb = c  # working buckets after b was removed (Prop. V.3)
+            d = self._hash2(key, b) % wb
+            # follow the replacement chain only while u ≥ w_b (balance!)
+            while d in R and R[d][0] >= wb:
+                d = R[d][0]
+            b = d
+        return b
+
+    # convenience for tests/benchmarks
+    def lookup_trace(self, key) -> tuple[int, int, int]:
+        """Lookup returning (bucket, external_iters, internal_iters)."""
+        key &= self._mask
+        b = self._jump(key, self.n)
+        ext = inn = 0
+        while b in self.R:
+            ext += 1
+            wb = self.R[b][0]
+            d = self._hash2(key, b) % wb
+            while d in self.R and self.R[d][0] >= wb:
+                inn += 1
+                d = self.R[d][0]
+            b = d
+        return b, ext, inn
+
+
+def random_state(
+    rng: np.random.Generator, n0: int, removals: int, variant: str = "64"
+) -> MementoHash:
+    """Build a MementoHash with ``removals`` random (non-LIFO-biased) removals."""
+    m = MementoHash(n0, variant=variant)
+    for _ in range(removals):
+        working = sorted(m.working_set())
+        m.remove(working[int(rng.integers(len(working)))])
+    return m

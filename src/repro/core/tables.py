@@ -1,0 +1,85 @@
+"""MementoTables — dense device image of a MementoHash state.
+
+The host control plane keeps the paper's Θ(r) hash table.  The device data
+plane (bulk lookups in ``core/jax_lookup.py`` / ``kernels/``) wants vector
+gathers instead of pointer chases (DESIGN.md §3.2), so we flatten the
+replacement set ``R = {b: (c, p)}`` into one int32 array::
+
+    repl[b] = c   if b removed          (c = |W_b|, Prop. V.3)
+    repl[b] = -1  if b working
+
+``repl`` has a fixed ``capacity`` ≥ n (rounded up to a multiple of 128 for
+TPU lane alignment) so that device buffers keep a stable shape across
+cluster resizes — ``n`` travels as a dynamic scalar.  Updates are O(1)
+in-place mirrors of Alg. 2/3; ``version`` bumps let cached device copies
+invalidate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .memento import MementoHash
+
+
+def _round_up(x: int, m: int = 128) -> int:
+    return ((x + m - 1) // m) * m
+
+
+class MementoTables:
+    def __init__(self, memento: MementoHash, capacity: int | None = None):
+        n = memento.n
+        cap = _round_up(max(capacity or 0, 2 * n, 128))
+        self.capacity = cap
+        self.repl = np.full((cap,), -1, dtype=np.int32)
+        for b, (c, _p) in memento.R.items():
+            self.repl[b] = c
+        self.n = n
+        self.version = 0
+        self._m = memento
+
+    # -- O(1) mirrors of Alg. 2 / Alg. 3 ------------------------------------
+    def on_remove(self, b: int) -> None:
+        """Call right *after* memento.remove(b)."""
+        m = self._m
+        if b in m.R:
+            self.repl[b] = m.R[b][0]
+        self.n = m.n
+        self.version += 1
+
+    def on_add(self, b: int) -> None:
+        """Call right *after* memento.add() returned b."""
+        m = self._m
+        if self.n == m.n:  # restored bucket
+            self.repl[b] = -1
+        else:  # appended to tail
+            if m.n > self.capacity:
+                self._grow()
+        self.n = m.n
+        self.version += 1
+
+    def _grow(self) -> None:
+        new_cap = _round_up(2 * self.capacity)
+        repl = np.full((new_cap,), -1, dtype=np.int32)
+        repl[: self.capacity] = self.repl
+        self.repl = repl
+        self.capacity = new_cap
+        self.version += 1
+
+    def check(self) -> None:
+        """Consistency with the host state (tests)."""
+        m = self._m
+        assert self.n == m.n
+        for b in range(self.n):
+            if b in m.R:
+                assert self.repl[b] == m.R[b][0]
+            else:
+                assert self.repl[b] == -1
+
+
+def tables_from_state(n: int, R: dict[int, tuple[int, int]], capacity: int | None = None) -> tuple[np.ndarray, int]:
+    """Standalone (repl, n) arrays from raw state — for tests/benchmarks."""
+    cap = _round_up(max(capacity or 0, n, 128))
+    repl = np.full((cap,), -1, dtype=np.int32)
+    for b, (c, _p) in R.items():
+        repl[b] = c
+    return repl, n

@@ -1,0 +1,3 @@
+from .pipeline import DataPipeline, ShardPlacement, synthetic_shard_tokens
+
+__all__ = ["DataPipeline", "ShardPlacement", "synthetic_shard_tokens"]

@@ -1,0 +1,115 @@
+"""Elastic data pipeline: MementoHash shard→host placement + deterministic
+synthetic corpus.
+
+This is the paper's technique as a *first-class data substrate*: file shards
+are consistent-hashed onto data-loading hosts, so
+
+  * every host derives its shard list locally (no coordinator round-trip),
+  * a host failure moves ONLY the failed host's shards (minimal disruption,
+    Prop. VI.3) — verified by ``tests/test_substrates.py``,
+  * hosts re-join in reverse order with monotone movement (Prop. VI.5),
+  * cluster capacity is unbounded (vs Anchor/Dx: no a-priori `a`).
+
+The corpus is hash-generated (shard id, position) → token, so any host can
+materialize any shard deterministically — restart/elastic tests compare
+token streams exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import MementoHash
+from repro.core.hashing import np_hash2_32
+
+
+class ShardPlacement:
+    """shard-id → host-bucket map driven by MementoHash."""
+
+    def __init__(self, num_shards: int, num_hosts: int, variant: str = "32"):
+        self.num_shards = num_shards
+        self.memento = MementoHash(num_hosts, variant=variant)
+
+    def host_of(self, shard: int) -> int:
+        return self.memento.lookup(shard)
+
+    def assignment(self) -> dict[int, list[int]]:
+        out: dict[int, list[int]] = {b: [] for b in self.memento.working_set()}
+        for s in range(self.num_shards):
+            out[self.host_of(s)].append(s)
+        return out
+
+    def shards_for_host(self, host: int) -> list[int]:
+        return [s for s in range(self.num_shards) if self.host_of(s) == host]
+
+    def fail_host(self, host: int) -> dict:
+        """Remove a host; returns the movement plan (only its shards move)."""
+        before = {s: self.host_of(s) for s in range(self.num_shards)}
+        self.memento.remove(host)
+        moved = {s: self.host_of(s) for s in range(self.num_shards)
+                 if before[s] == host}
+        stayed = sum(1 for s in range(self.num_shards)
+                     if before[s] != host and self.host_of(s) == before[s])
+        return {"moved": moved, "stayed": stayed,
+                "minimal": stayed == self.num_shards - len(moved)}
+
+    def add_host(self) -> dict:
+        before = {s: self.host_of(s) for s in range(self.num_shards)}
+        host = self.memento.add()
+        moved = {s: host for s in range(self.num_shards)
+                 if self.host_of(s) == host and before[s] != host}
+        monotone = all(self.host_of(s) in (before[s], host)
+                       for s in range(self.num_shards))
+        return {"host": host, "moved": moved, "monotone": monotone}
+
+
+def synthetic_shard_tokens(shard: int, length: int, vocab_size: int,
+                           offset: int = 0) -> np.ndarray:
+    """Deterministic pseudo-corpus: token[i] = h(shard, offset+i) mod vocab."""
+    idx = (np.arange(length, dtype=np.uint64) + np.uint64(offset)).astype(np.uint32)
+    h = np_hash2_32(idx, np.uint32(shard & 0xFFFFFFFF))
+    return (h % np.uint32(vocab_size)).astype(np.int32)
+
+
+class DataPipeline:
+    """Per-host, resumable iterator over the host's shards.
+
+    Yields ``{"tokens": (B, S), "labels": (B, S)}`` int32 batches (labels =
+    next token).  State is ``{"cursor": int}``; `load_state` resumes exactly.
+    """
+
+    def __init__(self, placement: ShardPlacement, host: int, *,
+                 batch: int, seq_len: int, vocab_size: int,
+                 shard_tokens: int = 1 << 16):
+        self.placement = placement
+        self.host = host
+        self.batch = batch
+        self.seq_len = seq_len
+        self.vocab_size = vocab_size
+        self.shard_tokens = shard_tokens
+        self.cursor = 0
+
+    def state(self) -> dict:
+        return {"cursor": self.cursor}
+
+    def load_state(self, st: dict) -> None:
+        self.cursor = int(st["cursor"])
+
+    def _sequence(self, i: int) -> np.ndarray:
+        shards = self.placement.shards_for_host(self.host)
+        if not shards:
+            raise RuntimeError(f"host {self.host} owns no shards")
+        per_shard = self.shard_tokens // (self.seq_len + 1)
+        shard = shards[(i // per_shard) % len(shards)]
+        off = (i % per_shard) * (self.seq_len + 1)
+        return synthetic_shard_tokens(shard, self.seq_len + 1,
+                                      self.vocab_size, offset=off)
+
+    def next_batch(self) -> dict[str, np.ndarray]:
+        seqs = [self._sequence(self.cursor + j) for j in range(self.batch)]
+        self.cursor += self.batch
+        arr = np.stack(seqs)
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+    def __iter__(self):
+        while True:
+            yield self.next_batch()

@@ -1,0 +1,280 @@
+"""Pallas TPU kernel: batched MementoHash lookup (paper Alg. 4).
+
+The hot spot the paper optimizes is the *lookup*: the data plane routes
+millions of keys (tokens→data-shards, sessions→replicas, ckpt-keys→hosts)
+per step.  On TPU we express this as a block-parallel kernel:
+
+  * grid over key blocks of ``(BLOCK_ROWS, 128)`` uint32 keys (VMEM),
+  * the replacement table resident in VMEM for every program — either the
+    **dense** int32 image (``repl[b] = c | -1``, Θ(n) bytes) or the
+    **compact** open-addressing image (Θ(r) bytes, beyond-paper, for
+    r ≪ n clusters where the dense table would not fit VMEM),
+  * lane-synchronous bounded while-loops: every lane follows its own
+    replacement chain; a block settles in max-over-lanes sweeps which the
+    paper bounds by E[τ],E[σ] ≤ ln(n/w) (Props. VII.1-3).
+
+TPU adaptation notes (DESIGN.md §3): JumpHash's 64-bit LCG is replaced by a
+murmur3-mixed (key, step) variate quantized to 24 bits so every divide is an
+exact f32 op; the replacement "hash table" becomes vector gathers.  Chain
+following is a gather off the same table — no pointer chasing.
+
+Validated in ``interpret=True`` mode on CPU against ``ref.py`` (the pure-jnp
+oracle, itself bit-identical to the numpy host plane).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_U = jnp.uint32
+_GOLDEN32 = 0x9E3779B1
+_C1 = 0x85EBCA6B
+_C2 = 0xC2B2AE35
+
+DEFAULT_BLOCK_ROWS = 8  # (8, 128) keys per program = 1024 lookups
+
+
+def _fmix32(h):
+    h ^= h >> _U(16)
+    h = h * _U(_C1)
+    h ^= h >> _U(13)
+    h = h * _U(_C2)
+    h ^= h >> _U(16)
+    return h
+
+
+def _hash2(keys, seed):
+    s = _fmix32(seed.astype(_U) * _U(_GOLDEN32) + _U(1))
+    return _fmix32(keys ^ s)
+
+
+def _jump32(keys, n):
+    """Vectorized jump over a 2-D key block; n is a dynamic int32 scalar."""
+    nf = n.astype(jnp.float32)
+    b0 = jnp.zeros(keys.shape, jnp.int32)
+    j0 = jnp.zeros(keys.shape, jnp.float32)
+
+    def cond(state):
+        _, j, _ = state
+        return jnp.any(j < nf)
+
+    def body(state):
+        b, j, i = state
+        active = j < nf
+        b = jnp.where(active, j.astype(jnp.int32), b)
+        h = _fmix32(keys ^ (i.astype(_U) * _U(_GOLDEN32) + _U(0x2545F491)))
+        r = ((h >> _U(8)).astype(jnp.float32) + 1.0) * jnp.float32(2.0 ** -24)
+        jn = jnp.minimum(jnp.floor((b.astype(jnp.float32) + 1.0) / r), nf)
+        j = jnp.where(active, jn, j)
+        return b, j, i + jnp.int32(1)
+
+    b, _, _ = jax.lax.while_loop(cond, body, (b0, j0, jnp.int32(0)))
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Dense-table kernel
+# ---------------------------------------------------------------------------
+
+def _dense_kernel(n_ref, keys_ref, repl_ref, out_ref):
+    n = n_ref[0]
+    keys = keys_ref[...].astype(_U)
+    repl = repl_ref[...].reshape(-1)  # (cap,) int32, -1 = working
+
+    def gather(idx):
+        return jnp.take(repl, idx.reshape(-1), axis=0).reshape(idx.shape)
+
+    b = _jump32(keys, n)
+
+    def outer_cond(b):
+        return jnp.any(gather(b) >= 0)
+
+    def outer_body(b):
+        c = gather(b)
+        active = c >= 0
+        wb = jnp.where(active, c, 1)  # |W_b| after b was removed (Prop. V.3)
+        d = (_hash2(keys, b) % wb.astype(_U)).astype(jnp.int32)
+
+        def inner_cond(d):
+            u = gather(d)
+            return jnp.any(active & (u >= 0) & (u >= wb))
+
+        def inner_body(d):
+            u = gather(d)
+            follow = active & (u >= 0) & (u >= wb)  # follow only while u ≥ w_b
+            return jnp.where(follow, u, d)
+
+        d = jax.lax.while_loop(inner_cond, inner_body, d)
+        return jnp.where(active, d, b)
+
+    out_ref[...] = jax.lax.while_loop(outer_cond, outer_body, b)
+
+
+# ---------------------------------------------------------------------------
+# Compact-table kernel (beyond-paper): Θ(r) VMEM open-addressing image
+# ---------------------------------------------------------------------------
+
+def _compact_kernel(n_ref, keys_ref, slot_b_ref, slot_c_ref, out_ref):
+    n = n_ref[0]
+    keys = keys_ref[...].astype(_U)
+    slot_b = slot_b_ref[...].reshape(-1)  # removed bucket id per slot, -1 empty
+    slot_c = slot_c_ref[...].reshape(-1)  # its replacement c
+    nslots = slot_b.shape[0]  # power of two
+    mask = _U(nslots - 1)
+
+    def probe(idx):
+        """repl[idx] via linear probing: returns c or -1 (working)."""
+        h0 = (_fmix32(idx.astype(_U) * _U(_GOLDEN32) + _U(5)) & mask).astype(jnp.int32)
+
+        def gather(arr, i):
+            return jnp.take(arr, i.reshape(-1), axis=0).reshape(i.shape)
+
+        def cond(state):
+            pos, done, _ = state
+            return jnp.any(~done)
+
+        def body(state):
+            pos, done, val = state
+            sb = gather(slot_b, pos)
+            hit = sb == idx
+            empty = sb < 0
+            val = jnp.where(~done & hit, gather(slot_c, pos), val)
+            done = done | hit | empty
+            pos = jnp.where(done, pos, (pos + 1) % nslots)
+            return pos, done, val
+
+        val0 = jnp.full(idx.shape, -1, jnp.int32)
+        done0 = jnp.zeros(idx.shape, jnp.bool_)
+        _, _, val = jax.lax.while_loop(cond, body, (h0, done0, val0))
+        return val
+
+    b = _jump32(keys, n)
+
+    def outer_cond(b):
+        return jnp.any(probe(b) >= 0)
+
+    def outer_body(b):
+        c = probe(b)
+        active = c >= 0
+        wb = jnp.where(active, c, 1)
+        d = (_hash2(keys, b) % wb.astype(_U)).astype(jnp.int32)
+
+        def inner_cond(d):
+            u = probe(d)
+            return jnp.any(active & (u >= 0) & (u >= wb))
+
+        def inner_body(d):
+            u = probe(d)
+            follow = active & (u >= 0) & (u >= wb)
+            return jnp.where(follow, u, d)
+
+        d = jax.lax.while_loop(inner_cond, inner_body, d)
+        return jnp.where(active, d, b)
+
+    out_ref[...] = jax.lax.while_loop(outer_cond, outer_body, b)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders
+# ---------------------------------------------------------------------------
+
+def _pad_rows(x, cols=128):
+    k = x.shape[0]
+    rows = max(1, -(-k // cols))
+    padded = jnp.zeros((rows * cols,), x.dtype).at[:k].set(x)
+    return padded.reshape(rows, cols), k
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def dense_lookup(keys, repl, n, *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """Batched lookup with the dense Θ(n)-int32 table in VMEM."""
+    keys2d, k = _pad_rows(keys.astype(_U))
+    rows = keys2d.shape[0]
+    block_rows = min(block_rows, rows)
+    grid = (-(-rows // block_rows),)
+    cap = repl.shape[0]
+    repl2d = repl.reshape(-1, 128) if cap % 128 == 0 else repl.reshape(cap, 1)
+
+    out = pl.pallas_call(
+        _dense_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_rows, 128), lambda i, n_s: (i, 0)),
+                pl.BlockSpec(repl2d.shape, lambda i, n_s: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_rows, 128), lambda i, n_s: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(keys2d.shape, jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray([n], jnp.int32), keys2d, repl2d)
+    return out.reshape(-1)[:k]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def compact_lookup(keys, slot_b, slot_c, n, *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """Batched lookup with the Θ(r) open-addressing table in VMEM."""
+    keys2d, k = _pad_rows(keys.astype(_U))
+    rows = keys2d.shape[0]
+    block_rows = min(block_rows, rows)
+    grid = (-(-rows // block_rows),)
+    nslots = slot_b.shape[0]
+    shape2d = (-(-nslots // 128), 128) if nslots % 128 == 0 else (nslots, 1)
+    sb2d, sc2d = slot_b.reshape(shape2d), slot_c.reshape(shape2d)
+
+    out = pl.pallas_call(
+        _compact_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_rows, 128), lambda i, n_s: (i, 0)),
+                pl.BlockSpec(shape2d, lambda i, n_s: (0, 0)),
+                pl.BlockSpec(shape2d, lambda i, n_s: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_rows, 128), lambda i, n_s: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(keys2d.shape, jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray([n], jnp.int32), keys2d, sb2d, sc2d)
+    return out.reshape(-1)[:k]
+
+
+def build_compact_table(repl) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Host-side: dense repl image → open-addressing (slot_b, slot_c) arrays.
+
+    Slots = next power of two ≥ max(2r, 128) → load factor ≤ 0.5, so the
+    expected probe chain is ~1.5 and the VMEM working set is Θ(r).
+    """
+    import numpy as np
+
+    removed = np.nonzero(np.asarray(repl) >= 0)[0]
+    r = len(removed)
+    nslots = 128
+    while nslots < 2 * max(r, 1):
+        nslots *= 2
+    slot_b = np.full((nslots,), -1, np.int32)
+    slot_c = np.full((nslots,), -1, np.int32)
+    mask = nslots - 1
+    for b in removed:
+        h = int(_host_fmix32(int(b) * _GOLDEN32 + 5) & mask)
+        while slot_b[h] >= 0:
+            h = (h + 1) & mask
+        slot_b[h] = b
+        slot_c[h] = int(repl[b])
+    return jnp.asarray(slot_b), jnp.asarray(slot_c)
+
+
+def _host_fmix32(h: int) -> int:
+    h &= 0xFFFFFFFF
+    h ^= h >> 16
+    h = (h * _C1) & 0xFFFFFFFF
+    h ^= h >> 13
+    h = (h * _C2) & 0xFFFFFFFF
+    h ^= h >> 16
+    return h

@@ -1,0 +1,44 @@
+"""Jitted public wrappers around the Pallas lookup kernels.
+
+``memento_lookup`` picks the execution path:
+
+  * ``table='dense'``   — Θ(n) int32 VMEM image (default; n ≤ ~3M fits VMEM),
+  * ``table='compact'`` — Θ(r) open-addressing VMEM image (beyond-paper,
+    for huge b-arrays with few removals),
+  * ``table='jnp'``     — pure-jnp fallback (no Pallas; any backend).
+
+On non-TPU backends the kernels run in interpret mode (the brief's validation
+path); on TPU they compile via Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_lookup import memento_lookup as _jnp_lookup
+from . import memento_lookup as _k
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def memento_lookup(keys, repl, n, *, table: str = "dense", interpret: bool | None = None):
+    """Batched Alg. 4 lookup: keys uint32 [K] → working bucket ids int32 [K]."""
+    keys = jnp.asarray(keys, dtype=jnp.uint32)
+    repl = jnp.asarray(repl, dtype=jnp.int32)
+    if interpret is None:
+        interpret = _default_interpret()
+    if table == "jnp":
+        return _jnp_lookup(keys, repl, n)
+    if table == "dense":
+        return _k.dense_lookup(keys, repl, n, interpret=interpret)
+    if table == "compact":
+        slot_b, slot_c = _k.build_compact_table(repl)
+        return _k.compact_lookup(keys, slot_b, slot_c, n, interpret=interpret)
+    raise ValueError(f"unknown table kind {table!r}")
+
+
+def lookup_from_tables(keys, tables, **kw):
+    """Route against a host :class:`repro.core.MementoTables`."""
+    return memento_lookup(keys, tables.repl, tables.n, **kw)

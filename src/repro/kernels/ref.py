@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the Pallas lookup kernels.
+
+The reference implementation lives in :mod:`repro.core.jax_lookup` (it is
+also the production CPU fallback); re-exported here so kernel tests read
+naturally as ``kernel(...) == ref(...)``.  A numpy scalar oracle via the
+host `MementoHash` is provided for end-to-end cross-plane checks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.jax_lookup import jump32 as jump32_ref  # noqa: F401
+from repro.core.jax_lookup import memento_lookup as memento_lookup_ref  # noqa: F401
+
+
+def memento_lookup_host(keys: np.ndarray, memento) -> np.ndarray:
+    """Scalar host-plane oracle (paper Alg. 4 via the Θ(r) dict)."""
+    return np.asarray([memento.lookup(int(k)) for k in np.asarray(keys)], dtype=np.int32)

@@ -1,0 +1,369 @@
+"""Trip-weighted analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts the module *statically*: a collective or
+dot inside a ``lax.scan``/``while`` body is counted once even though it runs
+trip-count times — useless for scan-over-layers models.  This module parses
+the optimized HLO into its computation graph and weights every instruction by
+the product of enclosing while-loop trip counts (recovered as the largest
+integer constant in the loop-condition computation — the induction bound of
+``i < N``; validated against models with known period counts).
+
+Per instruction we account:
+
+* **collectives** (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute): operand bytes (per-device data injected into the
+  interconnect — shapes in the partitioned module are per-device) plus a
+  ring-model estimate:
+      all-gather:         (g−1) · operand
+      reduce-scatter:     (g−1)/g · operand
+      all-reduce:         2·(g−1)/g · operand
+      all-to-all:         (g−1)/g · operand
+      collective-permute: operand
+  with `metadata op_name` kept for attribution.
+
+* **dot FLOPs**: 2 · prod(result dims) · prod(lhs contracting dims) — inside
+  fusions too (kOutput fusions execute their dots).
+
+* **memory traffic**: operand + result bytes of top-level instructions
+  (fusion internals excluded — a fusion's traffic is its boundary), skipping
+  no-cost ops (parameter/constant/tuple/get-tuple-element/bitcast).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+_NO_COST = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            "after-all", "domain", "partition-id", "replica-id", "iota"}
+_COLL_KINDS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-gather-start", "all-reduce-start",
+               "reduce-scatter-start", "collective-permute-start"}
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_args(args_rest: str) -> tuple[str, str]:
+    """Split 'a, b), attr=..., metadata=...' into (operands, rest)."""
+    depth = 0
+    for i, ch in enumerate(args_rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                return args_rest[:i], args_rest[i + 1:]
+            depth -= 1
+    return args_rest, ""
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    operands: list[str]
+    rest: str
+    line: str
+
+
+@dataclass
+class Collective:
+    kind: str
+    operand_bytes: float
+    result_bytes: int
+    group_size: int
+    weight: float = 1.0
+    op_name: str = ""
+
+    @property
+    def ring_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        if self.kind == "all-gather":
+            per = (g - 1) * self.operand_bytes
+        elif self.kind == "all-reduce":
+            per = 2.0 * (g - 1) / g * self.operand_bytes
+        elif self.kind in ("reduce-scatter", "all-to-all"):
+            per = (g - 1) / g * self.operand_bytes
+        else:
+            per = float(self.operand_bytes)
+        return per * self.weight
+
+    @property
+    def weighted_operand_bytes(self) -> float:
+        return self.operand_bytes * self.weight
+
+
+@dataclass
+class _Computation:
+    name: str
+    is_entry: bool = False
+    instrs: list[Instr] = field(default_factory=list)
+    defs: dict[str, str] = field(default_factory=dict)  # name → result type
+
+
+def _parse(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for line in text.splitlines():
+        h = _COMP_HEAD_RE.match(line)
+        if h:
+            cur = _Computation(h.group(1), is_entry=line.startswith("ENTRY"))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_type, opcode, args_rest = m.groups()
+        operands_str, rest = _split_args(args_rest)
+        operands = [o.strip() for o in operands_str.split(",") if o.strip()]
+        ins = Instr(name, opcode, result_type, operands, rest, line)
+        cur.instrs.append(ins)
+        cur.defs[name] = result_type
+    return comps
+
+
+class HloAnalysis:
+    def __init__(self, text: str):
+        self.comps = _parse(text)
+        self._global_defs: dict[str, str] = {}
+        for c in self.comps.values():
+            for k, v in c.defs.items():
+                self._global_defs.setdefault(k, v)
+        self._fused: set[str] = set()
+        self._trips: dict[str, int] = {}
+        self._entry = None
+        for c in self.comps.values():
+            if c.is_entry:
+                self._entry = c
+            for ins in c.instrs:
+                if ins.opcode == "fusion":
+                    m = _CALLS_RE.search(ins.rest)
+                    if m:
+                        self._fused.add(m.group(1))
+                for m in _TO_APPLY_RE.finditer(ins.rest):
+                    self._fused.add(m.group(1))  # reducers: no independent cost
+        if self._entry is None and self.comps:
+            self._entry = list(self.comps.values())[-1]
+
+        self.collectives: list[Collective] = []
+        self.flops = 0.0
+        self.traffic_bytes = 0.0
+        self._visit_counts: dict[str, float] = {}
+        if self._entry is not None:
+            self._visit(self._entry, 1.0, frozenset(), top_level=True)
+
+    # -- helpers -----------------------------------------------------------
+    def _operand_type(self, comp: _Computation, op: str) -> str:
+        if "[" in op:
+            return op
+        name = op.split(" ")[-1].lstrip("%")
+        return comp.defs.get(name) or self._global_defs.get(name, "")
+
+    def _trip_count(self, cond_name: str) -> int:
+        if cond_name in self._trips:
+            return self._trips[cond_name]
+        comp = self.comps.get(cond_name)
+        n = 1
+        if comp is not None:
+            consts = [int(c) for ins in comp.instrs
+                      for c in _CONST_RE.findall(ins.line)]
+            n = max(consts) if consts else 1
+        self._trips[cond_name] = n
+        return n
+
+    def _dot_flops(self, comp: _Computation, ins: Instr) -> float:
+        res_dims = _shape_dims(ins.result_type)
+        out_elems = 1
+        for _, dims in res_dims[:1]:
+            for d in dims:
+                out_elems *= d
+        k = 1
+        m = _LHS_CONTRACT_RE.search(ins.rest)
+        if m and ins.operands:
+            lhs_type = self._operand_type(comp, ins.operands[0])
+            lhs_dims = _shape_dims(lhs_type)
+            if lhs_dims:
+                dims = lhs_dims[0][1]
+                for idx_s in m.group(1).split(","):
+                    if idx_s:
+                        idx = int(idx_s)
+                        if idx < len(dims):
+                            k *= dims[idx]
+        return 2.0 * out_elems * k
+
+    def _sliced_bytes(self, type_str: str, body_trip: int) -> int:
+        """Bytes moved for one loop iteration: scan-stacked buffers (leading
+        dim == the enclosing body's trip count) are aliased in place — only
+        one slice moves per iteration, not the whole stack."""
+        total = 0
+        for dtype, dims in _shape_dims(type_str):
+            n = 1
+            for d in dims:
+                n *= d
+            if body_trip > 1 and dims and dims[0] == body_trip:
+                n //= body_trip
+            total += n * _DTYPE_BYTES[dtype]
+        return total
+
+    # -- traversal -----------------------------------------------------------
+    def _visit(self, comp: _Computation, weight: float, stack: frozenset,
+               top_level: bool, body_trip: int = 0):
+        if comp.name in stack:
+            return
+        self._visit_counts[comp.name] = self._visit_counts.get(comp.name, 0.0) + weight
+        for ins in comp.instrs:
+            opc = ins.opcode
+            if opc in _COLL_KINDS:
+                kind = opc.replace("-start", "")
+                ob = sum(_shape_bytes(self._operand_type(comp, o))
+                         for o in ins.operands)
+                rb = _shape_bytes(ins.result_type)
+                if ob == 0:
+                    ob = rb
+                gs = 0
+                g = _GROUPS_BRACE_RE.search(ins.line)
+                if g:
+                    gs = len([x for x in g.group(1).split(",") if x.strip()])
+                else:
+                    g2 = _GROUPS_IOTA_RE.search(ins.line)
+                    if g2:
+                        gs = int(g2.group(2))
+                op_name = ""
+                mo = _OPNAME_RE.search(ins.line)
+                if mo:
+                    op_name = mo.group(1)
+                self.collectives.append(
+                    Collective(kind, ob, rb, gs, weight, op_name))
+                self.traffic_bytes += weight * (ob + rb)
+                continue
+            if opc == "dot":
+                self.flops += weight * self._dot_flops(comp, ins)
+            if opc == "fusion":
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    callee = self.comps.get(m.group(1))
+                    if callee is not None:
+                        # fusions: dots inside execute per call; traffic is
+                        # the fusion boundary (counted below).
+                        self._visit_flops_only(callee, weight, stack)
+            if opc == "while":
+                m = _WHILE_ATTR_RE.search(ins.rest)
+                if m:
+                    trips = self._trip_count(m.group(1))
+                    body = self.comps.get(m.group(2))
+                    if body is not None:
+                        self._visit(body, weight * trips,
+                                    stack | {comp.name}, top_level=True,
+                                    body_trip=trips)
+            if opc in ("call", "async-start"):
+                m = _TO_APPLY_RE.search(ins.rest) or _CALLS_RE.search(ins.rest)
+                if m:
+                    callee = self.comps.get(m.group(1))
+                    if callee is not None:
+                        self._visit(callee, weight, stack | {comp.name},
+                                    top_level=True)
+            if opc == "conditional":
+                for m in re.finditer(r"%([\w.\-]+)", ins.rest):
+                    callee = self.comps.get(m.group(1))
+                    if callee is not None:
+                        self._visit(callee, weight, stack | {comp.name},
+                                    top_level=True)
+            if top_level and opc not in _NO_COST:
+                rb = self._sliced_bytes(ins.result_type, body_trip)
+                if opc in ("dynamic-slice", "gather"):
+                    # only the sliced/gathered bytes move, not the operand
+                    self.traffic_bytes += weight * 2 * rb
+                elif opc == "dynamic-update-slice":
+                    upd = (self._sliced_bytes(self._operand_type(comp, ins.operands[1]), body_trip)
+                           if len(ins.operands) > 1 else rb)
+                    self.traffic_bytes += weight * 2 * upd
+                elif opc == "scatter":
+                    upd = (self._sliced_bytes(self._operand_type(comp, ins.operands[2]), body_trip)
+                           if len(ins.operands) > 2 else rb)
+                    self.traffic_bytes += weight * 2 * upd
+                else:
+                    ob = sum(self._sliced_bytes(self._operand_type(comp, o), body_trip)
+                             for o in ins.operands)
+                    self.traffic_bytes += weight * (ob + rb)
+
+    def _visit_flops_only(self, comp: _Computation, weight: float, stack: frozenset):
+        if comp.name in stack:
+            return
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                self.flops += weight * self._dot_flops(comp, ins)
+            if ins.opcode == "fusion":
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    callee = self.comps.get(m.group(1))
+                    if callee is not None:
+                        self._visit_flops_only(callee, weight, stack | {comp.name})
+
+
+def analyze(hlo_text: str) -> "HloAnalysis":
+    return HloAnalysis(hlo_text)
+
+
+def parse_collectives(hlo_text: str) -> list[Collective]:
+    return HloAnalysis(hlo_text).collectives
+
+
+def collective_summary(hlo_text: str, analysis: HloAnalysis | None = None) -> dict:
+    a = analysis or HloAnalysis(hlo_text)
+    colls = a.collectives
+    by_kind: dict[str, dict] = {}
+    for c in colls:
+        d = by_kind.setdefault(c.kind, {"count": 0.0, "operand_bytes": 0.0,
+                                        "ring_bytes": 0.0})
+        d["count"] += c.weight
+        d["operand_bytes"] += c.weighted_operand_bytes
+        d["ring_bytes"] += c.ring_bytes
+    by_op: dict[str, float] = {}
+    for c in colls:
+        key = "/".join(c.op_name.split("/")[-3:])[-100:] if c.op_name else "?"
+        by_op[key] = by_op.get(key, 0.0) + c.ring_bytes
+    top_ops = dict(sorted(by_op.items(), key=lambda kv: -kv[1])[:12])
+    return {
+        "total_operand_bytes": sum(c.weighted_operand_bytes for c in colls),
+        "total_ring_bytes": sum(c.ring_bytes for c in colls),
+        "count": sum(c.weight for c in colls),
+        "static_count": len(colls),
+        "by_kind": by_kind,
+        "top_ring_bytes_by_op": top_ops,
+    }

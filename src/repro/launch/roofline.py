@@ -1,0 +1,63 @@
+"""Roofline terms from a dry-run record (TPU v5e targets).
+
+    t_compute    = HLO_FLOPs_per_dev / 197e12        (bf16 MXU peak)
+    t_memory     = HLO_bytes_per_dev / 819e9         (HBM bandwidth)
+    t_collective = collective_bytes_per_dev / 50e9   (per-link ICI)
+
+`MODEL_FLOPS` = 6·N_active·D for training (N = active params, D = tokens) or
+2·N_active·D for serving; the ratio against total HLO FLOPs exposes
+remat/padding/dispatch waste (brief §Roofline).
+"""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+
+def model_flops(cfg, shp) -> float:
+    """Global useful FLOPs for the step (6ND train / 2ND serve)."""
+    n_active = cfg.active_param_count()
+    if shp.kind == "train":
+        tokens = shp.global_batch * shp.seq_len
+        return 6.0 * n_active * tokens
+    if shp.kind == "prefill":
+        tokens = shp.global_batch * shp.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shp.global_batch * 1  # decode: one new token per sequence
+    return 2.0 * n_active * tokens
+
+
+def roofline_record(cfg, shp, record: dict) -> dict:
+    chips = record["chips"]
+    flops_dev = record["cost_analysis"]["flops_per_device"]
+    bytes_dev = record["cost_analysis"]["bytes_accessed_per_device"]
+    coll_naive = record["collectives"]["total_operand_bytes"]
+    coll_ring = record["collectives"]["total_ring_bytes"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll_naive = coll_naive / ICI_BW
+    t_coll_ring = coll_ring / ICI_BW
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll_ring}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shp)
+    hlo_total = flops_dev * chips
+    useful_ratio = mf / hlo_total if hlo_total else 0.0
+    # step time ≈ max(terms) (perfect overlap); roofline fraction = share of
+    # the step spent doing useful model math at peak.
+    t_step = max(terms.values()) if terms else 0.0
+    t_useful = mf / (chips * PEAK_FLOPS)
+    return {
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective_naive": t_coll_naive,
+        "t_collective_ring": t_coll_ring,
+        "bottleneck": bottleneck,
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_total,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": (t_useful / t_step) if t_step else 0.0,
+    }

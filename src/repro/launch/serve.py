@@ -1,0 +1,25 @@
+"""Serving launcher: replica fleet + Memento session router.
+
+Thin CLI over the end-to-end driver in ``examples/serve_cluster.py`` —
+spins up R replicas of a (smoke) model, routes batched requests with the
+Memento session router, optionally kills a replica mid-run, and reports
+throughput + cache-affinity/minimal-disruption accounting.
+
+    PYTHONPATH=src python -m repro.launch.serve --replicas 4 --sessions 24 \
+        --rounds 6 --fail-at 3 [--cache-dtype int8]
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[3] / "examples"))
+
+
+def main(argv=None):
+    from serve_cluster import main as drive
+    return drive(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,303 @@
+"""GQA/MQA attention: chunked (flash-style) training path + KV-cache decode.
+
+Distribution (DESIGN.md §5): query heads are padded to ``cfg.padded_heads``
+(a multiple of the TP degree), and explicit sharding constraints steer GSPMD
+into one of three collective-free score layouts:
+
+  * ``kv``    — KV-head dim divides TP: shard q/k/v on KV heads.
+  * ``group`` — q-per-kv group divides TP (MQA-style): shard q on the group
+                dim, replicate the (tiny) k/v.
+  * ``flat``  — neither divides (e.g. 8 kv × 6 groups on TP=16): expand k/v
+                to flat padded heads (a *local* slice under the constraint —
+                each shard materializes only its own heads) and shard the
+                flat head dim.
+
+Without these constraints GSPMD shards the QK contraction over head_dim and
+all-reduces the (chunk × S) score matrices every layer — measured 540 GiB of
+ring traffic per step on gemma-2b train_4k (EXPERIMENTS.md §Perf, iteration 0).
+
+Decode uses ``kv`` when it divides, else leaves heads replicated and shards
+the cache's sequence dim (rules: ``seq_kv → model``); GSPMD then executes a
+flash-decode-style partial-softmax combine with only scalar-sized psums.
+
+The training/prefill path scans over query chunks so scores never materialize
+at (S × S); sliding-window ("local") layers slice K/V to the window.  Decode
+keeps a (B, KV, S_max, hd) cache for global layers and a ring buffer of
+``window`` slots for local layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard_constraint
+from .common import PSpec, rope
+
+NEG_INF = -1e30
+
+
+def attn_desc(cfg) -> dict:
+    D, Hp, KV, hd = cfg.d_model, cfg.padded_heads, cfg.padded_kv_heads, cfg.head_dim
+    d = {
+        "wq": PSpec((D, Hp, hd), ("fsdp", "heads", None)),
+        "wk": PSpec((D, KV, hd), ("fsdp", "kv_heads", None)),
+        "wv": PSpec((D, KV, hd), ("fsdp", "kv_heads", None)),
+        "wo": PSpec((Hp, hd, D), ("heads", None, "fsdp")),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = PSpec((Hp, hd), ("heads", None), init="zeros")
+        d["bk"] = PSpec((KV, hd), ("kv_heads", None), init="zeros")
+        d["bv"] = PSpec((KV, hd), ("kv_heads", None), init="zeros")
+    return d
+
+
+def _tp_degree(rules) -> int:
+    if rules is None:
+        return 1
+    size = 1
+    for a in rules.rules.get("heads", ()):
+        size *= rules.mesh_axis_sizes.get(a, 1)
+    return size
+
+
+def head_mode(cfg, rules) -> str:
+    tp = _tp_degree(rules)
+    if tp <= 1:
+        return "kv"
+    if cfg.padded_kv_heads % tp == 0:
+        return "kv"
+    if cfg.q_per_kv % tp == 0:
+        return "group"
+    return "flat"  # padded_heads % tp == 0 by construction
+
+
+def _qkv(cfg, p, x, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scores_softmax_combine(cfg, q, k, v, qpos, kpos, window):
+    """q (B,C,KV,G,hd) vs k/v (B,T,KV,hd) with causal+window mask → (B,C,KV,G,hd)."""
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q, k).astype(jnp.float32) * scale
+    mask = kpos[..., None, :] <= qpos[..., :, None]           # causal
+    if window is not None:
+        mask &= (qpos[..., :, None] - kpos[..., None, :]) < window
+    mask &= kpos[..., None, :] >= 0                           # padding slots
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqt,btkh->bqkgh", a, v)
+
+
+def attn_apply(cfg, p, x, positions, *, window=None, chunk=None, rules=None):
+    """Training attention. x (B,S,D), positions (B,S) int32."""
+    q, k, v = _qkv(cfg, p, x, positions)
+    out = _attention(cfg, q, k, v, positions, window=window, chunk=chunk,
+                     rules=rules)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard_constraint(y, ("batch", None, None), rules) if rules else y
+
+
+def _attention(cfg, q, k, v, positions, *, window=None, chunk=None, rules=None):
+    """Chunked causal attention core. q (B,S,Hp,hd), k/v (B,S,KV,hd)
+    → (B,S,Hp,hd)."""
+    B, S = q.shape[:2]
+    KV, G, Hp = cfg.padded_kv_heads, cfg.q_per_kv, cfg.padded_heads
+    mode = head_mode(cfg, rules)
+
+    if mode == "flat":
+        # Stage unexpanded k/v seq-sharded (window-free layers): the forward
+        # pays a small bf16 all-gather; the backward reduce-scatters dk/dv at
+        # the UNEXPANDED size.  Expanding from replicated k/v instead makes
+        # the backward all-reduce the G×-expanded f32 cotangent (measured
+        # 318 GiB on phi3.5 train_4k — §Perf iteration 2).
+        if rules is not None and window is None and getattr(rules, "kv_seq_stage", False):
+            k = shard_constraint(k, ("batch", "seq_kv", None, None), rules)
+            v = shard_constraint(v, ("batch", "seq_kv", None, None), rules)
+        # expand to flat padded heads; under the head-sharding constraint
+        # each device then slices only its own heads.
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        from jax.ad_checkpoint import checkpoint_name
+        k = checkpoint_name(k, "kv_flat")
+        v = checkpoint_name(v, "kv_flat")
+        KV, G = Hp, 1
+        ax = ("batch", None, "heads", None, None)
+        kv_ax = ("batch", None, "heads", None)
+    elif mode == "kv":
+        ax = ("batch", None, "kv_heads", None, None)
+        kv_ax = ("batch", None, "kv_heads", None)
+    else:  # group
+        ax = ("batch", None, None, "heads", None)
+        kv_ax = ("batch", None, None, None)
+
+    q = q.reshape(B, S, KV, G, cfg.head_dim)
+    if rules is not None:
+        q = shard_constraint(q, ax, rules)
+        k = shard_constraint(k, kv_ax, rules)
+        v = shard_constraint(v, kv_ax, rules)
+
+    chunk = min(chunk or 512, S)
+    n_chunks = -(-S // chunk)
+    assert S % chunk == 0, (S, chunk)
+
+    if window is not None and window < S:
+        # Pad K/V in front by `window` so each query chunk sees a static slice.
+        pad = ((0, 0), (window, 0), (0, 0), (0, 0))
+        kp = jnp.pad(k, pad)
+        vp = jnp.pad(v, pad)
+        kposp = jnp.pad(positions, ((0, 0), (window, 0)), constant_values=-1)
+
+        def body(_, qc_idx):
+            q0 = qc_idx * chunk
+            qc = jax.lax.dynamic_slice_in_dim(q, q0, chunk, axis=1)
+            qp = jax.lax.dynamic_slice_in_dim(positions, q0, chunk, axis=1)
+            ks = jax.lax.dynamic_slice_in_dim(kp, q0, window + chunk, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, q0, window + chunk, axis=1)
+            kps = jax.lax.dynamic_slice_in_dim(kposp, q0, window + chunk, axis=1)
+            o = _scores_softmax_combine(cfg, qc, ks, vs, qp, kps, window)
+            return None, o
+    else:
+        def body(_, qc_idx):
+            q0 = qc_idx * chunk
+            qc = jax.lax.dynamic_slice_in_dim(q, q0, chunk, axis=1)
+            qp = jax.lax.dynamic_slice_in_dim(positions, q0, chunk, axis=1)
+            o = _scores_softmax_combine(cfg, qc, k, v, qp, positions, window)
+            return None, o
+
+    if n_chunks == 1:
+        _, out = body(None, jnp.int32(0))
+        out = out[None]
+    else:
+        _, out = jax.lax.scan(body, None, jnp.arange(n_chunks, dtype=jnp.int32))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, Hp, cfg.head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: attention + KV-cache construction (qkv computed once)
+# ---------------------------------------------------------------------------
+
+def attn_prefill(cfg, p, x, positions, max_len, *, window=None, chunk=None,
+                 rules=None, cache_dtype: str = "bfloat16"):
+    """Returns (cache, y). Global layers fill slots [0,S); local layers fill
+    the ring buffer with the last `window` keys at slot = pos % window."""
+    B, S, _ = x.shape
+    KV, hd = cfg.padded_kv_heads, cfg.head_dim
+    q, k, v = _qkv(cfg, p, x, positions)
+    out = _attention(cfg, q, k, v, positions, window=window, chunk=chunk,
+                     rules=rules)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+    kc = k.transpose(0, 2, 1, 3)  # (B,KV,S,hd)
+    vc = v.transpose(0, 2, 1, 3)
+    if window and window < max_len:
+        W = window
+        lastk, lastv = kc[:, :, -W:], vc[:, :, -W:]
+        lastpos = positions[0, -W:]          # same positions across batch
+        slots = lastpos % W
+        ck = jnp.zeros((B, KV, W, hd), k.dtype).at[:, :, slots].set(lastk)
+        cv = jnp.zeros((B, KV, W, hd), v.dtype).at[:, :, slots].set(lastv)
+    else:
+        T = max_len
+        ck = jnp.zeros((B, KV, T, hd), k.dtype).at[:, :, :S].set(kc)
+        cv = jnp.zeros((B, KV, T, hd), v.dtype).at[:, :, :S].set(vc)
+    if rules is not None:
+        ck = shard_constraint(ck, ("batch", "kv_heads", "seq_kv", None), rules)
+        cv = shard_constraint(cv, ("batch", "kv_heads", "seq_kv", None), rules)
+    if cache_dtype == "int8":
+        kq, ks = _quantize(ck)
+        vq, vs = _quantize(cv)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}, y
+    return {"k": ck, "v": cv}, y
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+def cache_desc(cfg, batch: int, max_len: int, *, window=None,
+               cache_dtype: str = "bfloat16") -> dict:
+    T = min(max_len, window) if window else max_len
+    KV, hd = cfg.padded_kv_heads, cfg.head_dim
+    kv_ax = ("batch", "kv_heads", "seq_kv", None)
+    if cache_dtype == "int8":
+        # per-(position, head) symmetric quantization; bf16 scales — halves
+        # true cache-read bandwidth vs bf16 (EXPERIMENTS.md §Perf, decode)
+        return {
+            "k": PSpec((batch, KV, T, hd), kv_ax, init="zeros", dtype="int8"),
+            "v": PSpec((batch, KV, T, hd), kv_ax, init="zeros", dtype="int8"),
+            "k_scale": PSpec((batch, KV, T), kv_ax[:3], init="zeros", dtype="bfloat16"),
+            "v_scale": PSpec((batch, KV, T), kv_ax[:3], init="zeros", dtype="bfloat16"),
+        }
+    return {
+        "k": PSpec((batch, KV, T, hd), kv_ax, init="zeros"),
+        "v": PSpec((batch, KV, T, hd), kv_ax, init="zeros"),
+    }
+
+
+def _quantize(x):
+    """x (..., hd) → (int8 values, bf16 scales (...,))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def attn_decode(cfg, p, cache, x, pos, *, window=None, rules=None):
+    """One-token decode. x (B,1,D); pos scalar int32; returns (cache, y)."""
+    B = x.shape[0]
+    KV, G, hd = cfg.padded_kv_heads, cfg.q_per_kv, cfg.head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = q.reshape(B, 1, KV, G, hd)
+    if rules is not None:
+        # kv-sharded when KV divides TP (rule order), else heads replicated
+        # and the cache's seq dim sharded → GSPMD flash-decode combine.
+        q = shard_constraint(q, ("batch", None, "kv_heads", None, None), rules)
+
+    T = cache["k"].shape[2]
+    slot = pos % T  # identity while pos < T; ring wrap for window layers
+    quantized = "k_scale" in cache
+    kc, vc = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    new_cache = {}
+    if quantized:
+        kq, ks = _quantize(kc)
+        vq, vs = _quantize(vc)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=2)
+        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=2)
+        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot, axis=2)
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        ck_f = ck.astype(q.dtype) * cks.astype(q.dtype)[..., None]
+        cv_f = cv.astype(q.dtype) * cvs.astype(q.dtype)[..., None]
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, slot, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc, slot, axis=2)
+        new_cache = {"k": ck, "v": cv}
+        ck_f, cv_f = ck.astype(q.dtype), cv.astype(q.dtype)
+
+    # slot s holds absolute position pos − ((pos − s) mod T); < 0 ⇒ unwritten
+    slots = jnp.arange(T, dtype=jnp.int32)
+    kpos = pos - ((pos - slots) % T)
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window:
+        valid &= (pos - kpos) < window
+
+    scale = hd ** -0.5
+    s = jnp.einsum("bqkgh,bkth->bkgqt", q, ck_f).astype(jnp.float32) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqt,bkth->bqkgh", a, cv_f)
+    o = o.reshape(B, 1, KV * G, hd)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return new_cache, y

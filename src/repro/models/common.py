@@ -1,0 +1,106 @@
+"""Parameter-descriptor machinery for the pure-JAX model zoo.
+
+Each module declares its parameters as a pytree of :class:`PSpec` descriptors
+(shape + logical axis names + init).  From one descriptor tree we derive:
+
+  * random initialization          (``init_tree`` — smoke tests/examples),
+  * ShapeDtypeStructs              (``shape_tree`` — the dry-run, no alloc),
+  * PartitionSpecs                 (via ``repro.sharding.logical_to_spec``),
+  * stacked variants for scan-over-layers (``stack``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import AxisRules, logical_to_spec
+
+
+@dataclass(frozen=True)
+class PSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones
+    scale: float | None = None    # None → 1/sqrt(fan_in) with fan_in=shape[0]
+    dtype: str | None = None      # None → the tree-level default dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def stack(desc, n: int):
+    """Prefix every descriptor with a scan ('stack') dimension of size n."""
+    return jax.tree.map(
+        lambda p: replace(p, shape=(n, *p.shape), logical=("stack", *p.logical)),
+        desc, is_leaf=is_pspec)
+
+
+def init_tree(desc, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(desc, is_leaf=is_pspec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def one(p: PSpec, k):
+        dt = jnp.dtype(p.dtype) if p.dtype else dtype
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dt)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dt)
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else max(p.shape[-1], 1)
+        scale = p.scale if p.scale is not None else fan_in ** -0.5
+        return (jax.random.normal(k, p.shape, jnp.float32) * scale).astype(dt)
+
+    return jax.tree.unflatten(treedef, [one(p, k) for p, k in zip(leaves, keys)])
+
+
+def shape_tree(desc, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype) if p.dtype else dtype),
+        desc, is_leaf=is_pspec)
+
+
+def spec_tree(desc, rules: AxisRules):
+    return jax.tree.map(
+        lambda p: logical_to_spec(p.logical, rules, p.shape), desc, is_leaf=is_pspec)
+
+
+# ---------------------------------------------------------------------------
+# Small shared layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding over the last dim. x: (..., S, H, hd), positions (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {
+    "swiglu": jax.nn.silu,
+    "geglu": gelu,
+    "gelu": gelu,
+}

@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Training/prefill uses ``jax.lax.associative_scan`` over the gated linear
+recurrence h_t = a_t·h_{t−1} + b_t (log-depth, TPU-friendly); decode is an
+O(1) state update — the hybrid runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import PSpec, gelu
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def rglru_desc(cfg) -> dict:
+    D, W, CW = cfg.d_model, cfg.rnn_width, cfg.lru_conv_width
+    return {
+        "wx_in": PSpec((D, W), ("fsdp", "rnn_width")),
+        "wg_in": PSpec((D, W), ("fsdp", "rnn_width")),
+        "conv_w": PSpec((CW, W), (None, "rnn_width"), scale=CW ** -0.5),
+        "conv_b": PSpec((W,), ("rnn_width",), init="zeros"),
+        "wa": PSpec((W, W), ("rnn_width", None)),
+        "ba": PSpec((W,), (None,), init="zeros"),
+        "wi": PSpec((W, W), ("rnn_width", None)),
+        "bi": PSpec((W,), (None,), init="zeros"),
+        "lam": PSpec((W,), (None,), init="ones"),
+        "out": PSpec((W, D), ("rnn_width", "fsdp")),
+    }
+
+
+def _branches(cfg, p, x):
+    dt = x.dtype
+    xb = jnp.einsum("bld,dw->blw", x, p["wx_in"].astype(dt))
+    gate = jnp.einsum("bld,dw->blw", x, p["wg_in"].astype(dt))
+    return xb, gate
+
+
+def _conv(p, xb, CW, hist=None):
+    if hist is None:
+        padded = jnp.pad(xb, ((0, 0), (CW - 1, 0), (0, 0)))
+    else:
+        padded = jnp.concatenate([hist, xb], axis=1)
+    out = sum(
+        jax.lax.dynamic_slice_in_dim(padded, i, xb.shape[1], axis=1)
+        * p["conv_w"][i].astype(xb.dtype)
+        for i in range(CW)
+    )
+    return out + p["conv_b"].astype(xb.dtype)
+
+
+def _gates(p, xc):
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", xf, p["wa"].astype(jnp.float32))
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", xf, p["wi"].astype(jnp.float32))
+                       + p["bi"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_apply(cfg, p, x, *, return_cache: bool = False):
+    """x (B,L,D) → (B,L,D) via associative scan over the recurrence."""
+    dt = x.dtype
+    xb, gate = _branches(cfg, p, x)
+    xc = _conv(p, xb, cfg.lru_conv_width)
+    a, b = _gates(p, xc)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(dt) * gelu(gate))
+    y = jnp.einsum("blw,wd->bld", y, p["out"].astype(dt))
+    if return_cache:
+        CW = cfg.lru_conv_width
+        cache = {"conv": xb[:, x.shape[1] - (CW - 1):], "state": h[:, -1]}
+        return cache, y
+    return y
+
+
+def rglru_cache_desc(cfg, batch: int) -> dict:
+    W, CW = cfg.rnn_width, cfg.lru_conv_width
+    return {
+        "conv": PSpec((batch, CW - 1, W), ("batch", None, "rnn_width"), init="zeros"),
+        "state": PSpec((batch, W), ("batch", "rnn_width"), init="zeros"),
+    }
+
+
+def rglru_decode(cfg, p, cache, x, pos):
+    """One-token decode. x (B,1,D) → (cache, y)."""
+    del pos
+    dt = x.dtype
+    xb, gate = _branches(cfg, p, x)
+    hist = jnp.concatenate([cache["conv"], xb], axis=1)
+    xc = _conv(p, xb, cfg.lru_conv_width, hist=cache["conv"])
+    a, b = _gates(p, xc)                                    # (B,1,W)
+    h = a[:, 0] * cache["state"] + b[:, 0]
+    y = (h[:, None, :].astype(dt) * gelu(gate))
+    y = jnp.einsum("blw,wd->bld", y, p["out"].astype(dt))
+    return {"conv": hist[:, 1:], "state": h}, y

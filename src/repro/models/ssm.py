@@ -1,0 +1,153 @@
+"""Mamba2 — SSD (state-space duality) block, chunked scan + O(1) decode.
+
+Training/prefill runs the chunked dual form (intra-chunk attention-like
+matmuls + inter-chunk state recurrence via lax.scan): TPU-friendly MXU work
+instead of a length-L sequential scan.  Decode updates a (B, H, P, N) state
+and a width-(w−1) conv ring — O(1) in sequence length, which is why the
+``long_500k`` cell runs for this family (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import PSpec, rms_norm
+
+
+def ssm_desc(cfg) -> dict:
+    D, di, N, H, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv_width
+    ch = di + 2 * N
+    return {
+        "wz": PSpec((D, di), ("fsdp", "ssm_inner")),
+        "wx": PSpec((D, di), ("fsdp", "ssm_inner")),
+        "wB": PSpec((D, N), ("fsdp", None)),
+        "wC": PSpec((D, N), ("fsdp", None)),
+        "wdt": PSpec((D, H), ("fsdp", None)),
+        "dt_bias": PSpec((H,), (None,), init="zeros"),
+        "A_log": PSpec((H,), (None,), init="zeros"),
+        "D_skip": PSpec((H,), (None,), init="ones"),
+        "conv_w": PSpec((W, ch), (None, "ssm_inner"), scale=W ** -0.5),
+        "conv_b": PSpec((ch,), ("ssm_inner",), init="zeros"),
+        "norm": PSpec((di,), ("ssm_inner",), init="zeros"),
+        "out": PSpec((di, D), ("ssm_inner", "fsdp")),
+    }
+
+
+def _proj(cfg, p, x):
+    dt = x.dtype
+    z = jnp.einsum("bld,de->ble", x, p["wz"].astype(dt))
+    xin = jnp.einsum("bld,de->ble", x, p["wx"].astype(dt))
+    Bv = jnp.einsum("bld,dn->bln", x, p["wB"].astype(dt))
+    Cv = jnp.einsum("bld,dn->bln", x, p["wC"].astype(dt))
+    dtv = jnp.einsum("bld,dh->blh", x, p["wdt"].astype(dt))
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, jnp.concatenate([xin, Bv, Cv], axis=-1), dtv
+
+
+def _causal_conv(p, xBC, W):
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        jax.lax.dynamic_slice_in_dim(pad, i, xBC.shape[1], axis=1)
+        * p["conv_w"][i].astype(xBC.dtype)
+        for i in range(W)
+    )
+    return jax.nn.silu(out + p["conv_b"].astype(xBC.dtype))
+
+
+def ssm_apply(cfg, p, x, *, return_cache: bool = False):
+    """SSD chunked forward. x (B,L,D) → (B,L,D); L % chunk == 0."""
+    B, L, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+    dt = x.dtype
+
+    z, xBC_raw, dtv = _proj(cfg, p, x)
+    xBC = _causal_conv(p, xBC_raw, cfg.ssm_conv_width)
+    xin, Bv, Cv = xBC[..., :di], xBC[..., di:di + N], xBC[..., di + N:]
+
+    xh = xin.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bv.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cv.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtc = dtv.reshape(B, nc, Q, H)                                  # f32
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                    # (H,) < 0
+    dtA = dtc * A                                                   # ≤ 0
+    cs = jnp.cumsum(dtA, axis=2)                                    # (B,nc,Q,H)
+
+    # intra-chunk (dual/attention-like) term
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)                  # (B,nc,Q,Q)
+    decay = jnp.exp(cs[:, :, :, None] - cs[:, :, None, :])          # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri[None, None, :, :, None], scores[..., None] * decay, 0.0)
+    M = M * dtc[:, :, None, :, :]                                   # × dt_j
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", M, xh)
+
+    # inter-chunk recurrence over chunk states
+    seg = jnp.exp(cs[:, :, -1:, :] - cs)                            # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bckn,bckh,bckhp->bchpn", Bc, seg * dtc, xh)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                          # (B,nc,H)
+
+    def step(carry, inp):
+        st = carry                                                  # (B,H,P,N)
+        state_c, decay_c = inp
+        out = st
+        st = decay_c[:, :, None, None] * st + state_c
+        return st, out
+
+    xs = (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    st0 = jnp.zeros((B, H, P, N), jnp.float32)
+    st_final, prev_states = jax.lax.scan(step, st0, xs)             # (nc,B,H,P,N)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                   # (B,nc,H,P,N)
+
+    y_off = jnp.einsum("bcqn,bchpn->bcqhp", Cc, prev_states) * jnp.exp(cs)[..., None]
+    y = (y_diag + y_off + p["D_skip"].astype(jnp.float32)[:, None] * xh)
+    y = y.reshape(B, L, di).astype(dt)
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt), p["norm"])
+    y = jnp.einsum("ble,ed->bld", y, p["out"].astype(dt))
+    if return_cache:
+        W = cfg.ssm_conv_width
+        cache = {"conv": xBC_raw[:, L - (W - 1):], "state": st_final}
+        return cache, y
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def ssm_cache_desc(cfg, batch: int) -> dict:
+    di, N, H, P, W = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv_width
+    return {
+        "conv": PSpec((batch, W - 1, di + 2 * N), ("batch", None, "ssm_inner"), init="zeros"),
+        "state": PSpec((batch, H, P, N), ("batch", "ssm_inner", None, None), init="zeros"),
+    }
+
+
+def ssm_decode(cfg, p, cache, x, pos):
+    """One-token decode. x (B,1,D) → (cache, y (B,1,D))."""
+    del pos
+    B = x.shape[0]
+    di, N, H, P, W = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv_width
+    dt = x.dtype
+
+    z, xBC, dtv = _proj(cfg, p, x)                                  # (B,1,·)
+    hist = jnp.concatenate([cache["conv"], xBC], axis=1)            # (B,W,ch)
+    conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))      # (B,ch)
+    xin, Bv, Cv = conv[:, :di], conv[:, di:di + N], conv[:, di + N:]
+
+    xh = xin.reshape(B, H, P)
+    dt1 = dtv[:, 0]                                                 # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * A)                                        # (B,H)
+    st = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhpn", Bv, xh * dt1[..., None])
+    y = jnp.einsum("bn,bhpn->bhp", Cv, st) + p["D_skip"].astype(jnp.float32)[:, None] * xh
+
+    y = y.reshape(B, 1, di).astype(dt)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt), p["norm"])
+    y = jnp.einsum("ble,ed->bld", y, p["out"].astype(dt))
+    return {"conv": hist[:, 1:], "state": st}, y

@@ -1,0 +1,10 @@
+from .adamw import adamw_init, adamw_update, global_norm, clip_by_global_norm
+from .schedule import cosine_schedule
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "global_norm",
+]

@@ -1,0 +1,3 @@
+from .elastic import ElasticCluster, StragglerMonitor
+
+__all__ = ["ElasticCluster", "StragglerMonitor"]

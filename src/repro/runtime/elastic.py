@@ -1,0 +1,91 @@
+"""Elastic cluster controller + straggler mitigation (virtualized).
+
+One MementoHash instance per resource class (data shards, checkpoint
+buckets, serving sessions) keeps every placement consistent through node
+churn.  The controller is the piece a real deployment would wire to its
+health checker: `fail(host)` → Θ(1) state update + minimal re-placement;
+`join()` → restores the most recent failure first (the paper's recommended
+LIFO discipline keeps R small, so lookups stay at Jump speed).
+
+StragglerMonitor implements deadline-based gradient skipping: hosts whose
+step latency exceeds μ + k·σ get their microbatch contribution dropped and
+the gradient rescaled by participating/total — the standard backup-worker
+trick, simulated deterministically for tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import MementoHash
+from repro.data.pipeline import ShardPlacement
+
+
+@dataclass
+class ClusterEvent:
+    kind: str      # "fail" | "join"
+    host: int
+    moved: int     # resources relocated by the event
+
+
+class ElasticCluster:
+    def __init__(self, num_hosts: int, *, num_shards: int = 256,
+                 ckpt_buckets: int | None = None):
+        self.placement = ShardPlacement(num_shards, num_hosts)
+        self.ckpt_memento = MementoHash(ckpt_buckets or max(num_hosts // 2, 2))
+        self.events: list[ClusterEvent] = []
+
+    @property
+    def hosts(self) -> set[int]:
+        return self.placement.memento.working_set()
+
+    def fail(self, host: int) -> dict:
+        plan = self.placement.fail_host(host)
+        assert plan["minimal"], "non-minimal data movement on failure!"
+        self.events.append(ClusterEvent("fail", host, len(plan["moved"])))
+        return plan
+
+    def join(self) -> dict:
+        plan = self.placement.add_host()
+        assert plan["monotone"], "non-monotone movement on join!"
+        self.events.append(ClusterEvent("join", plan["host"], len(plan["moved"])))
+        return plan
+
+    def movement_total(self) -> int:
+        return sum(e.moved for e in self.events)
+
+    def state(self) -> dict:
+        m = self.placement.memento
+        return {"n": m.n, "l": m.l, "R": dict(m.R)}
+
+
+class StragglerMonitor:
+    def __init__(self, *, k_sigma: float = 3.0, window: int = 50,
+                 min_participation: float = 0.5):
+        self.k = k_sigma
+        self.window = window
+        self.min_participation = min_participation
+        self._lat: list[float] = []
+
+    def deadline(self) -> float:
+        if len(self._lat) < 8:
+            return float("inf")
+        arr = np.asarray(self._lat[-self.window:])
+        return float(arr.mean() + self.k * arr.std())
+
+    def observe(self, latency: float) -> None:
+        self._lat.append(latency)
+
+    def filter_step(self, host_latencies: dict[int, float]) -> dict:
+        """Which hosts make the deadline; gradient rescale factor."""
+        dl = self.deadline()
+        for v in host_latencies.values():
+            self.observe(v)
+        ok = {h for h, v in host_latencies.items() if v <= dl}
+        total = len(host_latencies)
+        if len(ok) < self.min_participation * total:
+            ok = set(host_latencies)  # too many stragglers ⇒ wait for all
+        scale = total / max(len(ok), 1)
+        return {"participants": ok, "skipped": set(host_latencies) - ok,
+                "grad_scale": scale, "deadline": dl}

@@ -1,0 +1,10 @@
+from .step import decode_shapes, decode_specs, make_decode_step, make_prefill_step, prefill_shapes, prefill_specs
+
+__all__ = [
+    "decode_shapes",
+    "decode_specs",
+    "make_decode_step",
+    "make_prefill_step",
+    "prefill_shapes",
+    "prefill_specs",
+]

@@ -1,0 +1,106 @@
+"""Session → replica router: MementoHash with KV-cache affinity.
+
+The serving-side face of the paper: requests carry a session id (prefix /
+KV-cache identity); the router consistent-hashes sessions onto model
+replicas so
+
+  * a session always lands on the replica holding its KV cache (affinity),
+  * replica failure remaps ONLY that replica's sessions (minimal disruption)
+    — the rest keep their warm caches,
+  * replicas added back (restored) steal only the sessions that belonged to
+    them (monotonicity), and the replica fleet can grow without bound.
+
+Bulk routing (e.g. batch admission of thousands of queued requests) runs on
+the device data plane (`repro.kernels.ops.memento_lookup`, Pallas on TPU).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import MementoHash, MementoTables
+from repro.core.hashing import key_to_u32
+
+
+@dataclass
+class RouterStats:
+    routed: int = 0
+    moved_on_failure: int = 0
+    affinity_hits: int = 0
+
+
+class SessionRouter:
+    def __init__(self, num_replicas: int, *, use_device_plane: bool = False):
+        self.memento = MementoHash(num_replicas, variant="32")
+        self.tables = MementoTables(self.memento)
+        self.use_device_plane = use_device_plane
+        self.stats = RouterStats()
+        self._last: dict[int, int] = {}  # session → last replica (metrics)
+
+    # -- single-request path --------------------------------------------------
+    def route(self, session_id) -> int:
+        key = key_to_u32(session_id)
+        r = self.memento.lookup(key)
+        self.stats.routed += 1
+        if self._last.get(key) == r:
+            self.stats.affinity_hits += 1
+        self._last[key] = r
+        return r
+
+    # -- bulk path (device plane) ----------------------------------------------
+    def route_batch(self, session_ids: np.ndarray) -> np.ndarray:
+        from repro.core.hashing import np_key_to_u32
+        keys = np_key_to_u32(np.asarray(session_ids))
+        if self.use_device_plane:
+            from repro.kernels import ops
+            return np.asarray(ops.memento_lookup(keys, self.tables.repl,
+                                                 self.tables.n))
+        from repro.core.jax_lookup import memento_lookup
+        import jax.numpy as jnp
+        return np.asarray(memento_lookup(jnp.asarray(keys),
+                                         jnp.asarray(self.tables.repl),
+                                         self.tables.n))
+
+    # -- membership ----------------------------------------------------------
+    def fail_replica(self, replica: int) -> dict:
+        before = dict(self._last)
+        self.memento.remove(replica)
+        self.tables.on_remove(replica)
+        moved = {s for s, r in before.items() if r == replica}
+        self.stats.moved_on_failure += len(moved)
+        return {"replica": replica, "sessions_moved": len(moved)}
+
+    def restore_replica(self) -> int:
+        b = self.memento.add()
+        self.tables.on_add(b)
+        return b
+
+    @property
+    def replicas(self) -> set[int]:
+        return self.memento.working_set()
+
+
+@dataclass
+class Request:
+    session_id: int
+    tokens: list[int] = field(default_factory=list)
+
+
+class BatchScheduler:
+    """Groups admitted requests per replica into decode batches."""
+
+    def __init__(self, router: SessionRouter, max_batch: int):
+        self.router = router
+        self.max_batch = max_batch
+
+    def assign(self, requests: list[Request]) -> dict[int, list[Request]]:
+        ids = np.asarray([r.session_id for r in requests], dtype=np.uint64)
+        replicas = (self.router.route_batch(ids) if len(ids) else
+                    np.zeros((0,), np.int32))
+        out: dict[int, list[Request]] = {}
+        for req, rep in zip(requests, replicas):
+            out.setdefault(int(rep), []).append(req)
+        for rep, lst in out.items():
+            out[rep] = lst[: self.max_batch]  # back-pressure beyond max_batch
+        return out

@@ -1,0 +1,63 @@
+"""Serving steps: prefill and one-token decode, with sharding/shape trees.
+
+``serve_step`` for `decode_*` shapes is one new token against a KV cache of
+``seq_len`` (per the brief); for `prefill_*` shapes it is the full-sequence
+cache-building pass.  Cache specs shard batch over (pod, data) and kv-heads
+or cache-sequence over `model` (whichever divides — see sharding/rules.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import logical_to_spec
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+    return decode_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"))
+    return prefill_step
+
+
+def decode_shapes(model, B: int, S: int):
+    """(params, cache, tokens, pos) ShapeDtypeStructs for one-token decode."""
+    return (model.param_shapes(),
+            model.cache_shapes(B, S),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def decode_specs(model, rules, B: int):
+    tok = logical_to_spec(("batch", None), rules, (B, 1))
+    return (model.param_specs(rules), None, tok, P())
+
+
+def decode_cache_specs(model, B, S, rules):
+    return model.cache_specs(B, S, rules)
+
+
+def prefill_shapes(model, B: int, S: int):
+    cfg = model.cfg
+    if cfg.frontend:
+        batch = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)}
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    return (model.param_shapes(), batch)
+
+
+def prefill_specs(model, rules, B: int, S: int):
+    cfg = model.cfg
+    if cfg.frontend:
+        batch = {"embeds": logical_to_spec(("batch", None, None), rules,
+                                           (B, S, cfg.d_model))}
+    else:
+        batch = {"tokens": logical_to_spec(("batch", None), rules, (B, S))}
+    return (model.param_specs(rules), batch)

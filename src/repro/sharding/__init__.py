@@ -1,0 +1,15 @@
+from .rules import (
+    AxisRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    shard_constraint,
+    spec_tree_for_params,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "logical_to_spec",
+    "shard_constraint",
+    "spec_tree_for_params",
+]

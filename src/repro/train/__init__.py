@@ -1,0 +1,9 @@
+from .step import TrainStepConfig, batch_specs, init_state, make_train_step, state_specs
+
+__all__ = [
+    "TrainStepConfig",
+    "batch_specs",
+    "init_state",
+    "make_train_step",
+    "state_specs",
+]

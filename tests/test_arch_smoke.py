@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced config, forward/train/decode on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.models import LM
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(cfg, B=2, S=16):
+    rng = np.random.default_rng(0)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.frontend:  # stub modality frontend: precomputed embeddings
+        return {"embeds": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32),
+                "labels": labels}
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+            "labels": labels}
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_and_loss(name):
+    cfg = smoke_config(name)
+    model = LM(cfg, attn_chunk=8)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, _ = model.forward(params, tokens=batch.get("tokens"),
+                              embeds=batch.get("embeds"))
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat)
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_decode_matches_forward(name):
+    """Token-by-token decode must reproduce the teacher-forced forward pass.
+
+    Runs in f32 compute: this asserts *algorithmic* equivalence of the two
+    paths; bf16 accumulation-order drift is covered by the forward test.
+    """
+    import dataclasses
+    cfg = dataclasses.replace(smoke_config(name), dtype="float32")
+    model = LM(cfg, attn_chunk=8, remat="none")
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 16
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    full_logits, _ = model.forward(params, tokens=tokens)
+
+    cache = model.init_cache(B, max_len=S)
+    dec = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        cache, logits = dec(params, cache, tokens[:, t:t + 1], jnp.int32(t))
+        outs.append(logits[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(full_logits),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_prefill_then_decode_matches(name):
+    import dataclasses
+    cfg = dataclasses.replace(smoke_config(name), dtype="float32")
+    model = LM(cfg, attn_chunk=8, remat="none")
+    params = model.init(jax.random.PRNGKey(2))
+    B, S = 2, 16
+    rng = np.random.default_rng(2)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    # ground truth: decode from scratch
+    cache = model.init_cache(B, max_len=S + 4)
+    for t in range(S):
+        cache, logits_ref = model.decode_step(params, cache, tokens[:, t:t + 1], jnp.int32(t))
+
+    cache2, logits_pre = model.prefill(params, tokens=tokens, max_len=S + 4)
+    np.testing.assert_allclose(np.asarray(logits_pre[:, 0]), np.asarray(logits_ref[:, 0]),
+                               rtol=2e-2, atol=2e-2)
+    # one more decoded token must agree between the two cache lineages
+    nxt = tokens[:, :1]
+    _, a = model.decode_step(params, cache, nxt, jnp.int32(S))
+    _, b = model.decode_step(params, cache2, nxt, jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-2, atol=2e-2)
+
+
+def test_param_counts_match_analytic():
+    for name in ALL_ARCHS:
+        cfg = get_config(name)
+        model = LM(cfg)
+        got = model.param_count()
+        want = cfg.param_count()
+        assert abs(got - want) / want < 0.02, (name, got, want)
+
+
+def test_full_configs_match_brief():
+    c = get_config("phi3.5-moe-42b-a6.6b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads) == (32, 4096, 32, 8)
+    assert (c.num_experts, c.num_experts_per_tok) == (16, 2)
+    assert 40e9 < c.param_count() < 45e9
+    assert 6e9 < c.active_param_count() < 8e9
+    c = get_config("olmoe-1b-7b")
+    assert 6e9 < c.param_count() < 8e9
+    assert 0.9e9 < c.active_param_count() < 1.6e9
+    c = get_config("mamba2-780m")
+    assert 0.6e9 < c.param_count() < 1.0e9
+    c = get_config("gemma3-12b")
+    assert c.pattern[:6] == ("local",) * 5 + ("attn",)
+    c = get_config("recurrentgemma-9b")
+    assert c.pattern[:3] == ("rglru", "rglru", "local")
+    assert len(c.pattern) == 38 and c.full_periods == 12 and len(c.tail_layers) == 2

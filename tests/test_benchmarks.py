@@ -1,0 +1,16 @@
+"""CI smoke for the benchmark harness (quick sizes) + paper-claims check."""
+from __future__ import annotations
+
+
+def test_benchmarks_quick_and_claims_pass(capsys):
+    from benchmarks.run import main
+    assert main(["--quick"]) == 0, "paper-claims check failed at quick sizes"
+
+
+def test_device_plane_bench_smoke():
+    from benchmarks.bench_device_plane import bench_device_plane
+    rows = []
+    bench_device_plane(lambda *r: rows.append(r), sizes=((256, 40),), n_keys=1024)
+    algos = {r[1] for r in rows}
+    assert algos == {"host_scalar", "jnp_batched", "pallas_interpret"}
+    assert all(r[4] > 0 for r in rows)

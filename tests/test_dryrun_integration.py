@@ -1,0 +1,29 @@
+"""Integration: the multi-pod dry-run lowers+compiles a real cell end-to-end.
+
+Runs in a subprocess because dryrun.py must own XLA_FLAGS (512 placeholder
+devices) before jax initializes — the test process keeps its single device.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_dryrun_cell_compiles(tmp_path):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", "mamba2-780m", "--shape", "long_500k", "--mesh", "multi",
+           "--variant", "citest", "--out-dir", str(tmp_path)]
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=str(REPO), timeout=540)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    rec = json.loads((tmp_path / "mamba2-780m__long_500k__multi__citest.json").read_text())
+    assert rec["chips"] == 512
+    assert rec["memory_analysis"]["peak_memory_in_bytes"] < 16 * 2**30
+    rl = rec["roofline"]
+    assert rl["t_compute"] > 0 and rl["t_memory"] > 0
+    assert rl["bottleneck"] in ("compute", "memory", "collective")

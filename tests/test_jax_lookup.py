@@ -1,0 +1,66 @@
+"""Host ⇄ device data-plane equivalence for batched Memento lookups."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import MementoHash, MementoTables, np_jump32, random_state
+from repro.core import jax_lookup
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return np.random.default_rng(0).integers(0, 2**32, size=512, dtype=np.uint32)
+
+
+def test_jnp_jump_matches_numpy(keys):
+    import jax.numpy as jnp
+
+    for n in (1, 3, 97, 4096, 100000):
+        dev = np.asarray(jax_lookup.jump32(jnp.asarray(keys), n))
+        host = np_jump32(keys, n)
+        np.testing.assert_array_equal(dev, host)
+
+
+@pytest.mark.parametrize("n0,removals", [(16, 0), (16, 7), (128, 50), (1000, 400)])
+def test_jnp_memento_matches_host(keys, n0, removals):
+    import jax.numpy as jnp
+
+    m = random_state(np.random.default_rng(1), n0, removals, variant="32")
+    tabs = MementoTables(m)
+    out = np.asarray(jax_lookup.memento_lookup(jnp.asarray(keys), jnp.asarray(tabs.repl), m.n))
+    ws = m.working_set()
+    host = np.asarray([m.lookup(int(k)) for k in keys])
+    np.testing.assert_array_equal(out, host)
+    assert set(out.tolist()) <= ws
+
+
+def test_jnp_memento_balance(keys):
+    import jax.numpy as jnp
+
+    m = random_state(np.random.default_rng(2), 32, 12, variant="32")
+    tabs = MementoTables(m)
+    big = np.random.default_rng(3).integers(0, 2**32, size=50000, dtype=np.uint32)
+    out = np.asarray(jax_lookup.memento_lookup(jnp.asarray(big), jnp.asarray(tabs.repl), m.n))
+    counts = np.bincount(out, minlength=m.n)
+    ws = sorted(m.working_set())
+    expected = len(big) / len(ws)
+    assert counts[[b for b in range(m.n) if b not in ws]].sum() == 0
+    for b in ws:
+        assert abs(counts[b] - expected) < 6 * np.sqrt(expected)
+
+
+def test_tables_incremental_updates():
+    m = MementoHash(64, variant="32")
+    tabs = MementoTables(m)
+    rng = np.random.default_rng(4)
+    for step in range(60):
+        if rng.random() < 0.6 and m.working > 1:
+            ws = sorted(m.working_set())
+            b = ws[int(rng.integers(len(ws)))]
+            m.remove(b)
+            tabs.on_remove(b)
+        else:
+            b = m.add()
+            tabs.on_add(b)
+        tabs.check()
