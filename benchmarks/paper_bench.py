@@ -14,6 +14,11 @@ Scenarios (one function per paper figure group):
 Anchor and Dx are initialized with a = 10·w (the paper's compromise).
 Default sizes are CPU-budget scaled; ``--full`` switches to paper scale
 (10⁶ nodes).  Timings are wall-clock over pre-generated uint64 keys.
+
+``bench_device_scenarios`` additionally times the *device* data plane
+(batched jnp + Pallas lookups over each algorithm's DeviceImage) across
+the stable / one-shot / incremental scenarios — the comparison §VIII never
+ran on hardware.
 """
 from __future__ import annotations
 
@@ -21,21 +26,14 @@ import time
 
 import numpy as np
 
-from repro.core import AnchorHash, DxHash, JumpHash, MementoHash
+from repro.core import JumpHash, MementoHash, make_hash
 
 A_OVER_W = 10
 
 
-def _mk(algo: str, w: int, a_over_w: int = A_OVER_W):
-    if algo == "memento":
-        return MementoHash(w)
-    if algo == "jump":
-        return JumpHash(w)
-    if algo == "anchor":
-        return AnchorHash(capacity=a_over_w * w, initial_node_count=w)
-    if algo == "dx":
-        return DxHash(capacity=a_over_w * w, initial_node_count=w)
-    raise ValueError(algo)
+def _mk(algo: str, w: int, a_over_w: int = A_OVER_W, variant: str = "64"):
+    """All four algorithms through the one ConsistentHash factory."""
+    return make_hash(algo, w, capacity=a_over_w * w, variant=variant)
 
 
 def _time_lookup(h, keys) -> float:
@@ -195,3 +193,80 @@ def bench_resize(w, n_ops, emit):
         t0 = time.perf_counter()
         _mk(algo, w)
         emit("init", algo, w, "us", (time.perf_counter() - t0) * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# Device plane: bulk-lookup timings for all four algorithms (§VIII scenarios)
+# ---------------------------------------------------------------------------
+
+def bench_device_scenarios(emit, w=1024, a_over_w=4, n_keys=8192,
+                           oneshot_frac=0.5, inc_fractions=(0.2, 0.5),
+                           pallas_keys=2048):
+    """Bulk device-plane lookups (jnp jit + Pallas) per algorithm × scenario.
+
+    Scenarios mirror the paper's §VIII groups on `variant="32"` states whose
+    host lookups are bit-identical to the device planes:
+
+      * ``stable``       — no removals,
+      * ``oneshot``      — `oneshot_frac` of nodes removed at random
+                           (LIFO for Jump, which supports nothing else),
+      * ``incremental``  — growing removal fraction, re-timed per step.
+
+    On CPU the Pallas column runs in interpret mode (correctness path, NOT
+    TPU performance) over a smaller key batch; the jnp column is the
+    XLA-compiled number to watch off-TPU.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.jax_lookup import lookup_image
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 2**32, size=n_keys, dtype=np.uint32))
+    pkeys = jnp.asarray(np.asarray(keys)[:pallas_keys])
+
+    def _time_planes(h, scenario, x):
+        image = h.device_image()
+        jnp_lookup = jax.jit(lambda k: lookup_image(k, image))
+        out = jnp_lookup(keys)
+        out.block_until_ready()  # compile+warm
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jnp_lookup(keys).block_until_ready()
+        emit(f"device_{scenario}_lookup", h.name, x, "jnp_us_per_key",
+             (time.perf_counter() - t0) / (5 * n_keys) * 1e6)
+
+        pout = ops.device_lookup(pkeys, image)  # interpret on CPU, Mosaic on TPU
+        pout.block_until_ready()
+        np.testing.assert_array_equal(np.asarray(out)[:pallas_keys], np.asarray(pout))
+        t0 = time.perf_counter()
+        ops.device_lookup(pkeys, image).block_until_ready()
+        emit(f"device_{scenario}_lookup", h.name, x, "pallas_us_per_key",
+             (time.perf_counter() - t0) / pallas_keys * 1e6)
+        emit(f"device_{scenario}_memory", h.name, x, "bytes", h.memory_bytes())
+
+    for algo in ALGOS:
+        # stable
+        h = _mk(algo, w, a_over_w=a_over_w, variant="32")
+        _time_planes(h, "stable", w)
+
+        # one-shot removals
+        h = _mk(algo, w, a_over_w=a_over_w, variant="32")
+        removals = int(oneshot_frac * w)
+        if algo == "jump":
+            _remove_lifo(h, removals)
+        else:
+            _remove_random(h, removals)
+        _time_planes(h, "oneshot", w)
+
+        # incremental removals
+        h = _mk(algo, w, a_over_w=a_over_w, variant="32")
+        removed = 0
+        for frac in inc_fractions:
+            step = int(frac * w) - removed
+            if algo == "jump":
+                _remove_lifo(h, step)
+            else:
+                _remove_random(h, step, seed=int(frac * 100))
+            removed += step
+            _time_planes(h, "incremental", frac)

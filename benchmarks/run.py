@@ -65,6 +65,9 @@ def main(argv=None) -> int:
     if args.device_plane:
         from .bench_device_plane import bench_device_plane
         bench_device_plane(emit)
+        # all four algorithms × stable / one-shot / incremental on the
+        # device plane (jnp jit + Pallas), variant-32 states
+        pb.bench_device_scenarios(emit)
 
     RESULTS.mkdir(parents=True, exist_ok=True)
     with open(RESULTS / "bench.csv", "w", newline="") as f:

@@ -39,6 +39,17 @@ def main():
         print(f"{h.name:8s} lookup({keys[0]!r}) → {h.lookup(key_to_u64(keys[0]))}"
               f"   memory={h.memory_bytes()}B")
 
+    # 6. every algorithm speaks the same protocol: one device plane for all
+    from repro.core import make_hash
+    print("\nprotocol device plane (host == device, variant='32'):")
+    for algo in ("memento", "anchor", "dx", "jump"):
+        h = make_hash(algo, 10, variant="32")
+        if algo != "jump":
+            h.remove(3)
+        out = ops.device_lookup(batch, h.device_image())  # Pallas (interpret on CPU)
+        assert [h.lookup(int(k)) for k in batch] == np.asarray(out).tolist()
+        print(f"  {algo:8s} → {np.asarray(out).tolist()}")
+
 
 if __name__ == "__main__":
     main()

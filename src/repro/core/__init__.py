@@ -6,24 +6,32 @@ Host control plane (paper-faithful):
   * :class:`AnchorHash`   — fixed-capacity baseline (in-place, Θ(a))
   * :class:`DxHash`       — fixed-capacity baseline (bit-array, Θ(a))
 
+All four implement the :class:`ConsistentHash` protocol (host ops +
+``device_image()``); :func:`make_hash` is the name → implementation factory.
+
 Device data plane:
-  * :class:`MementoTables` — dense int32 image of a Memento state
-  * :mod:`repro.core.jax_lookup` — batched jnp lookup (oracle for kernels/)
+  * :class:`DeviceImage`   — flat per-algorithm int32/uint32 device arrays
+  * :class:`MementoTables` — incrementally-mirrored dense Memento image
+  * :mod:`repro.core.jax_lookup` — batched jnp lookups (oracle for kernels/)
 """
 from .anchor import AnchorHash
 from .dx import DxHash
 from .jump import JumpHash, jump32, jump64, np_jump32
 from .memento import MementoHash, random_state
+from .protocol import ConsistentHash, DeviceImage, make_hash
 from .tables import MementoTables, tables_from_state
 
 __all__ = [
     "AnchorHash",
+    "ConsistentHash",
+    "DeviceImage",
     "DxHash",
     "JumpHash",
     "MementoHash",
     "MementoTables",
     "jump32",
     "jump64",
+    "make_hash",
     "np_jump32",
     "random_state",
     "tables_from_state",

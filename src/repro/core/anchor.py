@@ -16,15 +16,26 @@ the AnchorHash paper uses for its stack-based resource management).
 """
 from __future__ import annotations
 
-from .hashing import MASK64, fmix64, hash2_64
+import numpy as np
+
+from .hashing import MASK32, MASK64, fmix32, fmix64, hash2_32, hash2_64
+from .protocol import DeviceImage, round_up
 
 
 class AnchorHash:
     name = "anchor"
 
-    def __init__(self, capacity: int, initial_node_count: int):
+    def __init__(self, capacity: int, initial_node_count: int, variant: str = "64"):
         if not (0 < initial_node_count <= capacity):
             raise ValueError("need 0 < initial_node_count <= capacity")
+        if variant == "64":
+            self._fmix, self._hash2, self._mask = fmix64, hash2_64, MASK64
+        elif variant == "32":
+            # TPU-native arithmetic — bit-identical to the device data plane.
+            self._fmix, self._hash2, self._mask = fmix32, hash2_32, MASK32
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+        self.variant = variant
         a = capacity
         self.a = a
         self.N = a
@@ -70,15 +81,29 @@ class AnchorHash:
 
     # -- lookup -----------------------------------------------------------------
     def lookup(self, key: int) -> int:
-        key &= MASK64
+        key &= self._mask
         A, K = self.A, self.K
-        b = fmix64(key) % self.a
+        b = self._fmix(key) % self.a
         while A[b] > 0:  # b is removed
-            h = hash2_64(key, b) % A[b]
+            h = self._hash2(key, b) % A[b]
             while A[h] >= A[b]:  # h removed at-or-after b ⇒ wrap back in time
                 h = K[h]
             b = h
         return b
+
+    def device_image(self) -> DeviceImage:
+        """A/K image: removal timestamps + wrap successors (DESIGN.md §3.3).
+
+        Lookup only ever gathers indices < a (start is ``fmix(key) % a``,
+        probes are ``hash % A[b] < a``, and K values are bucket ids), so the
+        alignment padding is never read.
+        """
+        pad = round_up(self.a)
+        A = np.zeros((pad,), dtype=np.int32)
+        A[: self.a] = self.A
+        K = np.arange(pad, dtype=np.int32)
+        K[: self.a] = self.K
+        return DeviceImage(algo=self.name, n=self.a, arrays={"A": A, "K": K})
 
     # -- introspection -------------------------------------------------------------
     @property

@@ -9,7 +9,10 @@ an analogous free-slot structure; its size is counted in ``memory_bytes``).
 """
 from __future__ import annotations
 
-from .hashing import MASK64, hash2_64
+import numpy as np
+
+from .hashing import MASK32, MASK64, hash2_32, hash2_64
+from .protocol import DeviceImage, round_up
 
 
 class DxHash:
@@ -17,9 +20,17 @@ class DxHash:
 
     _MAX_PROBE_FACTOR = 64  # cap = factor * ceil(a/w) probes, then fallback scan
 
-    def __init__(self, capacity: int, initial_node_count: int):
+    def __init__(self, capacity: int, initial_node_count: int, variant: str = "64"):
         if not (0 < initial_node_count <= capacity):
             raise ValueError("need 0 < initial_node_count <= capacity")
+        if variant == "64":
+            self._hash2, self._mask = hash2_64, MASK64
+        elif variant == "32":
+            # TPU-native arithmetic — bit-identical to the device data plane.
+            self._hash2, self._mask = hash2_32, MASK32
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+        self.variant = variant
         self.a = capacity
         self.N = initial_node_count
         self.active = bytearray([1] * initial_node_count + [0] * (capacity - initial_node_count))
@@ -42,18 +53,36 @@ class DxHash:
         self.N += 1
         return b
 
+    def max_probes(self) -> int:
+        """Probe bound before the first-working fallback: 64·⌈a/w⌉."""
+        return self._MAX_PROBE_FACTOR * max(1, (self.a + self.N - 1) // self.N)
+
     def lookup(self, key: int) -> int:
-        key &= MASK64
+        key &= self._mask
         a, active = self.a, self.active
-        max_probes = self._MAX_PROBE_FACTOR * max(1, (a + self.N - 1) // self.N)
-        for i in range(max_probes):
-            b = hash2_64(key, i) % a
+        for i in range(self.max_probes()):
+            b = self._hash2(key, i) % a
             if active[b]:
                 return b
         for b in range(a):  # vanishing-probability fallback
             if active[b]:
                 return b
         raise RuntimeError("no working bucket")
+
+    def device_image(self) -> DeviceImage:
+        """Packed active bitmap (bucket b ↔ bit b&31 of word b>>5) plus the
+        dynamic probe bound and the precomputed fallback bucket — the same
+        first-working scan result the host lookup uses (DESIGN.md §3.3)."""
+        bits = np.frombuffer(bytes(self.active), dtype=np.uint8).astype(np.uint32)
+        words = np.zeros((round_up(-(-self.a // 32)),), dtype=np.uint32)
+        idx = np.arange(self.a, dtype=np.uint64)
+        shifted = (bits.astype(np.uint64) << (idx & np.uint64(31))).astype(np.uint32)
+        np.bitwise_or.at(words, (idx >> np.uint64(5)).astype(np.int64), shifted)
+        return DeviceImage(
+            algo=self.name, n=self.a, arrays={"words": words},
+            scalars={"max_probes": self.max_probes(),
+                     "fallback": int(np.argmax(bits))},
+        )
 
     @property
     def size(self) -> int:

@@ -1,68 +1,30 @@
-"""Batched MementoHash lookup — pure-jnp data plane.
+"""Batched consistent-hash lookups — pure-jnp data plane.
 
-Bit-identical to the numpy host plane (``jump.np_jump32`` / ``hashing``):
-32-bit murmur mixing, 24-bit uniform variates, f32 divides.  These functions
-are the oracle for the Pallas kernel (``kernels/ref.py`` re-exports them) and
-the CPU fallback used by the data/serving substrates for bulk routing.
+Bit-identical to the numpy/scalar host plane (``variant="32"`` states):
+the shared 32-bit arithmetic lives in :mod:`repro.kernels.primitives` and
+is consumed both here and by the Pallas kernels, so all three planes
+(host / jnp / Pallas) agree exactly.  These functions are the oracle for
+the kernels (``kernels/ref.py`` re-exports them) and the CPU fallback used
+by the data/serving substrates for bulk routing.
 
-All loops are lane-synchronous masked ``lax.while_loop``s: a whole key block
-iterates until every lane settles.  Expected sweep counts are bounded by the
-paper's Props. VII.1-3 (E[τ], E[σ] ≤ ln(n/w)).
+One lookup per algorithm (Memento, Anchor, Dx, Jump) over its flat
+:class:`~repro.core.protocol.DeviceImage`; :func:`lookup_image` dispatches.
+All loops are lane-synchronous masked ``lax.while_loop``s: a whole key
+block iterates until every lane settles.  Expected sweep counts: Memento
+E[τ], E[σ] ≤ ln(n/w) (paper Props. VII.1-3); Anchor ≈ ln(a/w); Dx the
+geometric O(a/w) probe count.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .hashing import _C1_32, _C2_32, GOLDEN32
+from repro.kernels.primitives import fmix32, hash2, jump32, step_u24 as _step_u24
 
 _U = jnp.uint32
 
-
-def fmix32(h):
-    h = h.astype(_U)
-    h ^= h >> _U(16)
-    h = h * _U(_C1_32)
-    h ^= h >> _U(13)
-    h = h * _U(_C2_32)
-    h ^= h >> _U(16)
-    return h
-
-
-def hash2_32(keys, seed):
-    """(key, seed) hash; seed may be a traced int32 array (e.g. bucket ids)."""
-    s = fmix32(seed.astype(_U) * _U(GOLDEN32) + _U(1))
-    return fmix32(keys.astype(_U) ^ s)
-
-
-def _step_u24(keys, step):
-    s = jnp.asarray(step).astype(_U)
-    h = fmix32(keys.astype(_U) ^ (s * _U(GOLDEN32) + _U(0x2545F491)))
-    return h >> _U(8)
-
-
-def jump32(keys, n):
-    """Vectorized TPU-native JumpHash: keys uint32 [...], n dynamic int."""
-    nf = jnp.float32(n)
-    b0 = jnp.zeros(keys.shape, jnp.int32)
-    j0 = jnp.zeros(keys.shape, jnp.float32)
-
-    def cond(state):
-        _, j, _ = state
-        return jnp.any(j < nf)
-
-    def body(state):
-        b, j, i = state
-        active = j < nf
-        b = jnp.where(active, j.astype(jnp.int32), b)
-        u = _step_u24(keys, i)
-        r = (u.astype(jnp.float32) + jnp.float32(1.0)) * jnp.float32(2.0 ** -24)
-        jn = jnp.minimum(jnp.floor((b.astype(jnp.float32) + jnp.float32(1.0)) / r), nf)
-        j = jnp.where(active, jn, j)
-        return b, j, i + 1
-
-    b, _, _ = jax.lax.while_loop(cond, body, (b0, j0, jnp.int32(0)))
-    return b
+# Back-compat alias: earlier revisions exposed ``hash2_32`` here.
+hash2_32 = hash2
 
 
 def memento_lookup(keys, repl, n):
@@ -70,7 +32,7 @@ def memento_lookup(keys, repl, n):
 
     Returns int32 bucket ids in [0, n) that are working buckets.
     """
-    keys = keys.astype(_U)
+    keys = jnp.asarray(keys).astype(_U)
     b = jump32(keys, n)
 
     def outer_cond(state):
@@ -81,7 +43,7 @@ def memento_lookup(keys, repl, n):
         c = repl[b]
         active = c >= 0
         wb = jnp.where(active, c, 1)  # |W_b| (Prop. V.3); dummy 1 when settled
-        h = hash2_32(keys, b)
+        h = hash2(keys, b)
         d = (h % wb.astype(_U)).astype(jnp.int32)
 
         def inner_cond(state):
@@ -98,6 +60,80 @@ def memento_lookup(keys, repl, n):
         return jnp.where(active, d, b)
 
     return jax.lax.while_loop(outer_cond, outer_body, b)
+
+
+def anchor_lookup(keys, A, K, a):
+    """AnchorHash lookup over the A/K image: keys uint32 [...], a dynamic int.
+
+    Mirrors the host loop exactly: start at ``fmix32(key) % a``; while the
+    bucket is removed, re-hash into its wrap set and follow K successors
+    while the candidate was removed at-or-after it.
+    """
+    keys = jnp.asarray(keys).astype(_U)
+    au = jnp.asarray(a).astype(_U)
+    b = (fmix32(keys) % au).astype(jnp.int32)
+
+    def outer_cond(b):
+        return jnp.any(A[b] > 0)
+
+    def outer_body(b):
+        Ab = A[b]
+        active = Ab > 0
+        denom = jnp.where(active, Ab, 1).astype(_U)
+        h = (hash2(keys, b) % denom).astype(jnp.int32)
+
+        def inner_cond(h):
+            return jnp.any(active & (A[h] >= Ab))
+
+        def inner_body(h):
+            follow = active & (A[h] >= Ab)  # h removed at-or-after b ⇒ wrap
+            return jnp.where(follow, K[h], h)
+
+        h = jax.lax.while_loop(inner_cond, inner_body, h)
+        return jnp.where(active, h, b)
+
+    return jax.lax.while_loop(outer_cond, outer_body, b)
+
+
+def dx_lookup(keys, words, a, max_probes, fallback):
+    """DxHash lookup over the packed active bitmap: first working bucket in
+    the pseudo-random probe stream ``hash(key, i) % a``, i < max_probes;
+    unsettled lanes take the precomputed first-working ``fallback``."""
+    keys = jnp.asarray(keys).astype(_U)
+    au = jnp.asarray(a).astype(_U)
+    b0 = jnp.zeros(keys.shape, jnp.int32)
+    found0 = jnp.zeros(keys.shape, jnp.bool_)
+
+    def cond(state):
+        i, _, found = state
+        return (i < max_probes) & jnp.any(~found)
+
+    def body(state):
+        i, b, found = state
+        cand = (hash2(keys, i) % au).astype(jnp.int32)
+        w = words[cand >> 5]
+        bit = (w >> (cand & 31).astype(_U)) & _U(1)
+        hit = ~found & (bit == _U(1))
+        return i + jnp.int32(1), jnp.where(hit, cand, b), found | hit
+
+    _, b, found = jax.lax.while_loop(cond, body, (jnp.int32(0), b0, found0))
+    return jnp.where(found, b, jnp.asarray(fallback, jnp.int32))
+
+
+def lookup_image(keys, image):
+    """Dispatch a batched jnp lookup over any :class:`DeviceImage`."""
+    keys = jnp.asarray(keys, dtype=jnp.uint32)
+    if image.algo == "memento":
+        return memento_lookup(keys, jnp.asarray(image.arrays["repl"]), image.n)
+    if image.algo == "anchor":
+        return anchor_lookup(keys, jnp.asarray(image.arrays["A"]),
+                             jnp.asarray(image.arrays["K"]), image.n)
+    if image.algo == "dx":
+        return dx_lookup(keys, jnp.asarray(image.arrays["words"]), image.n,
+                         image.scalars["max_probes"], image.scalars["fallback"])
+    if image.algo == "jump":
+        return jump32(keys, image.n)
+    raise ValueError(f"unknown device image algo {image.algo!r}")
 
 
 def memento_lookup_hosted(keys, memento_tables):

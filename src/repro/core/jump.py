@@ -14,6 +14,7 @@ from __future__ import annotations
 import numpy as np
 
 from .hashing import GOLDEN32, LCG_MULT, MASK32, MASK64, np_fmix32, fmix32
+from .protocol import DeviceImage
 
 
 def jump64(key: int, num_buckets: int) -> int:
@@ -80,8 +81,14 @@ class JumpHash:
     def __init__(self, initial_node_count: int, variant: str = "64"):
         if initial_node_count <= 0:
             raise ValueError("initial_node_count must be positive")
+        if variant == "64":
+            self._fn = jump64
+        elif variant == "32":
+            self._fn = jump32
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+        self.variant = variant
         self.n = initial_node_count
-        self._fn = jump64 if variant == "64" else jump32
 
     def lookup(self, key: int) -> int:
         return self._fn(key, self.n)
@@ -110,3 +117,7 @@ class JumpHash:
 
     def memory_bytes(self) -> int:
         return 8  # a single counter
+
+    def device_image(self) -> DeviceImage:
+        """Stateless: the image is just the dynamic n (lookup = jump32)."""
+        return DeviceImage(algo=self.name, n=self.n)

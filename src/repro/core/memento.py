@@ -14,6 +14,7 @@ import numpy as np
 
 from .hashing import MASK32, MASK64, hash2_32, hash2_64
 from .jump import jump32, jump64
+from .protocol import DeviceImage, round_up
 
 
 class MementoHash:
@@ -81,6 +82,13 @@ class MementoHash:
         _, p = self.R.pop(b)
         self.l = p
         return b
+
+    def device_image(self) -> DeviceImage:
+        """Dense repl image: repl[b] = |W_b| if removed else -1 (DESIGN.md §3.2)."""
+        repl = np.full((round_up(self.n),), -1, dtype=np.int32)
+        for b, (c, _p) in self.R.items():
+            repl[b] = c
+        return DeviceImage(algo=self.name, n=self.n, arrays={"repl": repl})
 
     # -- Alg. 4 (Lookup) -------------------------------------------------------
     def lookup(self, key) -> int:

@@ -1,0 +1,99 @@
+"""ConsistentHash — the one protocol every algorithm in this repo speaks.
+
+Host control plane (paper-faithful, Θ(state) python):
+    ``lookup / remove / add / working / size / working_set / memory_bytes``
+
+Device data plane (DESIGN.md §3.3): ``device_image()`` flattens the host
+state into a :class:`DeviceImage` — a bundle of flat, 128-padded
+int32/uint32 arrays plus the dynamic scalars the lane-synchronous lookups
+need.  One image format serves three consumers:
+
+  * ``core/jax_lookup.lookup_image``   — pure-jnp oracle (any backend),
+  * ``kernels/ops.device_lookup``      — Pallas kernels (Mosaic on TPU,
+    interpret mode elsewhere),
+  * tests/benchmarks                   — cross-plane equivalence sweeps.
+
+Images are *snapshots*: rebuild (or incrementally mirror, see
+``core/tables.py``) after membership changes.  Device lookups are
+bit-identical to the host ``lookup`` of the TPU-native ``variant="32"``
+state; the default ``variant="64"`` remains paper-faithful host-only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+
+def round_up(x: int, m: int = 128) -> int:
+    """Round ``x`` up to a multiple of ``m`` (TPU lane alignment)."""
+    return ((x + m - 1) // m) * m
+
+
+@dataclass
+class DeviceImage:
+    """Flat device image of a consistent-hash state.
+
+    * ``algo``    — "memento" | "anchor" | "dx" | "jump" (dispatch key),
+    * ``n``       — the dynamic size scalar (b-array size for Memento/Jump,
+      overall capacity ``a`` for Anchor/Dx),
+    * ``arrays``  — named flat int32/uint32 arrays, lengths 128-padded,
+    * ``scalars`` — extra dynamic int scalars (e.g. Dx probe bound).
+    """
+
+    algo: str
+    n: int
+    arrays: dict[str, np.ndarray] = field(default_factory=dict)
+    scalars: dict[str, int] = field(default_factory=dict)
+
+
+@runtime_checkable
+class ConsistentHash(Protocol):
+    """Uniform algorithm API: host ops + a flat device image."""
+
+    name: str
+
+    def lookup(self, key: int) -> int: ...
+
+    def remove(self, b: int) -> None: ...
+
+    def add(self) -> int: ...
+
+    @property
+    def size(self) -> int: ...
+
+    @property
+    def working(self) -> int: ...
+
+    def working_set(self) -> set[int]: ...
+
+    def memory_bytes(self) -> int: ...
+
+    def device_image(self) -> DeviceImage: ...
+
+
+def make_hash(algo: str, initial_node_count: int, *, capacity: int | None = None,
+              variant: str = "64"):
+    """Factory: algorithm name → ConsistentHash implementation.
+
+    ``capacity`` only applies to the fixed-capacity baselines (Anchor/Dx);
+    it defaults to the paper's a/w = 10 compromise.  ``variant="32"`` selects
+    the TPU-native arithmetic that the device planes match bit-for-bit.
+    """
+    from .anchor import AnchorHash
+    from .dx import DxHash
+    from .jump import JumpHash
+    from .memento import MementoHash
+
+    if algo == "memento":
+        return MementoHash(initial_node_count, variant=variant)
+    if algo == "jump":
+        return JumpHash(initial_node_count, variant=variant)
+    if algo == "anchor":
+        return AnchorHash(capacity or 10 * initial_node_count,
+                          initial_node_count, variant=variant)
+    if algo == "dx":
+        return DxHash(capacity or 10 * initial_node_count,
+                      initial_node_count, variant=variant)
+    raise ValueError(f"unknown algorithm {algo!r}")

@@ -19,10 +19,7 @@ from __future__ import annotations
 import numpy as np
 
 from .memento import MementoHash
-
-
-def _round_up(x: int, m: int = 128) -> int:
-    return ((x + m - 1) // m) * m
+from .protocol import DeviceImage, round_up as _round_up
 
 
 class MementoTables:
@@ -64,6 +61,10 @@ class MementoTables:
         self.repl = repl
         self.capacity = new_cap
         self.version += 1
+
+    def image(self) -> DeviceImage:
+        """Protocol-shaped view of the incrementally-mirrored dense table."""
+        return DeviceImage(algo="memento", n=self.n, arrays={"repl": self.repl})
 
     def check(self) -> None:
         """Consistency with the host state (tests)."""

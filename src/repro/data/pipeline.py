@@ -18,22 +18,31 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import MementoHash
+from repro.core import ConsistentHash, make_hash
 from repro.core.hashing import np_hash2_32
 
 
 class ShardPlacement:
-    """shard-id → host-bucket map driven by MementoHash."""
+    """shard-id → host-bucket map driven by any ConsistentHash (Memento default)."""
 
-    def __init__(self, num_shards: int, num_hosts: int, variant: str = "32"):
+    def __init__(self, num_shards: int, num_hosts: int, variant: str = "32",
+                 algo: str | ConsistentHash = "memento", capacity: int | None = None):
         self.num_shards = num_shards
-        self.memento = MementoHash(num_hosts, variant=variant)
+        if isinstance(algo, str):
+            self.ch = make_hash(algo, num_hosts, capacity=capacity, variant=variant)
+        else:
+            self.ch = algo
+
+    @property
+    def memento(self) -> ConsistentHash:
+        """Back-compat alias from the Memento-only placement."""
+        return self.ch
 
     def host_of(self, shard: int) -> int:
-        return self.memento.lookup(shard)
+        return self.ch.lookup(shard)
 
     def assignment(self) -> dict[int, list[int]]:
-        out: dict[int, list[int]] = {b: [] for b in self.memento.working_set()}
+        out: dict[int, list[int]] = {b: [] for b in self.ch.working_set()}
         for s in range(self.num_shards):
             out[self.host_of(s)].append(s)
         return out
@@ -44,7 +53,7 @@ class ShardPlacement:
     def fail_host(self, host: int) -> dict:
         """Remove a host; returns the movement plan (only its shards move)."""
         before = {s: self.host_of(s) for s in range(self.num_shards)}
-        self.memento.remove(host)
+        self.ch.remove(host)
         moved = {s: self.host_of(s) for s in range(self.num_shards)
                  if before[s] == host}
         stayed = sum(1 for s in range(self.num_shards)
@@ -54,7 +63,7 @@ class ShardPlacement:
 
     def add_host(self) -> dict:
         before = {s: self.host_of(s) for s in range(self.num_shards)}
-        host = self.memento.add()
+        host = self.ch.add()
         moved = {s: host for s in range(self.num_shards)
                  if self.host_of(s) == host and before[s] != host}
         monotone = all(self.host_of(s) in (before[s], host)

@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Device data plane: Pallas TPU lookup kernels for the full algorithm
+# family (memento/anchor/dx/jump_lookup.py), the shared 32-bit hash
+# primitives (primitives.py), the jitted dispatch (ops.device_lookup),
+# and the oracles kernel tests compare against (ref.py).  See DESIGN.md §3.

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: batched DxHash lookup.
+
+Block-parallel pseudo-random probing (DESIGN.md §3.3): the grid runs over
+``(BLOCK_ROWS, 128)`` uint32 key blocks; the packed active bitmap (bucket
+``b`` ↔ bit ``b & 31`` of word ``b >> 5``, Θ(a) *bits* of VMEM) is resident
+per program.  Three dynamic scalars are prefetched: the capacity ``a``, the
+probe bound (64·⌈a/w⌉, the host's cap), and the precomputed first-working
+``fallback`` bucket that catches the vanishing-probability bound overrun.
+
+The probe loop is lane-synchronous: step ``i`` tests candidate
+``hash(key, i) % a`` for every unsettled lane at once (word gather + bit
+test); a block runs until all 128·BLOCK_ROWS lanes hit a working bucket —
+max-over-lanes of geometric draws with success rate w/a.  Bit-identical to
+``core/jax_lookup.dx_lookup`` and to the ``variant="32"`` host plane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .memento_lookup import DEFAULT_BLOCK_ROWS, _pad_rows
+from .primitives import gather1d, hash2
+
+_U = jnp.uint32
+
+
+def _dx_kernel(s_ref, keys_ref, words_ref, out_ref):
+    a = s_ref[0]
+    max_probes = s_ref[1]
+    fallback = s_ref[2]
+    keys = keys_ref[...].astype(_U)
+    words = words_ref[...].reshape(-1)  # (a_pad/32,) uint32 bitmap
+
+    b0 = jnp.zeros(keys.shape, jnp.int32)
+    found0 = jnp.zeros(keys.shape, jnp.bool_)
+
+    def cond(state):
+        i, _, found = state
+        return (i < max_probes) & jnp.any(~found)
+
+    def body(state):
+        i, b, found = state
+        cand = (hash2(keys, i) % a.astype(_U)).astype(jnp.int32)
+        w = gather1d(words, cand >> 5)
+        bit = (w >> (cand & 31).astype(_U)) & _U(1)
+        hit = ~found & (bit == _U(1))
+        return i + jnp.int32(1), jnp.where(hit, cand, b), found | hit
+
+    _, b, found = jax.lax.while_loop(cond, body, (jnp.int32(0), b0, found0))
+    out_ref[...] = jnp.where(found, b, fallback)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def dx_lookup(keys, words, a, max_probes, fallback, *,
+              block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """Batched DxHash lookup: keys uint32 [K] → working bucket ids int32."""
+    keys2d, k = _pad_rows(keys.astype(_U))
+    rows = keys2d.shape[0]
+    block_rows = min(block_rows, rows)
+    grid = (-(-rows // block_rows),)
+    nwords = words.shape[0]
+    shape2d = (-(-nwords // 128), 128) if nwords % 128 == 0 else (nwords, 1)
+    w2d = words.reshape(shape2d)
+
+    out = pl.pallas_call(
+        _dx_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_rows, 128), lambda i, s: (i, 0)),
+                pl.BlockSpec(shape2d, lambda i, s: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_rows, 128), lambda i, s: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(keys2d.shape, jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray([a, max_probes, fallback], jnp.int32), keys2d, w2d)
+    return out.reshape(-1)[:k]

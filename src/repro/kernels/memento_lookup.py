@@ -16,7 +16,8 @@ per step.  On TPU we express this as a block-parallel kernel:
 TPU adaptation notes (DESIGN.md §3): JumpHash's 64-bit LCG is replaced by a
 murmur3-mixed (key, step) variate quantized to 24 bits so every divide is an
 exact f32 op; the replacement "hash table" becomes vector gathers.  Chain
-following is a gather off the same table — no pointer chasing.
+following is a gather off the same table — no pointer chasing.  The hash
+arithmetic is shared with the jnp oracle via ``kernels/primitives.py``.
 
 Validated in ``interpret=True`` mode on CPU against ``ref.py`` (the pure-jnp
 oracle, itself bit-identical to the numpy host plane).
@@ -27,53 +28,16 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.hashing import GOLDEN32, np_fmix32
+from .primitives import fmix32, gather1d, hash2, jump32
+
 _U = jnp.uint32
-_GOLDEN32 = 0x9E3779B1
-_C1 = 0x85EBCA6B
-_C2 = 0xC2B2AE35
 
 DEFAULT_BLOCK_ROWS = 8  # (8, 128) keys per program = 1024 lookups
-
-
-def _fmix32(h):
-    h ^= h >> _U(16)
-    h = h * _U(_C1)
-    h ^= h >> _U(13)
-    h = h * _U(_C2)
-    h ^= h >> _U(16)
-    return h
-
-
-def _hash2(keys, seed):
-    s = _fmix32(seed.astype(_U) * _U(_GOLDEN32) + _U(1))
-    return _fmix32(keys ^ s)
-
-
-def _jump32(keys, n):
-    """Vectorized jump over a 2-D key block; n is a dynamic int32 scalar."""
-    nf = n.astype(jnp.float32)
-    b0 = jnp.zeros(keys.shape, jnp.int32)
-    j0 = jnp.zeros(keys.shape, jnp.float32)
-
-    def cond(state):
-        _, j, _ = state
-        return jnp.any(j < nf)
-
-    def body(state):
-        b, j, i = state
-        active = j < nf
-        b = jnp.where(active, j.astype(jnp.int32), b)
-        h = _fmix32(keys ^ (i.astype(_U) * _U(_GOLDEN32) + _U(0x2545F491)))
-        r = ((h >> _U(8)).astype(jnp.float32) + 1.0) * jnp.float32(2.0 ** -24)
-        jn = jnp.minimum(jnp.floor((b.astype(jnp.float32) + 1.0) / r), nf)
-        j = jnp.where(active, jn, j)
-        return b, j, i + jnp.int32(1)
-
-    b, _, _ = jax.lax.while_loop(cond, body, (b0, j0, jnp.int32(0)))
-    return b
 
 
 # ---------------------------------------------------------------------------
@@ -85,26 +49,23 @@ def _dense_kernel(n_ref, keys_ref, repl_ref, out_ref):
     keys = keys_ref[...].astype(_U)
     repl = repl_ref[...].reshape(-1)  # (cap,) int32, -1 = working
 
-    def gather(idx):
-        return jnp.take(repl, idx.reshape(-1), axis=0).reshape(idx.shape)
-
-    b = _jump32(keys, n)
+    b = jump32(keys, n)
 
     def outer_cond(b):
-        return jnp.any(gather(b) >= 0)
+        return jnp.any(gather1d(repl, b) >= 0)
 
     def outer_body(b):
-        c = gather(b)
+        c = gather1d(repl, b)
         active = c >= 0
         wb = jnp.where(active, c, 1)  # |W_b| after b was removed (Prop. V.3)
-        d = (_hash2(keys, b) % wb.astype(_U)).astype(jnp.int32)
+        d = (hash2(keys, b) % wb.astype(_U)).astype(jnp.int32)
 
         def inner_cond(d):
-            u = gather(d)
+            u = gather1d(repl, d)
             return jnp.any(active & (u >= 0) & (u >= wb))
 
         def inner_body(d):
-            u = gather(d)
+            u = gather1d(repl, d)
             follow = active & (u >= 0) & (u >= wb)  # follow only while u ≥ w_b
             return jnp.where(follow, u, d)
 
@@ -128,10 +89,7 @@ def _compact_kernel(n_ref, keys_ref, slot_b_ref, slot_c_ref, out_ref):
 
     def probe(idx):
         """repl[idx] via linear probing: returns c or -1 (working)."""
-        h0 = (_fmix32(idx.astype(_U) * _U(_GOLDEN32) + _U(5)) & mask).astype(jnp.int32)
-
-        def gather(arr, i):
-            return jnp.take(arr, i.reshape(-1), axis=0).reshape(i.shape)
+        h0 = (fmix32(idx.astype(_U) * _U(GOLDEN32) + _U(5)) & mask).astype(jnp.int32)
 
         def cond(state):
             pos, done, _ = state
@@ -139,10 +97,10 @@ def _compact_kernel(n_ref, keys_ref, slot_b_ref, slot_c_ref, out_ref):
 
         def body(state):
             pos, done, val = state
-            sb = gather(slot_b, pos)
+            sb = gather1d(slot_b, pos)
             hit = sb == idx
             empty = sb < 0
-            val = jnp.where(~done & hit, gather(slot_c, pos), val)
+            val = jnp.where(~done & hit, gather1d(slot_c, pos), val)
             done = done | hit | empty
             pos = jnp.where(done, pos, (pos + 1) % nslots)
             return pos, done, val
@@ -152,7 +110,7 @@ def _compact_kernel(n_ref, keys_ref, slot_b_ref, slot_c_ref, out_ref):
         _, _, val = jax.lax.while_loop(cond, body, (h0, done0, val0))
         return val
 
-    b = _jump32(keys, n)
+    b = jump32(keys, n)
 
     def outer_cond(b):
         return jnp.any(probe(b) >= 0)
@@ -161,7 +119,7 @@ def _compact_kernel(n_ref, keys_ref, slot_b_ref, slot_c_ref, out_ref):
         c = probe(b)
         active = c >= 0
         wb = jnp.where(active, c, 1)
-        d = (_hash2(keys, b) % wb.astype(_U)).astype(jnp.int32)
+        d = (hash2(keys, b) % wb.astype(_U)).astype(jnp.int32)
 
         def inner_cond(d):
             u = probe(d)
@@ -250,31 +208,34 @@ def build_compact_table(repl) -> tuple[jnp.ndarray, jnp.ndarray]:
 
     Slots = next power of two ≥ max(2r, 128) → load factor ≤ 0.5, so the
     expected probe chain is ~1.5 and the VMEM working set is Θ(r).
-    """
-    import numpy as np
 
-    removed = np.nonzero(np.asarray(repl) >= 0)[0]
-    r = len(removed)
+    Insertion is vectorized: each round, every still-unplaced key whose
+    current slot is free claims it (first pending key per slot wins); the
+    rest advance one slot.  Slots only ever fill, so every slot a key
+    skipped is occupied in the final table — the kernel's probe loop
+    (scan from h0 until hit or empty) finds every key.
+    """
+    repl = np.asarray(repl)
+    removed = np.nonzero(repl >= 0)[0].astype(np.int64)
+    r = int(removed.size)
     nslots = 128
     while nslots < 2 * max(r, 1):
         nslots *= 2
     slot_b = np.full((nslots,), -1, np.int32)
     slot_c = np.full((nslots,), -1, np.int32)
     mask = nslots - 1
-    for b in removed:
-        h = int(_host_fmix32(int(b) * _GOLDEN32 + 5) & mask)
-        while slot_b[h] >= 0:
-            h = (h + 1) & mask
-        slot_b[h] = b
-        slot_c[h] = int(repl[b])
+    with np.errstate(over="ignore"):
+        pos = np_fmix32(removed.astype(np.uint32) * np.uint32(GOLDEN32)
+                        + np.uint32(5)).astype(np.int64) & mask
+    pending = np.arange(r)
+    while pending.size:
+        p = pos[pending]
+        free = slot_b[p] < 0
+        cand = pending[free]
+        _, first = np.unique(p[free], return_index=True)
+        win = cand[first]
+        slot_b[pos[win]] = removed[win].astype(np.int32)
+        slot_c[pos[win]] = repl[removed[win]].astype(np.int32)
+        pending = np.setdiff1d(pending, win, assume_unique=True)
+        pos[pending] = (pos[pending] + 1) & mask
     return jnp.asarray(slot_b), jnp.asarray(slot_c)
-
-
-def _host_fmix32(h: int) -> int:
-    h &= 0xFFFFFFFF
-    h ^= h >> 16
-    h = (h * _C1) & 0xFFFFFFFF
-    h ^= h >> 13
-    h = (h * _C2) & 0xFFFFFFFF
-    h ^= h >> 16
-    return h

@@ -1,26 +1,73 @@
 """Jitted public wrappers around the Pallas lookup kernels.
 
-``memento_lookup`` picks the execution path:
+:func:`device_lookup` is the algorithm-generic entry point: it takes any
+:class:`~repro.core.protocol.DeviceImage` (Memento, Anchor, Dx, Jump) and
+dispatches to the matching kernel, so routers / placements / benchmarks are
+algorithm-pluggable end to end.
 
-  * ``table='dense'``   — Θ(n) int32 VMEM image (default; n ≤ ~3M fits VMEM),
-  * ``table='compact'`` — Θ(r) open-addressing VMEM image (beyond-paper,
-    for huge b-arrays with few removals),
-  * ``table='jnp'``     — pure-jnp fallback (no Pallas; any backend).
+Execution planes:
 
-On non-TPU backends the kernels run in interpret mode (the brief's validation
-path); on TPU they compile via Mosaic.
+  * ``plane='pallas'`` — the Pallas kernels (default).  On non-TPU backends
+    they run in interpret mode (the validation path); on TPU they compile
+    via Mosaic.
+  * ``plane='jnp'``    — the pure-jnp oracles (no Pallas; any backend).
+
+Memento additionally picks its table layout via ``table``:
+
+  * ``'dense'``   — Θ(n) int32 VMEM image (default; n ≤ ~3M fits VMEM),
+  * ``'compact'`` — Θ(r) open-addressing VMEM image (beyond-paper, for
+    huge b-arrays with few removals).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.jax_lookup import memento_lookup as _jnp_lookup
+from repro.core import jax_lookup as _jnp
+from . import anchor_lookup as _anchor
+from . import dx_lookup as _dx
+from . import jump_lookup as _jump
 from . import memento_lookup as _k
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def device_lookup(keys, image, *, plane: str = "pallas", table: str = "dense",
+                  interpret: bool | None = None, block_rows: int | None = None):
+    """Batched lookup over any DeviceImage: keys [K] → working bucket ids [K]."""
+    keys = jnp.asarray(keys, dtype=jnp.uint32)
+    if plane == "jnp":
+        return _jnp.lookup_image(keys, image)
+    if plane != "pallas":
+        raise ValueError(f"unknown plane {plane!r}")
+    if interpret is None:
+        interpret = _default_interpret()
+    kw = {"interpret": interpret}
+    if block_rows is not None:
+        kw["block_rows"] = block_rows
+
+    algo = image.algo
+    if algo == "memento":
+        repl = jnp.asarray(image.arrays["repl"], jnp.int32)
+        if table == "dense":
+            return _k.dense_lookup(keys, repl, image.n, **kw)
+        if table == "compact":
+            slot_b, slot_c = _k.build_compact_table(repl)
+            return _k.compact_lookup(keys, slot_b, slot_c, image.n, **kw)
+        raise ValueError(f"unknown table kind {table!r}")
+    if algo == "anchor":
+        return _anchor.anchor_lookup(keys, jnp.asarray(image.arrays["A"], jnp.int32),
+                                     jnp.asarray(image.arrays["K"], jnp.int32),
+                                     image.n, **kw)
+    if algo == "dx":
+        return _dx.dx_lookup(keys, jnp.asarray(image.arrays["words"], jnp.uint32),
+                             image.n, image.scalars["max_probes"],
+                             image.scalars["fallback"], **kw)
+    if algo == "jump":
+        return _jump.jump_lookup(keys, image.n, **kw)
+    raise ValueError(f"unknown device image algo {algo!r}")
 
 
 def memento_lookup(keys, repl, n, *, table: str = "dense", interpret: bool | None = None):
@@ -30,7 +77,7 @@ def memento_lookup(keys, repl, n, *, table: str = "dense", interpret: bool | Non
     if interpret is None:
         interpret = _default_interpret()
     if table == "jnp":
-        return _jnp_lookup(keys, repl, n)
+        return _jnp.memento_lookup(keys, repl, n)
     if table == "dense":
         return _k.dense_lookup(keys, repl, n, interpret=interpret)
     if table == "compact":

@@ -1,0 +1,83 @@
+"""Shared device-plane hash primitives (jnp, Pallas-safe).
+
+One implementation of the TPU-native 32-bit arithmetic (DESIGN.md §3.1),
+consumed by BOTH the pure-jnp oracles (``core/jax_lookup.py``) and the
+Pallas kernels (``kernels/*_lookup.py``) — every op here lowers cleanly
+inside a Pallas kernel body and under plain jit.
+
+Bit-identical to the numpy/scalar host plane in ``core/hashing.py`` and
+``core/jump.py``: murmur3 fmix32 mixing, 24-bit uniform variates, exact
+f32 divides.  Constants are imported from ``core/hashing`` so there is a
+single definition in the repo.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import _C1_32, _C2_32, GOLDEN32
+
+_U = jnp.uint32
+
+#: per-step salt of the jump32 variate stream (matches ``core/jump._step_u24``)
+STEP_SALT = 0x2545F491
+
+
+def fmix32(h):
+    """Murmur3 32-bit finalizer over a uint32 array (or traced scalar)."""
+    h = jnp.asarray(h).astype(_U)
+    h ^= h >> _U(16)
+    h = h * _U(_C1_32)
+    h ^= h >> _U(13)
+    h = h * _U(_C2_32)
+    h ^= h >> _U(16)
+    return h
+
+
+def hash2(keys, seed):
+    """(key, seed) hash — paper Alg. 4's ``hash(k, b)``; seed may be a traced
+    scalar (e.g. the Dx probe index) or an array (e.g. bucket ids)."""
+    s = fmix32(jnp.asarray(seed).astype(_U) * _U(GOLDEN32) + _U(1))
+    return fmix32(jnp.asarray(keys).astype(_U) ^ s)
+
+
+def step_u24(keys, step):
+    """Per-(key, step) uniform 24-bit variate — exactly representable in f32."""
+    s = jnp.asarray(step).astype(_U)
+    h = fmix32(jnp.asarray(keys).astype(_U) ^ (s * _U(GOLDEN32) + _U(STEP_SALT)))
+    return h >> _U(8)
+
+
+def jump32(keys, n):
+    """Vectorized TPU-native JumpHash: keys uint32 [...], n a dynamic scalar.
+
+    State machine identical to the 64-bit original: ``b ← j; j ← ⌊(b+1)/r⌋``
+    with ``r`` uniform in (0, 1], iterated while ``j < n``; lane-synchronous
+    (a block settles in max-over-lanes steps, E ≈ ln n).
+    """
+    keys = jnp.asarray(keys).astype(_U)
+    nf = jnp.asarray(n).astype(jnp.float32)
+    b0 = jnp.zeros(keys.shape, jnp.int32)
+    j0 = jnp.zeros(keys.shape, jnp.float32)
+
+    def cond(state):
+        _, j, _ = state
+        return jnp.any(j < nf)
+
+    def body(state):
+        b, j, i = state
+        active = j < nf
+        b = jnp.where(active, j.astype(jnp.int32), b)
+        u = step_u24(keys, i)
+        r = (u.astype(jnp.float32) + jnp.float32(1.0)) * jnp.float32(2.0 ** -24)
+        jn = jnp.minimum(jnp.floor((b.astype(jnp.float32) + jnp.float32(1.0)) / r), nf)
+        j = jnp.where(active, jn, j)
+        return b, j, i + jnp.int32(1)
+
+    b, _, _ = jax.lax.while_loop(cond, body, (b0, j0, jnp.int32(0)))
+    return b
+
+
+def gather1d(table, idx):
+    """Row gather of a flat VMEM table by a 2-D (or any-D) index block."""
+    return jnp.take(table, idx.reshape(-1), axis=0).reshape(idx.shape)

@@ -1,11 +1,13 @@
 """Elastic cluster controller + straggler mitigation (virtualized).
 
-One MementoHash instance per resource class (data shards, checkpoint
+One ConsistentHash instance per resource class (data shards, checkpoint
 buckets, serving sessions) keeps every placement consistent through node
-churn.  The controller is the piece a real deployment would wire to its
-health checker: `fail(host)` → Θ(1) state update + minimal re-placement;
-`join()` → restores the most recent failure first (the paper's recommended
-LIFO discipline keeps R small, so lookups stay at Jump speed).
+churn; the shard placement is algorithm-pluggable (`algo=` — Memento by
+default, Anchor/Dx for fixed-capacity fleets).  The controller is the
+piece a real deployment would wire to its health checker: `fail(host)` →
+Θ(1) state update + minimal re-placement; `join()` → restores the most
+recent failure first (the paper's recommended LIFO discipline keeps R
+small, so lookups stay at Jump speed).
 
 StragglerMonitor implements deadline-based gradient skipping: hosts whose
 step latency exceeds μ + k·σ get their microbatch contribution dropped and
@@ -31,14 +33,16 @@ class ClusterEvent:
 
 class ElasticCluster:
     def __init__(self, num_hosts: int, *, num_shards: int = 256,
-                 ckpt_buckets: int | None = None):
-        self.placement = ShardPlacement(num_shards, num_hosts)
+                 ckpt_buckets: int | None = None, algo: str = "memento",
+                 capacity: int | None = None):
+        self.placement = ShardPlacement(num_shards, num_hosts,
+                                        algo=algo, capacity=capacity)
         self.ckpt_memento = MementoHash(ckpt_buckets or max(num_hosts // 2, 2))
         self.events: list[ClusterEvent] = []
 
     @property
     def hosts(self) -> set[int]:
-        return self.placement.memento.working_set()
+        return self.placement.ch.working_set()
 
     def fail(self, host: int) -> dict:
         plan = self.placement.fail_host(host)
@@ -56,8 +60,10 @@ class ElasticCluster:
         return sum(e.moved for e in self.events)
 
     def state(self) -> dict:
-        m = self.placement.memento
-        return {"n": m.n, "l": m.l, "R": dict(m.R)}
+        m = self.placement.ch
+        if isinstance(m, MementoHash):  # ⟨n, R, l⟩ (paper state)
+            return {"n": m.n, "l": m.l, "R": dict(m.R)}
+        return {"size": m.size, "working": m.working}
 
 
 class StragglerMonitor:

@@ -1,4 +1,4 @@
-"""Session → replica router: MementoHash with KV-cache affinity.
+"""Session → replica router: consistent hashing with KV-cache affinity.
 
 The serving-side face of the paper: requests carry a session id (prefix /
 KV-cache identity); the router consistent-hashes sessions onto model
@@ -8,10 +8,14 @@ replicas so
   * replica failure remaps ONLY that replica's sessions (minimal disruption)
     — the rest keep their warm caches,
   * replicas added back (restored) steal only the sessions that belonged to
-    them (monotonicity), and the replica fleet can grow without bound.
+    them (monotonicity), and (with Memento/Jump) the fleet can grow without
+    bound.
 
-Bulk routing (e.g. batch admission of thousands of queued requests) runs on
-the device data plane (`repro.kernels.ops.memento_lookup`, Pallas on TPU).
+The router is algorithm-pluggable: any :class:`~repro.core.ConsistentHash`
+(Memento — the default —, Anchor, Dx, Jump) drives placement through the
+same protocol.  Bulk routing (e.g. batch admission of thousands of queued
+requests) runs on the device data plane via the algorithm's
+``device_image()`` (`repro.kernels.ops.device_lookup`, Pallas on TPU).
 """
 from __future__ import annotations
 
@@ -19,7 +23,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import MementoHash, MementoTables
+from repro.core import ConsistentHash, make_hash
 from repro.core.hashing import key_to_u32
 
 
@@ -31,54 +35,62 @@ class RouterStats:
 
 
 class SessionRouter:
-    def __init__(self, num_replicas: int, *, use_device_plane: bool = False):
-        self.memento = MementoHash(num_replicas, variant="32")
-        self.tables = MementoTables(self.memento)
+    def __init__(self, num_replicas: int, *, algo: str | ConsistentHash = "memento",
+                 capacity: int | None = None, use_device_plane: bool = False):
+        if isinstance(algo, str):
+            # variant="32": host lookups bit-identical to the device plane.
+            self.ch = make_hash(algo, num_replicas, capacity=capacity, variant="32")
+        else:
+            self.ch = algo
         self.use_device_plane = use_device_plane
         self.stats = RouterStats()
-        self._last: dict[int, int] = {}  # session → last replica (metrics)
+        self._last: dict = {}   # session id → last replica (metrics)
+        self._image = None      # cached device image; rebuilt after churn
+
+    @property
+    def memento(self) -> ConsistentHash:
+        """Back-compat alias from the Memento-only router."""
+        return self.ch
 
     # -- single-request path --------------------------------------------------
     def route(self, session_id) -> int:
-        key = key_to_u32(session_id)
-        r = self.memento.lookup(key)
+        r = self.ch.lookup(key_to_u32(session_id))
         self.stats.routed += 1
-        if self._last.get(key) == r:
+        if self._last.get(session_id) == r:
             self.stats.affinity_hits += 1
-        self._last[key] = r
+        self._last[session_id] = r
         return r
 
     # -- bulk path (device plane) ----------------------------------------------
+    def device_image(self):
+        if self._image is None:
+            self._image = self.ch.device_image()
+        return self._image
+
     def route_batch(self, session_ids: np.ndarray) -> np.ndarray:
         from repro.core.hashing import np_key_to_u32
         keys = np_key_to_u32(np.asarray(session_ids))
-        if self.use_device_plane:
-            from repro.kernels import ops
-            return np.asarray(ops.memento_lookup(keys, self.tables.repl,
-                                                 self.tables.n))
-        from repro.core.jax_lookup import memento_lookup
-        import jax.numpy as jnp
-        return np.asarray(memento_lookup(jnp.asarray(keys),
-                                         jnp.asarray(self.tables.repl),
-                                         self.tables.n))
+        from repro.kernels import ops
+        plane = "pallas" if self.use_device_plane else "jnp"
+        return np.asarray(ops.device_lookup(keys, self.device_image(), plane=plane))
 
     # -- membership ----------------------------------------------------------
     def fail_replica(self, replica: int) -> dict:
         before = dict(self._last)
-        self.memento.remove(replica)
-        self.tables.on_remove(replica)
+        self.ch.remove(replica)
+        self._image = None
         moved = {s for s, r in before.items() if r == replica}
         self.stats.moved_on_failure += len(moved)
         return {"replica": replica, "sessions_moved": len(moved)}
 
     def restore_replica(self) -> int:
-        b = self.memento.add()
-        self.tables.on_add(b)
+        b = self.ch.add()
+        self._image = None
         return b
 
     @property
     def replicas(self) -> set[int]:
-        return self.memento.working_set()
+        return self.ch.working_set()
 
 
 @dataclass

@@ -14,8 +14,8 @@ from repro.sharding.rules import default_rules
 
 
 def _mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh((1, 1), ("data", "model"))
 
 
 def test_local_dispatch_matches_global():

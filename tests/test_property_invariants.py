@@ -1,0 +1,75 @@
+"""Hypothesis property tests — random op sequences, all invariants at once.
+
+Kept separate from ``test_core_algorithms.py`` so environments without
+``hypothesis`` (an optional dev dependency, see requirements-dev.txt) skip
+these instead of failing the whole collection.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import AnchorHash, MementoHash  # noqa: E402
+
+RNG = np.random.default_rng(0)
+KEYS = [int(k) for k in RNG.integers(0, 2**63, size=400)]
+
+
+@st.composite
+def op_sequences(draw):
+    n0 = draw(st.integers(min_value=2, max_value=40))
+    ops = draw(st.lists(st.tuples(st.sampled_from(["remove", "add"]),
+                                  st.integers(0, 10**9)), max_size=40))
+    return n0, ops
+
+
+@given(op_sequences())
+@settings(max_examples=60, deadline=None)
+def test_property_memento_invariants(seq):
+    n0, ops = seq
+    m = MementoHash(n0)
+    keys = KEYS[:120]
+    prev = {k: m.lookup(k) for k in keys}
+    for op, salt in ops:
+        if op == "remove" and m.working > 1:
+            ws = sorted(m.working_set())
+            victim = ws[salt % len(ws)]
+            m.remove(victim)
+            cur = {k: m.lookup(k) for k in keys}
+            for k in keys:
+                if prev[k] != victim:
+                    assert cur[k] == prev[k]  # minimal disruption
+                else:
+                    assert cur[k] != victim
+            prev = cur
+        elif op == "add":
+            b = m.add()
+            cur = {k: m.lookup(k) for k in keys}
+            for k in keys:
+                assert cur[k] == prev[k] or cur[k] == b  # monotonicity
+            prev = cur
+        # global invariants
+        assert m.working == m.n - len(m.R)
+        ws = m.working_set()
+        assert all(v in ws for v in prev.values())
+
+
+@given(op_sequences())
+@settings(max_examples=30, deadline=None)
+def test_property_anchor_invariants(seq):
+    n0, ops = seq
+    h = AnchorHash(capacity=3 * n0 + 8, initial_node_count=n0)
+    keys = KEYS[:60]
+    for op, salt in ops:
+        if op == "remove" and h.working > 1:
+            ws = sorted(h.working_set())
+            h.remove(ws[salt % len(ws)])
+        elif op == "add" and h.R:
+            h.add()
+        ws = h.working_set()
+        assert len(ws) == h.working
+        for k in keys:
+            assert h.lookup(k) in ws
