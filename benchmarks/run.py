@@ -28,6 +28,8 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true", help="CI smoke sizes")
     ap.add_argument("--device-plane", action="store_true",
                     help="also run the batched jnp/Pallas lookup benchmark")
+    ap.add_argument("--churn", action="store_true",
+                    help="also run the per-event churn control-plane benchmark")
     args = ap.parse_args(argv)
 
     if args.quick:
@@ -68,6 +70,14 @@ def main(argv=None) -> int:
         # all four algorithms × stable / one-shot / incremental on the
         # device plane (jnp jit + Pallas), variant-32 states
         pb.bench_device_scenarios(emit)
+    if args.churn:
+        # per-event control-plane cost: epoch-delta apply vs snapshot
+        # rebuild, plus lookup availability during churn (DESIGN.md §3.5)
+        from .bench_churn import bench_churn
+        if args.quick:
+            bench_churn(emit, sizes=(512,), events=40, n_keys=1024)
+        else:
+            bench_churn(emit)
 
     RESULTS.mkdir(parents=True, exist_ok=True)
     with open(RESULTS / "bench.csv", "w", newline="") as f:

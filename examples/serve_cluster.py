@@ -94,7 +94,9 @@ def main(argv=None):
                   f"(held {len(dead.caches)} warm sessions; "
                   f"router moved {info['sessions_moved']})")
 
-        batches = sched.assign([Request(session_id=s) for s in prompts])
+        batches, overflow = sched.assign([Request(session_id=s) for s in prompts])
+        if overflow:
+            print(f"   (back-pressure: {len(overflow)} requests re-queued)")
         for rid, reqs in sorted(batches.items()):
             rep = replicas[rid]
             for req in reqs:

@@ -13,22 +13,33 @@ Device data plane:
   * :class:`DeviceImage`   — flat per-algorithm int32/uint32 device arrays
   * :class:`MementoTables` — incrementally-mirrored dense Memento image
   * :mod:`repro.core.jax_lookup` — batched jnp lookups (oracle for kernels/)
+
+Device control plane (epochs & deltas, DESIGN.md §3.5):
+  * :class:`ImageDelta`       — O(changed-words) epoch-advancing edit
+  * :func:`apply_delta`       — host (numpy) reference apply
+  * :class:`DeviceImageStore` — double-buffered on-device images + sync()
 """
 from .anchor import AnchorHash
 from .dx import DxHash
+from .image_store import DeviceImageStore, SyncStats
 from .jump import JumpHash, jump32, jump64, np_jump32
 from .memento import MementoHash, random_state
-from .protocol import ConsistentHash, DeviceImage, make_hash
+from .protocol import (ConsistentHash, DeviceImage, ImageDelta, apply_delta,
+                       make_hash)
 from .tables import MementoTables, tables_from_state
 
 __all__ = [
     "AnchorHash",
     "ConsistentHash",
     "DeviceImage",
+    "DeviceImageStore",
     "DxHash",
+    "ImageDelta",
     "JumpHash",
     "MementoHash",
     "MementoTables",
+    "SyncStats",
+    "apply_delta",
     "jump32",
     "jump64",
     "make_hash",

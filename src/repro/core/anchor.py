@@ -19,10 +19,10 @@ from __future__ import annotations
 import numpy as np
 
 from .hashing import MASK32, MASK64, fmix32, fmix64, hash2_32, hash2_64
-from .protocol import DeviceImage, round_up
+from .protocol import DeltaEmitter, DeviceImage, round_up
 
 
-class AnchorHash:
+class AnchorHash(DeltaEmitter):
     name = "anchor"
 
     def __init__(self, capacity: int, initial_node_count: int, variant: str = "64"):
@@ -44,6 +44,7 @@ class AnchorHash:
         self.L = list(range(a))
         self.K = list(range(a))
         self.R: list[int] = []  # removal stack
+        self._init_delta_log()
         for b in range(a - 1, initial_node_count - 1, -1):
             self.remove(b)
 
@@ -62,6 +63,8 @@ class AnchorHash:
         self.W[pos] = moved
         self.L[moved] = pos
         self.K[b] = moved
+        # W/L are host-only; the device image is exactly (A, K).
+        self._record({"A": {b: N}, "K": {b: moved}}, self.a)
 
     def add(self) -> int:
         if not self.R:
@@ -77,7 +80,11 @@ class AnchorHash:
         self.A[b] = 0
         self.K[b] = b
         self.N += 1
+        self._record({"A": {b: 0}, "K": {b: b}}, self.a)
         return b
+
+    def _image_n(self) -> int:
+        return self.a
 
     # -- lookup -----------------------------------------------------------------
     def lookup(self, key: int) -> int:
@@ -91,19 +98,21 @@ class AnchorHash:
             b = h
         return b
 
-    def device_image(self) -> DeviceImage:
+    def device_image(self, capacity: int | None = None) -> DeviceImage:
         """A/K image: removal timestamps + wrap successors (DESIGN.md §3.3).
 
         Lookup only ever gathers indices < a (start is ``fmix(key) % a``,
         probes are ``hash % A[b] < a``, and K values are bucket ids), so the
-        alignment padding is never read.
+        alignment padding is never read.  ``capacity`` is accepted for
+        protocol uniformity but the overall capacity ``a`` is fixed.
         """
-        pad = round_up(self.a)
+        pad = round_up(max(self.a, capacity or 0))
         A = np.zeros((pad,), dtype=np.int32)
         A[: self.a] = self.A
         K = np.arange(pad, dtype=np.int32)
         K[: self.a] = self.K
-        return DeviceImage(algo=self.name, n=self.a, arrays={"A": A, "K": K})
+        return DeviceImage(algo=self.name, n=self.a, arrays={"A": A, "K": K},
+                           epoch=self._epoch)
 
     # -- introspection -------------------------------------------------------------
     @property

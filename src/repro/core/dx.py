@@ -12,10 +12,10 @@ from __future__ import annotations
 import numpy as np
 
 from .hashing import MASK32, MASK64, hash2_32, hash2_64
-from .protocol import DeviceImage, round_up
+from .protocol import DeltaEmitter, DeviceImage, round_up
 
 
-class DxHash:
+class DxHash(DeltaEmitter):
     name = "dx"
 
     _MAX_PROBE_FACTOR = 64  # cap = factor * ceil(a/w) probes, then fallback scan
@@ -35,6 +35,14 @@ class DxHash:
         self.N = initial_node_count
         self.active = bytearray([1] * initial_node_count + [0] * (capacity - initial_node_count))
         self.R: list[int] = list(range(capacity - 1, initial_node_count - 1, -1))
+        self._fallback = 0  # first working bucket (bucket 0 starts active)
+        self._init_delta_log()
+
+    def _word(self, wi: int) -> int:
+        """Re-pack bitmap word ``wi`` (bits b&31 of buckets 32wi…32wi+31)."""
+        base = wi << 5
+        return sum(self.active[j] << (j - base)
+                   for j in range(base, min(base + 32, self.a)))
 
     def remove(self, b: int) -> None:
         if not (0 <= b < self.a) or not self.active[b]:
@@ -44,6 +52,12 @@ class DxHash:
         self.active[b] = 0
         self.R.append(b)
         self.N -= 1
+        if b == self._fallback:
+            # b was the first working bucket ⇒ everything below is inactive:
+            # resume the scan at b+1 (amortized O(a) over a whole drain)
+            self._fallback = self.active.index(1, b + 1)
+        self._record({"words": {b >> 5: self._word(b >> 5)}}, self.a,
+                     self._image_scalars())
 
     def add(self) -> int:
         if not self.R:
@@ -51,7 +65,16 @@ class DxHash:
         b = self.R.pop()
         self.active[b] = 1
         self.N += 1
+        self._fallback = min(self._fallback, b)
+        self._record({"words": {b >> 5: self._word(b >> 5)}}, self.a,
+                     self._image_scalars())
         return b
+
+    def _image_n(self) -> int:
+        return self.a
+
+    def _image_scalars(self) -> dict[str, int]:
+        return {"max_probes": self.max_probes(), "fallback": self._fallback}
 
     def max_probes(self) -> int:
         """Probe bound before the first-working fallback: 64·⌈a/w⌉."""
@@ -69,10 +92,12 @@ class DxHash:
                 return b
         raise RuntimeError("no working bucket")
 
-    def device_image(self) -> DeviceImage:
+    def device_image(self, capacity: int | None = None) -> DeviceImage:
         """Packed active bitmap (bucket b ↔ bit b&31 of word b>>5) plus the
-        dynamic probe bound and the precomputed fallback bucket — the same
-        first-working scan result the host lookup uses (DESIGN.md §3.3)."""
+        dynamic probe bound and the maintained first-working ``fallback``
+        bucket — the same first-working scan result the host lookup uses
+        (DESIGN.md §3.3).  ``capacity`` is accepted for protocol uniformity
+        but the overall capacity ``a`` is fixed."""
         bits = np.frombuffer(bytes(self.active), dtype=np.uint8).astype(np.uint32)
         words = np.zeros((round_up(-(-self.a // 32)),), dtype=np.uint32)
         idx = np.arange(self.a, dtype=np.uint64)
@@ -80,8 +105,7 @@ class DxHash:
         np.bitwise_or.at(words, (idx >> np.uint64(5)).astype(np.int64), shifted)
         return DeviceImage(
             algo=self.name, n=self.a, arrays={"words": words},
-            scalars={"max_probes": self.max_probes(),
-                     "fallback": int(np.argmax(bits))},
+            scalars=self._image_scalars(), epoch=self._epoch,
         )
 
     @property

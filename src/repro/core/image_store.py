@@ -1,0 +1,192 @@
+"""DeviceImageStore — epoch-versioned, double-buffered on-device images.
+
+The device side of the incremental control plane (DESIGN.md §3.5).  A store
+wraps one :class:`~repro.core.protocol.ConsistentHash` host state and keeps
+its :class:`~repro.core.protocol.DeviceImage` resident on device:
+
+  * **stable shapes** — arrays are allocated 128-padded with headroom
+    (``headroom×`` the initial size for the growable algorithms), so churn
+    edits never reshape device buffers; ``n`` travels as a dynamic scalar;
+  * **delta application** — ``sync()`` drains the host's
+    ``device_delta(epoch)`` and applies it as an O(changed-words) scatter
+    (functional jnp ``.at[].set`` or the Pallas apply-delta kernel,
+    ``kernels/delta_apply.py``) instead of re-transferring an O(n)
+    snapshot;
+  * **double-buffered epochs** — applying never mutates the serving
+    buffers: the epoch-N image stays valid (and keeps answering bulk
+    lookups) while epoch N+1 is materialized, then the store flips
+    atomically (a python reference swap).  ``image()`` is the current
+    front; ``previous_image()`` is the retained epoch the migration-diff
+    kernel compares against.
+
+Snapshot rebuilds still happen — but only when they must: when the host's
+bounded delta log no longer covers the store's epoch, or when Memento/Jump
+growth outruns the padded capacity (rebuilt with doubled headroom, so the
+amortized cost stays O(1) per event).  ``last_sync``/``totals`` expose
+which path ran and how many 32-bit words crossed host→device — the numbers
+the churn benchmark reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .protocol import ConsistentHash, DeviceImage, ImageDelta, required_lengths, round_up
+
+
+@dataclass
+class SyncStats:
+    """What one ``sync()`` did."""
+
+    mode: str            # "noop" | "delta" | "snapshot"
+    events: int          # membership events covered
+    words: int           # 32-bit words transferred host→device
+    epoch: int           # store epoch after the sync
+
+
+@dataclass
+class SyncTotals:
+    syncs: int = 0
+    delta_applies: int = 0
+    snapshot_rebuilds: int = 0
+    events: int = 0
+    words: int = 0
+
+
+class DeviceImageStore:
+    """Double-buffered device image of a ConsistentHash, updated by deltas."""
+
+    def __init__(self, ch: ConsistentHash, *, plane: str = "jnp",
+                 headroom: int = 2, interpret: bool | None = None):
+        if plane not in ("jnp", "pallas"):
+            raise ValueError(f"unknown plane {plane!r}")
+        self._ch = ch
+        self.plane = plane
+        self.headroom = max(1, headroom)
+        if interpret is None:
+            import jax
+            interpret = jax.default_backend() != "tpu"
+        self._interpret = interpret
+        self.totals = SyncTotals()
+        self.last_sync: SyncStats | None = None
+        self._prev: DeviceImage | None = None
+        self._rebuild()
+
+    # -- buffers ---------------------------------------------------------------
+    def _rebuild(self) -> None:
+        """Full snapshot upload (init, log overflow, or capacity growth)."""
+        import jax.numpy as jnp
+
+        if self._ch.name in ("memento", "jump"):  # unbounded growth: headroom
+            cap = round_up(max(self.headroom * self._image_size_hint(), 128))
+        else:  # fixed overall capacity a: padding beyond a is never read
+            cap = None
+        img = self._ch.device_image(capacity=cap)
+        self._front = DeviceImage(
+            algo=img.algo, n=img.n,
+            arrays={k: jnp.asarray(v) for k, v in img.arrays.items()},
+            scalars=dict(img.scalars), epoch=img.epoch)
+
+    def _image_size_hint(self) -> int:
+        return self._ch.size
+
+    @property
+    def epoch(self) -> int:
+        return self._front.epoch
+
+    @property
+    def capacity(self) -> dict[str, int]:
+        return {k: int(v.shape[0]) for k, v in self._front.arrays.items()}
+
+    def image(self) -> DeviceImage:
+        """The serving (front) image.  Immutable: syncs replace, never edit."""
+        return self._front
+
+    def previous_image(self) -> DeviceImage | None:
+        """The retained pre-sync epoch (migration-diff comparand), if any."""
+        return self._prev
+
+    # -- epoch advancement -----------------------------------------------------
+    def sync(self) -> SyncStats:
+        """Advance the device image to the host's current epoch.
+
+        Applies an O(changed-words) delta when the host log covers our
+        epoch and capacity suffices; falls back to a full snapshot rebuild
+        otherwise.  Either way the old front buffer is retained as
+        ``previous_image()`` and the flip is atomic.
+        """
+        delta = self._drain_delta()
+        if delta is not None and delta.events == 0:
+            stats = SyncStats("noop", 0, 0, self.epoch)
+        elif delta is not None and self._fits(delta):
+            old = self._front
+            self._front = self._apply(delta)
+            self._prev = old
+            stats = SyncStats("delta", delta.events, delta.num_words(),
+                              self.epoch)
+            self.totals.delta_applies += 1
+        else:
+            old = self._front
+            events = getattr(self._ch, "epoch", old.epoch) - old.epoch
+            self._rebuild()
+            self._prev = old
+            words = sum(int(v.size) for v in self._front.arrays.values()) + 1
+            stats = SyncStats("snapshot", events, words, self.epoch)
+            self.totals.snapshot_rebuilds += 1
+        self.totals.syncs += 1
+        self.totals.events += stats.events
+        self.totals.words += stats.words
+        self.last_sync = stats
+        return stats
+
+    def _drain_delta(self) -> ImageDelta | None:
+        ch = self._ch
+        if not hasattr(ch, "device_delta"):
+            return None  # non-emitting implementation: snapshots only
+        return ch.device_delta(self._front.epoch)
+
+    def _fits(self, delta: ImageDelta) -> bool:
+        caps = self.capacity
+        return all(caps.get(name, 0) >= need
+                   for name, need in required_lengths(delta.algo, delta.n).items())
+
+    def _apply(self, delta: ImageDelta) -> DeviceImage:
+        from repro.kernels.delta_apply import scatter_update
+
+        arrays = {}
+        for name, arr in self._front.arrays.items():
+            if name in delta.updates and len(delta.updates[name][0]):
+                idx, vals = delta.updates[name]
+                arrays[name] = scatter_update(arr, idx, vals, plane=self.plane,
+                                              interpret=self._interpret)
+            else:
+                arrays[name] = arr  # untouched: shared with the old epoch
+        return DeviceImage(algo=delta.algo, n=delta.n, arrays=arrays,
+                           scalars=dict(delta.scalars), epoch=delta.epoch)
+
+    # -- data plane ------------------------------------------------------------
+    def lookup(self, keys, *, plane: str | None = None, **kw) -> np.ndarray:
+        """Bulk lookup against the front image (jitted jnp or Pallas).
+
+        The jnp path compiles once per (algo, shapes); the store's stable
+        padded capacities make every subsequent epoch a cache hit.
+        Defaults to the store's configured apply plane.
+        """
+        plane = plane or self.plane
+        if plane == "jnp" and not kw:
+            from repro.core.jax_lookup import lookup_image_jit
+
+            return np.asarray(lookup_image_jit(keys, self._front))
+        from repro.kernels import ops
+
+        return np.asarray(ops.device_lookup(
+            keys, self._front, plane=plane, **kw))
+
+    def migration_diff(self, keys, *, plane: str = "jnp", **kw):
+        """Moved-key mask between the retained epoch and the front epoch."""
+        from repro.kernels.migrate import migration_diff
+
+        if self._prev is None:
+            raise ValueError("no previous epoch retained (sync() first)")
+        return migration_diff(keys, self._prev, self._front, plane=plane, **kw)

@@ -16,6 +16,8 @@ geometric O(a/w) probe count.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -120,20 +122,47 @@ def dx_lookup(keys, words, a, max_probes, fallback):
     return jnp.where(found, b, jnp.asarray(fallback, jnp.int32))
 
 
+def lookup_dispatch(algo, keys, arrays, scalars):
+    """Batched lookup from (arrays, layout-ordered scalars) — every operand
+    may be traced, so one jitted program serves ANY epoch of a given shape
+    (``n`` and friends travel as dynamic scalars, not compile-time
+    constants)."""
+    if algo == "memento":
+        return memento_lookup(keys, arrays["repl"], scalars[0])
+    if algo == "anchor":
+        return anchor_lookup(keys, arrays["A"], arrays["K"], scalars[0])
+    if algo == "dx":
+        return dx_lookup(keys, arrays["words"], scalars[0], scalars[1],
+                         scalars[2])
+    if algo == "jump":
+        return jump32(keys, scalars[0])
+    raise ValueError(f"unknown device image algo {algo!r}")
+
+
 def lookup_image(keys, image):
-    """Dispatch a batched jnp lookup over any :class:`DeviceImage`."""
+    """Dispatch a batched jnp lookup over any :class:`DeviceImage` (eager)."""
+    from repro.core.protocol import image_scalar_vec
+
     keys = jnp.asarray(keys, dtype=jnp.uint32)
-    if image.algo == "memento":
-        return memento_lookup(keys, jnp.asarray(image.arrays["repl"]), image.n)
-    if image.algo == "anchor":
-        return anchor_lookup(keys, jnp.asarray(image.arrays["A"]),
-                             jnp.asarray(image.arrays["K"]), image.n)
-    if image.algo == "dx":
-        return dx_lookup(keys, jnp.asarray(image.arrays["words"]), image.n,
-                         image.scalars["max_probes"], image.scalars["fallback"])
-    if image.algo == "jump":
-        return jump32(keys, image.n)
-    raise ValueError(f"unknown device image algo {image.algo!r}")
+    arrays = {k: jnp.asarray(v) for k, v in image.arrays.items()}
+    return lookup_dispatch(image.algo, keys, arrays, image_scalar_vec(image))
+
+
+@functools.partial(jax.jit, static_argnames=("algo",))
+def _lookup_image_jit(keys, arrays, scalars, *, algo):
+    return lookup_dispatch(algo, keys, arrays, scalars)
+
+
+def lookup_image_jit(keys, image):
+    """Jitted :func:`lookup_image`: compiles once per (algo, shapes) and is
+    reused across epochs — the serving path of the epoch store, where
+    stable 128-padded capacities make every churn event shape-preserving."""
+    from repro.core.protocol import image_scalar_vec
+
+    keys = jnp.asarray(keys, dtype=jnp.uint32)
+    arrays = {k: jnp.asarray(v) for k, v in image.arrays.items()}
+    scalars = tuple(jnp.asarray(s, jnp.int32) for s in image_scalar_vec(image))
+    return _lookup_image_jit(keys, arrays, scalars, algo=image.algo)
 
 
 def memento_lookup_hosted(keys, memento_tables):

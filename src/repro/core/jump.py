@@ -14,7 +14,7 @@ from __future__ import annotations
 import numpy as np
 
 from .hashing import GOLDEN32, LCG_MULT, MASK32, MASK64, np_fmix32, fmix32
-from .protocol import DeviceImage
+from .protocol import DeltaEmitter, DeviceImage
 
 
 def jump64(key: int, num_buckets: int) -> int:
@@ -73,7 +73,7 @@ def np_jump32(keys: np.ndarray, num_buckets: int) -> np.ndarray:
     return b
 
 
-class JumpHash:
+class JumpHash(DeltaEmitter):
     """Stateful wrapper exposing the uniform engine API (LIFO-only resizes)."""
 
     name = "jump"
@@ -89,12 +89,14 @@ class JumpHash:
             raise ValueError(f"unknown variant {variant!r}")
         self.variant = variant
         self.n = initial_node_count
+        self._init_delta_log()
 
     def lookup(self, key: int) -> int:
         return self._fn(key, self.n)
 
     def add(self) -> int:
         self.n += 1
+        self._record({}, self.n)  # the whole delta is the new n
         return self.n - 1
 
     def remove(self, b: int) -> None:
@@ -103,6 +105,10 @@ class JumpHash:
         if self.n == 1:
             raise ValueError("cannot remove the last bucket")
         self.n -= 1
+        self._record({}, self.n)
+
+    def _image_n(self) -> int:
+        return self.n
 
     @property
     def size(self) -> int:
@@ -118,6 +124,6 @@ class JumpHash:
     def memory_bytes(self) -> int:
         return 8  # a single counter
 
-    def device_image(self) -> DeviceImage:
+    def device_image(self, capacity: int | None = None) -> DeviceImage:
         """Stateless: the image is just the dynamic n (lookup = jump32)."""
-        return DeviceImage(algo=self.name, n=self.n)
+        return DeviceImage(algo=self.name, n=self.n, epoch=self._epoch)

@@ -14,10 +14,10 @@ import numpy as np
 
 from .hashing import MASK32, MASK64, hash2_32, hash2_64
 from .jump import jump32, jump64
-from .protocol import DeviceImage, round_up
+from .protocol import DeltaEmitter, DeviceImage, round_up
 
 
-class MementoHash:
+class MementoHash(DeltaEmitter):
     name = "memento"
 
     def __init__(self, initial_node_count: int, variant: str = "64"):
@@ -28,6 +28,7 @@ class MementoHash:
         self.l = self.n
         self.R: dict[int, tuple[int, int]] = {}
         self.variant = variant
+        self._init_delta_log()
         if variant == "64":
             self._jump, self._hash2, self._mask = jump64, hash2_64, MASK64
         elif variant == "32":
@@ -64,12 +65,15 @@ class MementoHash:
             raise ValueError("cannot remove the last working bucket")
         if b == self.n - 1 and not self.R:
             # LIFO removal: shrink the b-array, stay in the Jump regime.
+            # repl[n-1] was -1 (working) and stays -1: the delta is just n.
             self.n -= 1
             self.l = self.n
+            self._record({}, self.n)
         else:
             w = self.working  # before this removal
             self.R[b] = (w - 1, self.l)  # ⟨b → w−1, l⟩  (Prop. V.3: c = new w)
             self.l = b
+            self._record({"repl": {b: w - 1}}, self.n)
 
     # -- Alg. 3 (Add) ---------------------------------------------------------
     def add(self) -> int:
@@ -77,18 +81,30 @@ class MementoHash:
             b = self.n  # append to the tail
             self.n += 1
             self.l = self.n
+            # repl beyond the old n is already -1: the delta is just n (the
+            # image store rebuilds only when n outgrows its padded buffer).
+            self._record({}, self.n)
             return b
         b = self.l  # restore the last removed bucket (untangles chains)
         _, p = self.R.pop(b)
         self.l = p
+        self._record({"repl": {b: -1}}, self.n)
         return b
 
-    def device_image(self) -> DeviceImage:
-        """Dense repl image: repl[b] = |W_b| if removed else -1 (DESIGN.md §3.2)."""
-        repl = np.full((round_up(self.n),), -1, dtype=np.int32)
+    def _image_n(self) -> int:
+        return self.n
+
+    def device_image(self, capacity: int | None = None) -> DeviceImage:
+        """Dense repl image: repl[b] = |W_b| if removed else -1 (DESIGN.md §3.2).
+
+        ``capacity`` requests extra headroom (still 128-padded) so delta
+        appliers can grow ``n`` in place without reallocating.
+        """
+        repl = np.full((round_up(max(self.n, capacity or 0)),), -1, dtype=np.int32)
         for b, (c, _p) in self.R.items():
             repl[b] = c
-        return DeviceImage(algo=self.name, n=self.n, arrays={"repl": repl})
+        return DeviceImage(algo=self.name, n=self.n, arrays={"repl": repl},
+                           epoch=self._epoch)
 
     # -- Alg. 4 (Lookup) -------------------------------------------------------
     def lookup(self, key) -> int:

@@ -13,8 +13,15 @@ need.  One image format serves three consumers:
     interpret mode elsewhere),
   * tests/benchmarks                   — cross-plane equivalence sweeps.
 
-Images are *snapshots*: rebuild (or incrementally mirror, see
-``core/tables.py``) after membership changes.  Device lookups are
+Device control plane (DESIGN.md §3.5): membership churn is epoch-versioned.
+Every ``remove()``/``add()`` bumps the algorithm's ``epoch`` and appends an
+O(changed-words) record to a bounded delta log; ``device_delta(since)``
+composes the records after ``since`` into one :class:`ImageDelta` —
+scatter indices/values per named array plus the new dynamic scalars.  A
+:class:`~repro.core.image_store.DeviceImageStore` applies deltas to
+double-buffered on-device arrays and flips epochs atomically, so bulk
+lookups keep serving epoch N while N+1 is applied; images built at a given
+epoch stay immutable snapshots of that epoch.  Device lookups are
 bit-identical to the host ``lookup`` of the TPU-native ``variant="32"``
 state; the default ``variant="64"`` remains paper-faithful host-only.
 """
@@ -39,18 +46,186 @@ class DeviceImage:
     * ``n``       — the dynamic size scalar (b-array size for Memento/Jump,
       overall capacity ``a`` for Anchor/Dx),
     * ``arrays``  — named flat int32/uint32 arrays, lengths 128-padded,
-    * ``scalars`` — extra dynamic int scalars (e.g. Dx probe bound).
+    * ``scalars`` — extra dynamic int scalars (e.g. Dx probe bound),
+    * ``epoch``   — membership epoch this image snapshots (one per
+      remove/add event since construction of the host state).
     """
 
     algo: str
     n: int
     arrays: dict[str, np.ndarray] = field(default_factory=dict)
     scalars: dict[str, int] = field(default_factory=dict)
+    epoch: int = 0
+
+
+@dataclass
+class ImageDelta:
+    """O(changed-words) edit advancing a :class:`DeviceImage` one or more
+    epochs.
+
+    * ``algo``       — dispatch key (must match the image's),
+    * ``base_epoch`` — epoch of the image the delta applies to,
+    * ``epoch``      — epoch of the image after applying,
+    * ``n``          — the new dynamic size scalar,
+    * ``updates``    — per array name, ``(indices int32[k], values[k])``
+      scatter pairs (last-write-wins composition of every event in
+      ``(base_epoch, epoch]``),
+    * ``scalars``    — new values of the image's dynamic scalars.
+
+    Jump's delta is just the new ``n``; Memento scatters ≤ 1 word per
+    event, Anchor 2, Dx 1 (one bitmap word) — versus the O(n) arrays a
+    full snapshot re-transfers.
+    """
+
+    algo: str
+    base_epoch: int
+    epoch: int
+    n: int
+    updates: dict[str, tuple[np.ndarray, np.ndarray]] = field(default_factory=dict)
+    scalars: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def events(self) -> int:
+        return self.epoch - self.base_epoch
+
+    def num_words(self) -> int:
+        """Host→device scatter payload in 32-bit words (indices + values)."""
+        return sum(2 * len(idx) for idx, _ in self.updates.values())
+
+
+#: per-algorithm device image layout: (scalar names, table array names).
+#: ``n`` is always the first scalar; the rest index ``image.scalars``.
+IMAGE_LAYOUT: dict[str, tuple[tuple[str, ...], tuple[str, ...]]] = {
+    "memento": (("n",), ("repl",)),
+    "anchor": (("n",), ("A", "K")),
+    "dx": (("n", "max_probes", "fallback"), ("words",)),
+    "jump": (("n",), ()),
+}
+
+
+def image_scalar_vec(image: DeviceImage) -> list[int]:
+    """The image's dynamic scalars in layout order (``n`` first)."""
+    names = IMAGE_LAYOUT[image.algo][0]
+    return [int(image.n)] + [int(image.scalars[s]) for s in names[1:]]
+
+
+def required_lengths(algo: str, n: int) -> dict[str, int]:
+    """Minimum array lengths a lookup at size ``n`` may gather from."""
+    if algo == "memento":
+        return {"repl": n}
+    if algo == "anchor":
+        return {"A": n, "K": n}
+    if algo == "dx":
+        return {"words": -(-n // 32)}
+    if algo == "jump":
+        return {}
+    raise ValueError(f"unknown algo {algo!r}")
+
+
+def apply_delta(image: DeviceImage, delta: ImageDelta) -> DeviceImage:
+    """Host-side (numpy) reference apply: returns a NEW image at
+    ``delta.epoch``; ``image`` is left untouched (double-buffer semantics).
+
+    Raises if the delta does not chain onto the image's epoch, or if the
+    new ``n`` outgrows an array the delta scatters into (the caller must
+    fall back to a fresh snapshot at larger capacity — see
+    ``DeviceImageStore``).
+    """
+    if delta.algo != image.algo:
+        raise ValueError(f"delta algo {delta.algo!r} != image {image.algo!r}")
+    if delta.base_epoch != image.epoch:
+        raise ValueError(
+            f"delta base epoch {delta.base_epoch} != image epoch {image.epoch}")
+    needed = required_lengths(delta.algo, delta.n)
+    arrays = {}
+    for name, arr in image.arrays.items():
+        if needed.get(name, 0) > arr.shape[0]:
+            raise ValueError(f"delta outgrows array {name!r} "
+                             f"({arr.shape[0]} < {needed[name]})")
+        if name in delta.updates:
+            idx, vals = delta.updates[name]
+            if len(idx) and int(idx.max()) >= arr.shape[0]:
+                raise ValueError(f"delta outgrows array {name!r}")
+            arr = arr.copy()
+            arr[idx] = vals.astype(arr.dtype)
+        arrays[name] = arr
+    return DeviceImage(algo=image.algo, n=delta.n, arrays=arrays,
+                       scalars=dict(delta.scalars) or dict(image.scalars),
+                       epoch=delta.epoch)
+
+
+class DeltaEmitter:
+    """Mixin: epoch counter + bounded per-event delta log (DESIGN.md §3.5).
+
+    Implementations call ``_init_delta_log()`` once and then
+    ``_record(updates, n, scalars)`` after every committed membership
+    event, where ``updates`` maps array name → {flat index: new value}.
+    ``device_delta(since)`` composes the log suffix into one
+    :class:`ImageDelta`; when ``since`` predates the log window it returns
+    ``None`` — the caller must rebuild from a fresh ``device_image()``.
+    """
+
+    _DELTA_LOG_CAP = 8192
+
+    def _init_delta_log(self) -> None:
+        self._epoch = 0
+        self._delta_log: list = []
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def _record(self, updates: dict[str, dict[int, int]], n: int,
+                scalars: dict[str, int] | None = None) -> None:
+        self._epoch += 1
+        self._delta_log.append((self._epoch, updates, n, scalars or {}))
+        if len(self._delta_log) > self._DELTA_LOG_CAP:
+            # drop the oldest half: amortized O(1) per event, and readers
+            # that far behind need a snapshot rebuild anyway
+            del self._delta_log[: len(self._delta_log) // 2]
+
+    def device_delta(self, since_epoch: int):
+        """Compose every event in ``(since_epoch, epoch]`` into one delta.
+
+        O(events-behind), NOT O(log): log entries hold contiguous epochs
+        ending at ``epoch``, so the suffix is an index computation.
+        Returns ``None`` when ``since_epoch`` has fallen out of the bounded
+        log (snapshot rebuild required).  An up-to-date caller gets an
+        empty delta (``events == 0``).
+        """
+        if since_epoch > self._epoch:
+            raise ValueError(f"since_epoch {since_epoch} is in the future "
+                             f"(current epoch {self._epoch})")
+        if since_epoch < self._epoch - len(self._delta_log):
+            return None  # out of the log window
+        merged: dict[str, dict[int, int]] = {}
+        n = getattr(self, "_image_n")()
+        scalars: dict[str, int] = dict(getattr(self, "_image_scalars")())
+        start = len(self._delta_log) - (self._epoch - since_epoch)
+        for _epoch, updates, _ev_n, _ev_scalars in self._delta_log[start:]:
+            for name, edits in updates.items():
+                merged.setdefault(name, {}).update(edits)
+        updates = {
+            name: (np.fromiter(edits.keys(), dtype=np.int32, count=len(edits)),
+                   np.fromiter(edits.values(), dtype=np.int64,
+                               count=len(edits)).astype(np.int32))
+            for name, edits in merged.items()
+        }
+        return ImageDelta(algo=self.name, base_epoch=since_epoch,
+                          epoch=self._epoch, n=n, updates=updates,
+                          scalars=scalars)
+
+    # -- per-algorithm hooks -------------------------------------------------
+    def _image_n(self) -> int:
+        raise NotImplementedError
+
+    def _image_scalars(self) -> dict[str, int]:
+        return {}
 
 
 @runtime_checkable
 class ConsistentHash(Protocol):
-    """Uniform algorithm API: host ops + a flat device image."""
+    """Uniform algorithm API: host ops + a flat device image + epoch deltas."""
 
     name: str
 
@@ -70,7 +245,12 @@ class ConsistentHash(Protocol):
 
     def memory_bytes(self) -> int: ...
 
-    def device_image(self) -> DeviceImage: ...
+    def device_image(self, capacity: int | None = None) -> DeviceImage: ...
+
+    @property
+    def epoch(self) -> int: ...
+
+    def device_delta(self, since_epoch: int) -> ImageDelta | None: ...
 
 
 def make_hash(algo: str, initial_node_count: int, *, capacity: int | None = None,

@@ -13,6 +13,12 @@ TPU lane alignment) so that device buffers keep a stable shape across
 cluster resizes — ``n`` travels as a dynamic scalar.  Updates are O(1)
 in-place mirrors of Alg. 2/3; ``version`` bumps let cached device copies
 invalidate.
+
+Superseded for device use by the per-algorithm epoch deltas
+(``protocol.DeltaEmitter`` + ``core/image_store.DeviceImageStore``,
+DESIGN.md §3.5), which generalize this Memento-only host mirror to all
+four algorithms and ship O(changed-words) scatters to the device.  Kept
+as the host-side mirror utility.
 """
 from __future__ import annotations
 

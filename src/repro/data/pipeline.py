@@ -23,15 +23,26 @@ from repro.core.hashing import np_hash2_32
 
 
 class ShardPlacement:
-    """shard-id → host-bucket map driven by any ConsistentHash (Memento default)."""
+    """shard-id → host-bucket map driven by any ConsistentHash (Memento default).
+
+    Movement plans (``fail_host``/``add_host``) run on the device plane when
+    the state is TPU-native (``variant="32"``): the epoch-N and epoch-N+1
+    images are diffed by the fused migration kernel
+    (:func:`repro.kernels.migrate.migration_diff`) instead of per-shard host
+    loops, and membership events reach the device as O(changed-words) deltas
+    through a :class:`~repro.core.DeviceImageStore` (DESIGN.md §3.5).
+    """
 
     def __init__(self, num_shards: int, num_hosts: int, variant: str = "32",
-                 algo: str | ConsistentHash = "memento", capacity: int | None = None):
+                 algo: str | ConsistentHash = "memento", capacity: int | None = None,
+                 plane: str = "jnp"):
         self.num_shards = num_shards
+        self.plane = plane
         if isinstance(algo, str):
             self.ch = make_hash(algo, num_hosts, capacity=capacity, variant=variant)
         else:
             self.ch = algo
+        self._store = None
 
     @property
     def memento(self) -> ConsistentHash:
@@ -50,8 +61,55 @@ class ShardPlacement:
     def shards_for_host(self, host: int) -> list[int]:
         return [s for s in range(self.num_shards) if self.host_of(s) == host]
 
+    # -- device-plane migration plans ----------------------------------------
+    def _device_ready(self) -> bool:
+        return (getattr(self.ch, "variant", None) == "32"
+                and hasattr(self.ch, "device_delta"))
+
+    def image_store(self):
+        from repro.core import DeviceImageStore
+        if self._store is None:
+            self._store = DeviceImageStore(self.ch, plane=self.plane)
+        return self._store
+
+    def _diff_epochs(self):
+        """Sync the device image over the last event and diff the epochs."""
+        store = self.image_store()
+        store.sync()
+        keys = np.arange(self.num_shards, dtype=np.uint32)
+        return store.migration_diff(keys, plane=self.plane)
+
     def fail_host(self, host: int) -> dict:
-        """Remove a host; returns the movement plan (only its shards move)."""
+        """Remove a host; returns the movement plan (only its shards move).
+
+        With a ``variant="32"`` state the before/after placements come from
+        the fused migration-diff kernel over the double-buffered epochs —
+        no per-shard host loop, no image rebuild.
+        """
+        if not self._device_ready():
+            return self._fail_host_hostplane(host)
+        self.image_store().sync()  # make sure the device is at this epoch
+        self.ch.remove(host)
+        d = self._diff_epochs()
+        moved = {int(s): int(d.new[s]) for s in np.nonzero(d.moved)[0]}
+        stayed = int(((d.old != host) & ~d.moved).sum())
+        return {"moved": moved, "stayed": stayed,
+                "minimal": stayed == self.num_shards - len(moved)
+                and all(int(d.old[s]) == host for s in moved)}
+
+    def add_host(self) -> dict:
+        if not self._device_ready():
+            return self._add_host_hostplane()
+        self.image_store().sync()
+        host = self.ch.add()
+        d = self._diff_epochs()
+        moved = {int(s): host for s in np.nonzero(d.moved)[0]
+                 if int(d.new[s]) == host}
+        monotone = bool(np.all(~d.moved | (d.new == host)))
+        return {"host": host, "moved": moved, "monotone": monotone}
+
+    # -- host-plane fallback (variant="64" / non-emitting states) -------------
+    def _fail_host_hostplane(self, host: int) -> dict:
         before = {s: self.host_of(s) for s in range(self.num_shards)}
         self.ch.remove(host)
         moved = {s: self.host_of(s) for s in range(self.num_shards)
@@ -61,7 +119,7 @@ class ShardPlacement:
         return {"moved": moved, "stayed": stayed,
                 "minimal": stayed == self.num_shards - len(moved)}
 
-    def add_host(self) -> dict:
+    def _add_host_hostplane(self) -> dict:
         before = {s: self.host_of(s) for s in range(self.num_shards)}
         host = self.ch.add()
         moved = {s: host for s in range(self.num_shards)

@@ -31,12 +31,9 @@ from .primitives import fmix32, gather1d, hash2
 _U = jnp.uint32
 
 
-def _anchor_kernel(a_ref, keys_ref, A_ref, K_ref, out_ref):
-    a = a_ref[0]
-    keys = keys_ref[...].astype(_U)
-    A = A_ref[...].reshape(-1)  # (a_pad,) int32: 0 = working, else |W| at removal
-    K = K_ref[...].reshape(-1)  # (a_pad,) int32: wrap successor
-
+def anchor_body(keys, A, K, a):
+    """Kernel-side Anchor lookup body over flat VMEM A/K (shared with the
+    fused migration-diff kernel in ``kernels/migrate.py``)."""
     b = (fmix32(keys) % a.astype(_U)).astype(jnp.int32)
 
     def outer_cond(b):
@@ -58,7 +55,14 @@ def _anchor_kernel(a_ref, keys_ref, A_ref, K_ref, out_ref):
         h = jax.lax.while_loop(inner_cond, inner_body, h)
         return jnp.where(active, h, b)
 
-    out_ref[...] = jax.lax.while_loop(outer_cond, outer_body, b)
+    return jax.lax.while_loop(outer_cond, outer_body, b)
+
+
+def _anchor_kernel(a_ref, keys_ref, A_ref, K_ref, out_ref):
+    keys = keys_ref[...].astype(_U)
+    A = A_ref[...].reshape(-1)  # (a_pad,) int32: 0 = working, else |W| at removal
+    K = K_ref[...].reshape(-1)  # (a_pad,) int32: wrap successor
+    out_ref[...] = anchor_body(keys, A, K, a_ref[0])
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -28,13 +28,9 @@ from .primitives import gather1d, hash2
 _U = jnp.uint32
 
 
-def _dx_kernel(s_ref, keys_ref, words_ref, out_ref):
-    a = s_ref[0]
-    max_probes = s_ref[1]
-    fallback = s_ref[2]
-    keys = keys_ref[...].astype(_U)
-    words = words_ref[...].reshape(-1)  # (a_pad/32,) uint32 bitmap
-
+def dx_body(keys, words, a, max_probes, fallback):
+    """Kernel-side Dx lookup body over the flat VMEM bitmap (shared with the
+    fused migration-diff kernel in ``kernels/migrate.py``)."""
     b0 = jnp.zeros(keys.shape, jnp.int32)
     found0 = jnp.zeros(keys.shape, jnp.bool_)
 
@@ -51,7 +47,13 @@ def _dx_kernel(s_ref, keys_ref, words_ref, out_ref):
         return i + jnp.int32(1), jnp.where(hit, cand, b), found | hit
 
     _, b, found = jax.lax.while_loop(cond, body, (jnp.int32(0), b0, found0))
-    out_ref[...] = jnp.where(found, b, fallback)
+    return jnp.where(found, b, fallback)
+
+
+def _dx_kernel(s_ref, keys_ref, words_ref, out_ref):
+    keys = keys_ref[...].astype(_U)
+    words = words_ref[...].reshape(-1)  # (a_pad/32,) uint32 bitmap
+    out_ref[...] = dx_body(keys, words, s_ref[0], s_ref[1], s_ref[2])
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

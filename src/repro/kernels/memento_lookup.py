@@ -44,11 +44,12 @@ DEFAULT_BLOCK_ROWS = 8  # (8, 128) keys per program = 1024 lookups
 # Dense-table kernel
 # ---------------------------------------------------------------------------
 
-def _dense_kernel(n_ref, keys_ref, repl_ref, out_ref):
-    n = n_ref[0]
-    keys = keys_ref[...].astype(_U)
-    repl = repl_ref[...].reshape(-1)  # (cap,) int32, -1 = working
+def dense_body(keys, repl, n):
+    """Kernel-side dense lookup body: keys block + flat VMEM repl + dynamic n.
 
+    Shared between the lookup kernel and the fused migration-diff kernel
+    (``kernels/migrate.py``), which runs it once per epoch image.
+    """
     b = jump32(keys, n)
 
     def outer_cond(b):
@@ -72,7 +73,13 @@ def _dense_kernel(n_ref, keys_ref, repl_ref, out_ref):
         d = jax.lax.while_loop(inner_cond, inner_body, d)
         return jnp.where(active, d, b)
 
-    out_ref[...] = jax.lax.while_loop(outer_cond, outer_body, b)
+    return jax.lax.while_loop(outer_cond, outer_body, b)
+
+
+def _dense_kernel(n_ref, keys_ref, repl_ref, out_ref):
+    keys = keys_ref[...].astype(_U)
+    repl = repl_ref[...].reshape(-1)  # (cap,) int32, -1 = working
+    out_ref[...] = dense_body(keys, repl, n_ref[0])
 
 
 # ---------------------------------------------------------------------------

@@ -81,3 +81,9 @@ def jump32(keys, n):
 def gather1d(table, idx):
     """Row gather of a flat VMEM table by a 2-D (or any-D) index block."""
     return jnp.take(table, idx.reshape(-1), axis=0).reshape(idx.shape)
+
+
+def table_shape2d(pad: int) -> tuple[int, int]:
+    """VMEM layout of a flat length-``pad`` table: (rows, 128) lanes when
+    128-aligned (every DeviceImage array is), else a thin (pad, 1) column."""
+    return (-(-pad // 128), 128) if pad % 128 == 0 else (pad, 1)

@@ -2,8 +2,10 @@
 
 One ConsistentHash instance per resource class (data shards, checkpoint
 buckets, serving sessions) keeps every placement consistent through node
-churn; the shard placement is algorithm-pluggable (`algo=` — Memento by
-default, Anchor/Dx for fixed-capacity fleets).  The controller is the
+churn; both the shard AND the checkpoint-bucket placement follow the one
+`algo=` choice (Memento by default, Anchor/Dx for fixed-capacity fleets),
+and movement plans come from the device-plane migration diff
+(DESIGN.md §3.5) on TPU-native states.  The controller is the
 piece a real deployment would wire to its health checker: `fail(host)` →
 Θ(1) state update + minimal re-placement; `join()` → restores the most
 recent failure first (the paper's recommended LIFO discipline keeps R
@@ -20,7 +22,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import MementoHash
+from repro.core import MementoHash, make_hash
 from repro.data.pipeline import ShardPlacement
 
 
@@ -37,8 +39,16 @@ class ElasticCluster:
                  capacity: int | None = None):
         self.placement = ShardPlacement(num_shards, num_hosts,
                                         algo=algo, capacity=capacity)
-        self.ckpt_memento = MementoHash(ckpt_buckets or max(num_hosts // 2, 2))
+        # checkpoint-bucket placement follows the SAME algo= choice as the
+        # shard placement (it used to hardwire MementoHash).
+        nb = ckpt_buckets or max(num_hosts // 2, 2)
+        self.ckpt_ch = make_hash(algo, nb, capacity=capacity and max(capacity, nb))
         self.events: list[ClusterEvent] = []
+
+    @property
+    def ckpt_memento(self):
+        """Back-compat alias from the Memento-only controller."""
+        return self.ckpt_ch
 
     @property
     def hosts(self) -> set[int]:
@@ -60,10 +70,15 @@ class ElasticCluster:
         return sum(e.moved for e in self.events)
 
     def state(self) -> dict:
+        """Protocol-generic controller state (plus Memento's ⟨n, R, l⟩)."""
         m = self.placement.ch
+        st = {"algo": m.name, "size": m.size, "working": m.working,
+              "epoch": getattr(m, "epoch", 0),
+              "ckpt": {"algo": self.ckpt_ch.name, "size": self.ckpt_ch.size,
+                       "working": self.ckpt_ch.working}}
         if isinstance(m, MementoHash):  # ⟨n, R, l⟩ (paper state)
-            return {"n": m.n, "l": m.l, "R": dict(m.R)}
-        return {"size": m.size, "working": m.working}
+            st.update({"n": m.n, "l": m.l, "R": dict(m.R)})
+        return st
 
 
 class StragglerMonitor:

@@ -14,16 +14,20 @@ replicas so
 The router is algorithm-pluggable: any :class:`~repro.core.ConsistentHash`
 (Memento — the default —, Anchor, Dx, Jump) drives placement through the
 same protocol.  Bulk routing (e.g. batch admission of thousands of queued
-requests) runs on the device data plane via the algorithm's
-``device_image()`` (`repro.kernels.ops.device_lookup`, Pallas on TPU).
+requests) runs on the device data plane through a
+:class:`~repro.core.DeviceImageStore`: ``fail_replica``/``restore_replica``
+push O(changed-words) epoch deltas to the device instead of nulling and
+rebuilding the O(n) image (DESIGN.md §3.5), and lookups keep serving the
+old epoch until the flip.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import ConsistentHash, make_hash
+from repro.core import ConsistentHash, DeviceImageStore, make_hash
 from repro.core.hashing import key_to_u32
 
 
@@ -36,7 +40,8 @@ class RouterStats:
 
 class SessionRouter:
     def __init__(self, num_replicas: int, *, algo: str | ConsistentHash = "memento",
-                 capacity: int | None = None, use_device_plane: bool = False):
+                 capacity: int | None = None, use_device_plane: bool = False,
+                 max_sessions: int = 1_000_000):
         if isinstance(algo, str):
             # variant="32": host lookups bit-identical to the device plane.
             self.ch = make_hash(algo, num_replicas, capacity=capacity, variant="32")
@@ -44,8 +49,11 @@ class SessionRouter:
             self.ch = algo
         self.use_device_plane = use_device_plane
         self.stats = RouterStats()
-        self._last: dict = {}   # session id → last replica (metrics)
-        self._image = None      # cached device image; rebuilt after churn
+        self.max_sessions = max_sessions
+        # session id → last replica (metrics), LRU-bounded: million-session
+        # fleets must not grow host memory without limit.
+        self._last: OrderedDict = OrderedDict()
+        self._store: DeviceImageStore | None = None
 
     @property
     def memento(self) -> ConsistentHash:
@@ -59,33 +67,49 @@ class SessionRouter:
         if self._last.get(session_id) == r:
             self.stats.affinity_hits += 1
         self._last[session_id] = r
+        self._last.move_to_end(session_id)  # no-op for fresh keys
+        if len(self._last) > self.max_sessions:
+            self._last.popitem(last=False)  # evict the coldest session
         return r
 
     # -- bulk path (device plane) ----------------------------------------------
+    def image_store(self) -> DeviceImageStore:
+        if self._store is None:
+            plane = "pallas" if self.use_device_plane else "jnp"
+            self._store = DeviceImageStore(self.ch, plane=plane)
+        return self._store
+
     def device_image(self):
-        if self._image is None:
-            self._image = self.ch.device_image()
-        return self._image
+        return self.image_store().image()
 
     def route_batch(self, session_ids: np.ndarray) -> np.ndarray:
         from repro.core.hashing import np_key_to_u32
         keys = np_key_to_u32(np.asarray(session_ids))
-        from repro.kernels import ops
         plane = "pallas" if self.use_device_plane else "jnp"
-        return np.asarray(ops.device_lookup(keys, self.device_image(), plane=plane))
+        return self.image_store().lookup(keys, plane=plane)
 
     # -- membership ----------------------------------------------------------
+    def _push_delta(self) -> None:
+        """Mirror the membership event to the device as an epoch delta."""
+        if self._store is not None:
+            self._store.sync()
+
     def fail_replica(self, replica: int) -> dict:
         before = dict(self._last)
         self.ch.remove(replica)
-        self._image = None
+        self._push_delta()
         moved = {s for s, r in before.items() if r == replica}
         self.stats.moved_on_failure += len(moved)
-        return {"replica": replica, "sessions_moved": len(moved)}
+        info = {"replica": replica, "sessions_moved": len(moved)}
+        if self._store is not None and self._store.last_sync is not None:
+            st = self._store.last_sync
+            info["control_plane"] = {"mode": st.mode, "words": st.words,
+                                     "epoch": st.epoch}
+        return info
 
     def restore_replica(self) -> int:
         b = self.ch.add()
-        self._image = None
+        self._push_delta()
         return b
 
     @property
@@ -100,19 +124,40 @@ class Request:
 
 
 class BatchScheduler:
-    """Groups admitted requests per replica into decode batches."""
+    """Groups admitted requests per replica into decode batches.
+
+    ``assign`` honours ``max_batch`` per replica and returns the overflow
+    explicitly — requests beyond a replica's budget are NOT silently
+    dropped; they come back in arrival order for the caller to re-queue
+    (or are carried in ``self.pending`` and drained first on the next
+    ``assign``).
+    """
 
     def __init__(self, router: SessionRouter, max_batch: int):
         self.router = router
         self.max_batch = max_batch
+        self.pending: list[Request] = []
 
-    def assign(self, requests: list[Request]) -> dict[int, list[Request]]:
-        ids = np.asarray([r.session_id for r in requests], dtype=np.uint64)
+    def assign(self, requests: list[Request]) -> tuple[dict[int, list[Request]], list[Request]]:
+        """Route ``pending + requests``; returns ``(batches, overflow)``.
+
+        ``batches`` maps replica → at most ``max_batch`` requests.
+        ``overflow`` lists the requests that exceeded some replica's
+        budget; the scheduler retains them in ``self.pending`` and drains
+        them first on the next call, so callers must NOT resubmit them —
+        the returned list is for back-pressure telemetry.
+        """
+        work = self.pending + list(requests)
+        ids = np.asarray([r.session_id for r in work], dtype=np.uint64)
         replicas = (self.router.route_batch(ids) if len(ids) else
                     np.zeros((0,), np.int32))
         out: dict[int, list[Request]] = {}
-        for req, rep in zip(requests, replicas):
-            out.setdefault(int(rep), []).append(req)
-        for rep, lst in out.items():
-            out[rep] = lst[: self.max_batch]  # back-pressure beyond max_batch
-        return out
+        overflow: list[Request] = []
+        for req, rep in zip(work, replicas):
+            lst = out.setdefault(int(rep), [])
+            if len(lst) < self.max_batch:
+                lst.append(req)
+            else:
+                overflow.append(req)  # back-pressure, not truncation
+        self.pending = overflow
+        return out, list(overflow)  # copy: callers must not mutate the queue

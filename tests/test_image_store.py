@@ -1,0 +1,304 @@
+"""Epoch-versioned device control plane: deltas, double-buffered images,
+migration diffs (DESIGN.md §3.5).
+
+Deterministic tier-1 coverage; the heavier randomized sweeps (≥1000 events
+per algorithm, hypothesis-driven) live in ``test_property_deltas.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import DeviceImageStore, apply_delta, make_hash
+
+ALGOS = ("memento", "anchor", "dx", "jump")
+KEYS = np.random.default_rng(3).integers(0, 2**32, size=400, dtype=np.uint32)
+
+
+def _mk(algo, n0=64):
+    return make_hash(algo, n0, capacity=4 * n0, variant="32")
+
+
+def _churn_once(h, rng):
+    """One random remove-or-add; returns the op performed."""
+    if h.working > 1 and (rng.random() < 0.6 or h.name in ("anchor", "dx")
+                          and not h.R):
+        if h.name == "jump":
+            h.remove(h.size - 1)
+        else:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+        return "remove"
+    try:
+        h.add()
+        return "add"
+    except ValueError:  # fixed-capacity algo at full fleet
+        ws = sorted(h.working_set())
+        h.remove(ws[int(rng.integers(len(ws)))])
+        return "remove"
+
+
+def _assert_matches_fresh(store, h):
+    """Store front image must be bit-identical to a fresh snapshot."""
+    fresh = h.device_image()
+    img = store.image()
+    assert img.n == fresh.n
+    assert img.epoch == fresh.epoch == h.epoch
+    assert img.scalars == fresh.scalars
+    for name, arr in fresh.arrays.items():
+        got = np.asarray(img.arrays[name])
+        np.testing.assert_array_equal(got[: arr.shape[0]], arr)
+
+
+# ---------------------------------------------------------------------------
+# delta emission (host side)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_deltas_are_o_changed_words(algo):
+    """A single event's delta must scatter O(1) words, not O(n)."""
+    h = _mk(algo, n0=96)
+    e0 = h.epoch
+    if algo == "jump":
+        h.remove(h.size - 1)
+    else:
+        h.remove(sorted(h.working_set())[10])
+    d = h.device_delta(e0)
+    assert d is not None and d.events == 1
+    assert d.num_words() <= 4  # ≤ 2 scatter pairs per event (Anchor's A+K)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_host_apply_delta_equals_fresh_snapshot(algo):
+    rng = np.random.default_rng(7)
+    h = _mk(algo)
+    img = h.device_image(capacity=4 * h.size)
+    for i in range(150):
+        _churn_once(h, rng)
+        if i % 13 == 0:
+            img = apply_delta(img, h.device_delta(img.epoch))
+    img = apply_delta(img, h.device_delta(img.epoch))
+    fresh = h.device_image()
+    assert img.n == fresh.n and img.epoch == fresh.epoch
+    assert img.scalars == fresh.scalars
+    for name, arr in fresh.arrays.items():
+        np.testing.assert_array_equal(np.asarray(img.arrays[name])[: arr.shape[0]], arr)
+
+
+def test_delta_log_window_returns_none():
+    h = _mk("memento")
+    h._DELTA_LOG_CAP = 8
+    h._delta_log = h._delta_log[:0]
+    for _ in range(20):
+        h.remove(sorted(h.working_set())[0])
+        h.add()
+    assert h.device_delta(0) is None  # fell out of the bounded log
+    assert h.device_delta(h.epoch).events == 0  # up-to-date ⇒ empty delta
+    with pytest.raises(ValueError):
+        h.device_delta(h.epoch + 1)
+
+
+# ---------------------------------------------------------------------------
+# DeviceImageStore: sync modes, equivalence, epoch flip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("plane", ["jnp", "pallas"])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_store_delta_sync_matches_fresh_snapshot(algo, plane):
+    rng = np.random.default_rng(11)
+    h = _mk(algo)
+    store = DeviceImageStore(h, plane=plane)
+    events = 60 if plane == "pallas" else 150
+    for i in range(events):
+        _churn_once(h, rng)
+        if i % 7 == 0:
+            store.sync()
+            _assert_matches_fresh(store, h)
+    store.sync()
+    _assert_matches_fresh(store, h)
+    assert store.totals.delta_applies > 0
+    # device lookups against the synced image equal the host plane
+    host = np.asarray([h.lookup(int(k)) for k in KEYS[:120]], np.int32)
+    np.testing.assert_array_equal(store.lookup(KEYS[:120]), host)
+
+
+def test_store_transfers_o_changed_words_per_event():
+    """The acceptance bar: after one remove(), the sync payload is a few
+    words — not the O(n) image."""
+    h = _mk("memento", n0=1024)
+    store = DeviceImageStore(h)
+    h.remove(sorted(h.working_set())[100])
+    st = store.sync()
+    assert st.mode == "delta"
+    assert st.words <= 4
+    image_words = sum(int(v.size) for v in store.image().arrays.values())
+    assert image_words >= 1024  # what a snapshot would have re-sent
+
+
+def test_epoch_flip_atomicity():
+    """Lookups against the epoch-N image stay valid while N+1 is applied."""
+    from repro.core.jax_lookup import lookup_image
+
+    h = _mk("memento")
+    store = DeviceImageStore(h)
+    old_img = store.image()
+    old_host = np.asarray([h.lookup(int(k)) for k in KEYS], np.int32)
+
+    victim = sorted(h.working_set())[len(h.working_set()) // 2]
+    h.remove(victim)
+    # the store has NOT synced: the front image still serves epoch N
+    assert store.image() is old_img
+    np.testing.assert_array_equal(np.asarray(lookup_image(KEYS, old_img)),
+                                  old_host)
+    st = store.sync()
+    assert st.mode == "delta" and store.epoch == h.epoch
+    # the flip retained epoch N intact as the previous image...
+    assert store.previous_image() is old_img
+    np.testing.assert_array_equal(np.asarray(lookup_image(KEYS, old_img)),
+                                  old_host)
+    # ...while the new front serves epoch N+1
+    new_host = np.asarray([h.lookup(int(k)) for k in KEYS], np.int32)
+    np.testing.assert_array_equal(store.lookup(KEYS), new_host)
+    assert (new_host != old_host).sum() == (old_host == victim).sum()
+
+
+def test_store_growth_falls_back_to_snapshot():
+    h = _mk("memento", n0=100)
+    store = DeviceImageStore(h)
+    cap0 = store.capacity["repl"]
+    for _ in range(3 * cap0):
+        h.add()
+    st = store.sync()
+    assert st.mode == "snapshot"
+    assert store.capacity["repl"] >= 2 * h.size
+    _assert_matches_fresh(store, h)
+
+
+def test_store_log_overflow_falls_back_to_snapshot():
+    h = _mk("anchor")
+    store = DeviceImageStore(h)
+    h._DELTA_LOG_CAP = 4
+    for b in sorted(h.working_set())[:12]:
+        h.remove(b)
+    st = store.sync()
+    assert st.mode == "snapshot"
+    _assert_matches_fresh(store, h)
+    assert store.sync().mode == "noop"
+
+
+# ---------------------------------------------------------------------------
+# migration diff
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("plane", ["jnp", "pallas"])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_migration_diff_matches_host(algo, plane):
+    from repro.kernels.migrate import migration_diff
+
+    h = _mk(algo)
+    store = DeviceImageStore(h)
+    before = np.asarray([h.lookup(int(k)) for k in KEYS], np.int32)
+    victim = (h.size - 1 if algo == "jump"
+              else sorted(h.working_set())[len(h.working_set()) // 3])
+    h.remove(victim)
+    store.sync()
+    after = np.asarray([h.lookup(int(k)) for k in KEYS], np.int32)
+
+    d = migration_diff(KEYS, store.previous_image(), store.image(), plane=plane)
+    np.testing.assert_array_equal(d.old, before)
+    np.testing.assert_array_equal(d.new, after)
+    np.testing.assert_array_equal(d.moved, before != after)
+    # device-side minimal disruption: only the victim's keys moved
+    assert d.num_moved == int((before == victim).sum())
+    assert not np.any(d.new[d.moved] == victim)
+
+
+def test_migration_diff_cross_algorithm_jnp():
+    """The jnp plane may diff two different algorithms (algo migration)."""
+    from repro.kernels.migrate import migration_diff
+
+    a = _mk("memento")
+    b = _mk("anchor")
+    d = migration_diff(KEYS[:100], a.device_image(), b.device_image())
+    host_a = np.asarray([a.lookup(int(k)) for k in KEYS[:100]])
+    host_b = np.asarray([b.lookup(int(k)) for k in KEYS[:100]])
+    np.testing.assert_array_equal(d.old, host_a)
+    np.testing.assert_array_equal(d.new, host_b)
+    np.testing.assert_array_equal(d.moved, host_a != host_b)
+
+
+def test_migration_diff_pallas_rejects_cross_algorithm():
+    from repro.kernels.migrate import migration_diff
+
+    a, b = _mk("memento"), _mk("anchor")
+    with pytest.raises(ValueError):
+        migration_diff(KEYS[:10], a.device_image(), b.device_image(),
+                       plane="pallas")
+
+
+# ---------------------------------------------------------------------------
+# consumers
+# ---------------------------------------------------------------------------
+
+def test_router_pushes_deltas_instead_of_rebuilding():
+    from repro.serve.router import SessionRouter
+
+    r = SessionRouter(num_replicas=16)
+    sessions = np.arange(9000, 9500, dtype=np.uint64)
+    first = r.route_batch(sessions)
+    store = r.image_store()
+    assert store.totals.snapshot_rebuilds == 0
+
+    victim = int(first[0])
+    info = r.fail_replica(victim)
+    assert info["control_plane"]["mode"] == "delta"
+    assert info["control_plane"]["words"] <= 4
+    after = r.route_batch(sessions)
+    moved = after != first
+    assert np.all(first[moved] == victim)  # minimal disruption on device
+    r.restore_replica()
+    np.testing.assert_array_equal(r.route_batch(sessions), first)
+    assert store.totals.delta_applies >= 2
+    assert store.totals.snapshot_rebuilds == 0
+
+
+def test_router_session_lru_is_bounded():
+    from repro.serve.router import SessionRouter
+
+    r = SessionRouter(num_replicas=4, max_sessions=100)
+    for s in range(1000):
+        r.route(s)
+    assert len(r._last) == 100
+    assert 999 in r._last and 0 not in r._last  # newest kept, coldest evicted
+    r.route(999)
+    assert r.stats.affinity_hits >= 1
+
+
+def test_shard_placement_plans_on_device_plane():
+    from repro.data.pipeline import ShardPlacement
+
+    p = ShardPlacement(num_shards=256, num_hosts=16)
+    plan = p.fail_host(5)
+    assert plan["minimal"]
+    assert p.image_store().totals.delta_applies >= 1
+    plan2 = p.add_host()
+    assert plan2["monotone"] and plan2["host"] == 5
+    assert set(plan2["moved"]) <= set(plan["moved"])
+
+
+def test_elastic_cluster_honours_algo_for_ckpt_buckets():
+    from repro.runtime.elastic import ElasticCluster
+
+    for algo in ("memento", "anchor", "dx"):
+        c = ElasticCluster(num_hosts=8, num_shards=64, algo=algo)
+        assert c.ckpt_ch.name == algo
+        st = c.state()
+        assert st["algo"] == algo and st["ckpt"]["algo"] == algo
+        assert st["working"] == 8
+        c.fail(3)
+        assert c.state()["working"] == 7
+        c.join()
+        assert c.state()["working"] == 8
+    # Memento keeps exposing the paper's ⟨n, R, l⟩
+    c = ElasticCluster(num_hosts=8, num_shards=64)
+    assert {"n", "l", "R"} <= set(c.state())

@@ -1,0 +1,100 @@
+"""Hypothesis property tests for the epoch-delta control plane.
+
+Gated on ``hypothesis`` like ``test_property_invariants.py``.  The core
+property (ISSUE 2 acceptance): across ≥1000 random remove/add events per
+algorithm, delta-applied device images must stay bit-identical to fresh
+``device_image()`` snapshots — on both the jnp and the Pallas-interpret
+apply planes.  Syncs happen every few events, so the test also exercises
+multi-event delta composition (last-write-wins merge).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import DeviceImageStore, make_hash  # noqa: E402
+
+ALGOS = ("memento", "anchor", "dx", "jump")
+
+# events per hypothesis example; with max_examples=5 every (algo, plane)
+# cell sees ≥1000 random events
+EVENTS = 250
+SYNC_EVERY = {"jnp": 5, "pallas": 25}  # interpret-mode applies are pricier
+
+
+def _churn_once(h, rng):
+    if h.working > 1 and (rng.random() < 0.6
+                          or (h.name in ("anchor", "dx") and not h.R)):
+        if h.name == "jump":
+            h.remove(h.size - 1)
+        else:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+    else:
+        try:
+            h.add()
+        except ValueError:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+
+
+def _assert_bit_identical(store, h):
+    fresh = h.device_image()
+    img = store.image()
+    assert img.n == fresh.n and img.epoch == fresh.epoch == h.epoch
+    assert img.scalars == fresh.scalars
+    for name, arr in fresh.arrays.items():
+        got = np.asarray(img.arrays[name])
+        np.testing.assert_array_equal(got[: arr.shape[0]], arr)
+        # headroom beyond the snapshot must hold the algorithm's fill value
+        if name == "repl":
+            assert np.all(got[arr.shape[0]:] == -1)
+
+
+@pytest.mark.parametrize("plane", ["jnp", "pallas"])
+@pytest.mark.parametrize("algo", ALGOS)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=5, deadline=None)
+def test_property_delta_applied_images_bit_identical(algo, plane, seed):
+    rng = np.random.default_rng(seed)
+    n0 = int(rng.integers(8, 120))
+    h = make_hash(algo, n0, capacity=4 * n0, variant="32")
+    store = DeviceImageStore(h, plane=plane)
+    sync_every = SYNC_EVERY[plane]
+    for i in range(EVENTS):
+        _churn_once(h, rng)
+        if (i + 1) % sync_every == 0:
+            store.sync()
+            _assert_bit_identical(store, h)
+    store.sync()
+    _assert_bit_identical(store, h)
+    # the run must exercise the delta path, not hide behind rebuilds
+    assert store.totals.delta_applies >= store.totals.snapshot_rebuilds
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=10, deadline=None)
+def test_property_epoch_flip_serves_old_epoch(seed):
+    """Mid-apply atomicity: the retained epoch answers exactly as the host
+    did at that epoch, for every algorithm, after arbitrary churn."""
+    from repro.core.jax_lookup import lookup_image
+
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 2**32, size=128, dtype=np.uint32)
+    algo = ALGOS[int(rng.integers(len(ALGOS)))]
+    h = make_hash(algo, 32, capacity=128, variant="32")
+    store = DeviceImageStore(h)
+    for _ in range(int(rng.integers(1, 30))):
+        _churn_once(h, rng)
+    store.sync()
+    frozen = store.image()
+    want = np.asarray([h.lookup(int(k)) for k in keys], np.int32)
+    for _ in range(int(rng.integers(1, 20))):
+        _churn_once(h, rng)
+    store.sync()  # flips epochs; `frozen` must be untouched
+    np.testing.assert_array_equal(np.asarray(lookup_image(keys, frozen)), want)
+    now = np.asarray([h.lookup(int(k)) for k in keys], np.int32)
+    np.testing.assert_array_equal(store.lookup(keys), now)

@@ -157,12 +157,17 @@ def test_batch_scheduler_groups_by_replica():
     r = SessionRouter(num_replicas=4)
     sched = BatchScheduler(r, max_batch=64)
     reqs = [Request(session_id=i) for i in range(300)]
-    groups = sched.assign(reqs)
+    groups, overflow = sched.assign(reqs)
     assert set(groups) <= r.replicas
-    assert sum(len(v) for v in groups.values()) <= 300
-    total = sum(min(len(v), 64) for v in groups.values())
+    # nothing is dropped: every request is either admitted or in overflow
+    admitted = sum(len(v) for v in groups.values())
+    assert admitted + len(overflow) == 300
     assert all(len(v) <= 64 for v in groups.values())
-    assert total > 150  # sane balance across 4 replicas
+    assert admitted > 150  # sane balance across 4 replicas
+    assert sched.pending == overflow  # re-queued for the next round
+    # next round drains the overflow first
+    groups2, overflow2 = sched.assign([])
+    assert sum(len(v) for v in groups2.values()) + len(overflow2) == len(overflow)
 
 
 # ---------------------------------------------------------------------------
