@@ -1,0 +1,234 @@
+"""Replica-aware serving benchmark: k-replication throughput + bounded-load
+balance on the device data plane (DESIGN.md §4).
+
+For all four algorithms across the paper's §VIII scenario groups (stable /
+one-shot / incremental removals, ``variant="32"`` states) this measures:
+
+  * **k-replica lookup throughput** — µs/key to compute k ∈ {1,2,3}
+    distinct replicas per key with :func:`repro.kernels.replica_lookup.
+    replica_lookup` (one jitted jnp program; one Pallas launch — interpret
+    mode on CPU, so the Pallas column is a correctness path off-TPU), and
+
+  * **bounded-load balance** — peak-to-mean load after assigning the key
+    batch with cap ``ceil(c·keys/working)`` for c ∈ {1.05, 1.25, ∞}
+    (∞ = plain consistent hashing, the no-bound baseline) via the
+    device-plane chain walk (:func:`~repro.kernels.replica_lookup.
+    bounded_assign_device`).
+
+The deterministic claims gate (``check_replica_claims``): replica sets are
+pairwise distinct with column 0 equal to the plain lookup, and bounded
+assignment never exceeds the cap.  Timings are advisory (CI runners are
+noisy).  ``python -m benchmarks.bench_replicas --out BENCH_replicas.json``
+writes the artifact CI uploads and ``benchmarks/report.py`` renders into
+RESULTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+ALGOS = ("memento", "jump", "anchor", "dx")
+K_VALUES = (1, 2, 3)
+C_VALUES = (1.05, 1.25, float("inf"))
+
+
+def _remove(h, count, rng):
+    for _ in range(count):
+        if h.name == "jump":
+            h.remove(h.size - 1)
+        else:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+
+
+def _scenario_states(algo, w, a_over_w, oneshot_frac, inc_fractions, rng):
+    """(scenario, x, state) tuples mirroring paper_bench's §VIII groups."""
+    from repro.core import make_hash
+
+    yield "stable", w, make_hash(algo, w, capacity=a_over_w * w, variant="32")
+
+    h = make_hash(algo, w, capacity=a_over_w * w, variant="32")
+    _remove(h, int(oneshot_frac * w), rng)
+    yield "oneshot", w, h
+
+    h = make_hash(algo, w, capacity=a_over_w * w, variant="32")
+    removed = 0
+    for frac in inc_fractions:
+        step = int(frac * w) - removed
+        _remove(h, step, rng)
+        removed += step
+        yield "incremental", frac, h
+
+
+def bench_replicas(emit, w=1024, a_over_w=4, n_keys=8192, pallas_keys=2048,
+                   oneshot_frac=0.5, inc_fractions=(0.2, 0.5), seed=0):
+    """Emit (table, algo, x, metric, value) rows; return the JSON summary."""
+    import jax.numpy as jnp
+    from repro.core.protocol import replica_sets
+    from repro.kernels.replica_lookup import bounded_assign_device, replica_lookup
+
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 2**32, size=n_keys, dtype=np.uint32)
+    jkeys = jnp.asarray(keys)
+    pkeys = jnp.asarray(keys[:pallas_keys])
+    summary: dict[str, dict] = {}
+
+    for algo in ALGOS:
+        for scenario, x, h in _scenario_states(algo, w, a_over_w,
+                                               oneshot_frac, inc_fractions,
+                                               rng):
+            image = h.device_image()
+            working = h.working
+            entry = summary.setdefault(f"{algo}_{scenario}_{x}", {
+                "algo": algo, "scenario": scenario, "x": x,
+                "working": working, "n_keys": n_keys,
+            })
+
+            # -- k-replica lookup throughput -----------------------------
+            for k in K_VALUES:
+                out = np.asarray(replica_lookup(jkeys, image, k, plane="jnp"))
+                # deterministic correctness gates ride with the timing
+                host = replica_sets(h, keys[:64], k)
+                np.testing.assert_array_equal(out[:64], host)
+                distinct = all(len(set(row)) == k for row in out.tolist())
+                t0 = time.perf_counter()
+                for _ in range(5):
+                    replica_lookup(jkeys, image, k,
+                                   plane="jnp").block_until_ready()
+                us = (time.perf_counter() - t0) / (5 * n_keys) * 1e6
+                emit(f"replicas_{scenario}_lookup", algo, x,
+                     f"k{k}_jnp_us_per_key", us)
+                entry[f"k{k}_jnp_us_per_key"] = us
+                entry[f"k{k}_distinct"] = bool(distinct)
+
+                pout = np.asarray(replica_lookup(pkeys, image, k,
+                                                 plane="pallas"))
+                np.testing.assert_array_equal(pout, out[:pallas_keys])
+                t0 = time.perf_counter()
+                replica_lookup(pkeys, image, k,
+                               plane="pallas").block_until_ready()
+                pus = (time.perf_counter() - t0) / pallas_keys * 1e6
+                emit(f"replicas_{scenario}_lookup", algo, x,
+                     f"k{k}_pallas_us_per_key", pus)
+                entry[f"k{k}_pallas_us_per_key"] = pus
+
+            # -- bounded-load balance ------------------------------------
+            from repro.core.protocol import round_up
+            if algo == "anchor":
+                load_len = image.arrays["A"].shape[0]
+            elif algo == "memento":
+                load_len = image.arrays["repl"].shape[0]
+            else:  # dx packs bits, jump has no table: load is bucket-indexed
+                load_len = round_up(image.n)
+            mean = n_keys / working
+            for c in C_VALUES:
+                if math.isinf(c):
+                    b = np.asarray(replica_lookup(jkeys, image, 1,
+                                                  plane="jnp"))[:, 0]
+                    peak = int(np.bincount(b).max())
+                    cap = None
+                    t_us = float("nan")
+                else:
+                    cap = max(1, math.ceil(c * n_keys / working))
+                    t0 = time.perf_counter()
+                    assigned, load = bounded_assign_device(
+                        keys, image, np.zeros(load_len, np.int32), cap,
+                        plane="jnp")
+                    t_us = (time.perf_counter() - t0) / n_keys * 1e6
+                    peak = int(load.max())
+                    assert peak <= cap, (algo, scenario, c, peak, cap)
+                    assert (assigned >= 0).all()
+                label = "inf" if math.isinf(c) else f"{c:g}"
+                emit(f"replicas_{scenario}_balance", algo, x,
+                     f"c{label}_peak_to_mean", peak / mean)
+                entry[f"c{label}_peak_to_mean"] = peak / mean
+                if cap is not None:
+                    entry[f"c{label}_cap"] = cap
+                    entry[f"c{label}_assign_us_per_key"] = t_us
+                    emit(f"replicas_{scenario}_balance", algo, x,
+                         f"c{label}_assign_us_per_key", t_us)
+    return summary
+
+
+def check_replica_claims(summary: dict) -> bool:
+    """The deterministic acceptance gates (timing is advisory):
+
+    * k-replica sets are pairwise distinct for every algorithm/scenario/k,
+    * bounded-load peak never exceeds c · mean (cap enforcement) for
+      finite c, and relaxing c (1.05 → ∞) never *improves* the peak.
+    """
+    ok = True
+
+    def claim(name, cond):
+        nonlocal ok
+        print(f"# claim: {name}: {'OK' if cond else 'FAIL'}")
+        ok &= bool(cond)
+
+    for key, e in summary.items():
+        claim(f"{key}: k-replica sets distinct (k=2,3)",
+              e.get("k2_distinct") and e.get("k3_distinct"))
+        eps = 1e-9
+        claim(f"{key}: bounded peak/mean ≤ c (c=1.05, 1.25)",
+              e["c1.05_peak_to_mean"] <= e["c1.05_cap"] /
+              (e["n_keys"] / e["working"]) + eps
+              and e["c1.25_peak_to_mean"] <= e["c1.25_cap"] /
+              (e["n_keys"] / e["working"]) + eps)
+        claim(f"{key}: bounding helps (peak c=1.05 ≤ peak unbounded)",
+              e["c1.05_peak_to_mean"] <= e["cinf_peak_to_mean"] + eps)
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--full", action="store_true", help="larger fleet")
+    ap.add_argument("--out", default=None, help="write JSON summary here")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        kw = dict(w=256, n_keys=2048, pallas_keys=512, inc_fractions=(0.5,))
+    elif args.full:
+        kw = dict(w=10_000, n_keys=16384, pallas_keys=2048,
+                  inc_fractions=(0.2, 0.5))
+    else:
+        kw = dict(w=1024, n_keys=8192, pallas_keys=2048,
+                  inc_fractions=(0.2, 0.5))
+
+    rows = []
+
+    def emit(table, algo, x, metric, value):
+        rows.append((table, algo, x, metric, value))
+        print(f"{table},{algo},{x},{metric},{value:.4f}"
+              if isinstance(value, float) else
+              f"{table},{algo},{x},{metric},{value}", flush=True)
+
+    print("table,algo,x,metric,value")
+    t0 = time.time()
+    summary = bench_replicas(emit, **kw)
+    ok = check_replica_claims(summary)
+    payload = {
+        "bench": "replicas",
+        "w": kw["w"],
+        "n_keys": kw["n_keys"],
+        "k_values": list(K_VALUES),
+        "c_values": [("inf" if math.isinf(c) else c) for c in C_VALUES],
+        "results": summary,
+        "claims_pass": bool(ok),
+        "elapsed_s": round(time.time() - t0, 2),
+    }
+    if args.out:
+        Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"# wrote {args.out}")
+    print(f"# total {payload['elapsed_s']}s — replica claims: "
+          f"{'PASS' if ok else 'MISMATCH'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

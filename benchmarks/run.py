@@ -30,6 +30,8 @@ def main(argv=None) -> int:
                     help="also run the batched jnp/Pallas lookup benchmark")
     ap.add_argument("--churn", action="store_true",
                     help="also run the per-event churn control-plane benchmark")
+    ap.add_argument("--replicas", action="store_true",
+                    help="also run the k-replication + bounded-load benchmark")
     args = ap.parse_args(argv)
 
     if args.quick:
@@ -78,6 +80,15 @@ def main(argv=None) -> int:
             bench_churn(emit, sizes=(512,), events=40, n_keys=1024)
         else:
             bench_churn(emit)
+    if args.replicas:
+        # k-replica lookup throughput + bounded-load balance on the device
+        # planes, all four algorithms × §VIII scenarios (DESIGN.md §4)
+        from .bench_replicas import bench_replicas
+        if args.quick:
+            bench_replicas(emit, w=256, n_keys=2048, pallas_keys=512,
+                           inc_fractions=(0.5,))
+        else:
+            bench_replicas(emit)
 
     RESULTS.mkdir(parents=True, exist_ok=True)
     with open(RESULTS / "bench.csv", "w", newline="") as f:

@@ -1,0 +1,45 @@
+#!/usr/bin/env python3
+"""Offline markdown link check for the repo's docs.
+
+Every *relative* link target in the tracked markdown files must exist on
+disk (anchors are stripped; http(s)/mailto links are not fetched — CI must
+stay deterministic offline).  Exits non-zero listing the dangling links.
+
+    python scripts/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE = re.compile(r"^(```|~~~).*?^\1", re.MULTILINE | re.DOTALL)
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def main() -> int:
+    bad: list[str] = []
+    mds = sorted(p for p in ROOT.rglob("*.md")
+                 if ".git" not in p.parts and "results" not in p.parts)
+    for md in mds:
+        text = FENCE.sub("", md.read_text())  # links inside code are not links
+        for m in LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = (md.parent / target.split("#", 1)[0])
+            if not path.exists():
+                bad.append(f"{md.relative_to(ROOT)} -> {target}")
+    if bad:
+        print("dangling markdown links:")
+        for b in bad:
+            print(f"  {b}")
+        return 1
+    print(f"checked {len(mds)} markdown files: all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

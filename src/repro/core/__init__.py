@@ -20,16 +20,20 @@ Device control plane (epochs & deltas, DESIGN.md §3.5):
   * :class:`DeviceImageStore` — double-buffered on-device images + sync()
 """
 from .anchor import AnchorHash
+from .bounded import BoundedLoad, BoundedLoadMemento
 from .dx import DxHash
 from .image_store import DeviceImageStore, SyncStats
 from .jump import JumpHash, jump32, jump64, np_jump32
 from .memento import MementoHash, random_state
-from .protocol import (ConsistentHash, DeviceImage, ImageDelta, apply_delta,
-                       make_hash)
+from .protocol import (REPLICA_SALT_CAP, ConsistentHash, DeviceImage,
+                       ImageDelta, ReplicatedLookup, apply_delta, make_hash,
+                       replica_sets)
 from .tables import MementoTables, tables_from_state
 
 __all__ = [
     "AnchorHash",
+    "BoundedLoad",
+    "BoundedLoadMemento",
     "ConsistentHash",
     "DeviceImage",
     "DeviceImageStore",
@@ -38,6 +42,8 @@ __all__ = [
     "JumpHash",
     "MementoHash",
     "MementoTables",
+    "REPLICA_SALT_CAP",
+    "ReplicatedLookup",
     "SyncStats",
     "apply_delta",
     "jump32",
@@ -45,5 +51,6 @@ __all__ = [
     "make_hash",
     "np_jump32",
     "random_state",
+    "replica_sets",
     "tables_from_state",
 ]

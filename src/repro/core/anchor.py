@@ -19,10 +19,10 @@ from __future__ import annotations
 import numpy as np
 
 from .hashing import MASK32, MASK64, fmix32, fmix64, hash2_32, hash2_64
-from .protocol import DeltaEmitter, DeviceImage, round_up
+from .protocol import DeltaEmitter, DeviceImage, ReplicatedLookup, round_up
 
 
-class AnchorHash(DeltaEmitter):
+class AnchorHash(ReplicatedLookup, DeltaEmitter):
     name = "anchor"
 
     def __init__(self, capacity: int, initial_node_count: int, variant: str = "64"):

@@ -12,10 +12,10 @@ from __future__ import annotations
 import numpy as np
 
 from .hashing import MASK32, MASK64, hash2_32, hash2_64
-from .protocol import DeltaEmitter, DeviceImage, round_up
+from .protocol import DeltaEmitter, DeviceImage, ReplicatedLookup, round_up
 
 
-class DxHash(DeltaEmitter):
+class DxHash(ReplicatedLookup, DeltaEmitter):
     name = "dx"
 
     _MAX_PROBE_FACTOR = 64  # cap = factor * ceil(a/w) probes, then fallback scan

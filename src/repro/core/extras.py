@@ -2,6 +2,11 @@
 comparison papers [11][12] — Ring (Karger), Rendezvous (HRW), Maglev, and
 Multi-probe.  Useful as additional baselines in benchmarks and to sanity-check
 Memento's placement quality against the full literature.
+
+Sources (see PAPERS.md, "Cited by the code"): Karger et al., STOC 1997
+(RingHash); Thaler & Ravishankar, ToN 1998 (RendezvousHash); Eisenbud et
+al., NSDI 2016 (MaglevHash); Appleton & O'Reilly, arXiv:1505.00062
+(MultiProbeHash).
 """
 from __future__ import annotations
 

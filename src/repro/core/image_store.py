@@ -25,6 +25,11 @@ growth outruns the padded capacity (rebuilt with doubled headroom, so the
 amortized cost stays O(1) per event).  ``last_sync``/``totals`` expose
 which path ran and how many 32-bit words crossed host→device — the numbers
 the churn benchmark reports.
+
+The store is overlay-agnostic: a bounded-load state (DESIGN.md §4.2)
+simply adds a bucket-indexed ``load`` word array to its image, and load
+changes ride the same delta path (``_fits`` sizes it to the bucket-id
+space).
 """
 from __future__ import annotations
 
@@ -78,7 +83,8 @@ class DeviceImageStore:
         """Full snapshot upload (init, log overflow, or capacity growth)."""
         import jax.numpy as jnp
 
-        if self._ch.name in ("memento", "jump"):  # unbounded growth: headroom
+        algo = getattr(self._ch, "image_algo", self._ch.name)
+        if algo in ("memento", "jump"):  # unbounded growth: headroom
             cap = round_up(max(self.headroom * self._image_size_hint(), 128))
         else:  # fixed overall capacity a: padding beyond a is never read
             cap = None
@@ -148,8 +154,10 @@ class DeviceImageStore:
 
     def _fits(self, delta: ImageDelta) -> bool:
         caps = self.capacity
-        return all(caps.get(name, 0) >= need
-                   for name, need in required_lengths(delta.algo, delta.n).items())
+        needed = dict(required_lengths(delta.algo, delta.n))
+        if "load" in caps:  # bounded-load overlay: load words are bucket-indexed
+            needed["load"] = delta.n
+        return all(caps.get(name, 0) >= need for name, need in needed.items())
 
     def _apply(self, delta: ImageDelta) -> DeviceImage:
         from repro.kernels.delta_apply import scatter_update

@@ -14,7 +14,7 @@ from __future__ import annotations
 import numpy as np
 
 from .hashing import GOLDEN32, LCG_MULT, MASK32, MASK64, np_fmix32, fmix32
-from .protocol import DeltaEmitter, DeviceImage
+from .protocol import DeltaEmitter, DeviceImage, ReplicatedLookup
 
 
 def jump64(key: int, num_buckets: int) -> int:
@@ -73,7 +73,7 @@ def np_jump32(keys: np.ndarray, num_buckets: int) -> np.ndarray:
     return b
 
 
-class JumpHash(DeltaEmitter):
+class JumpHash(ReplicatedLookup, DeltaEmitter):
     """Stateful wrapper exposing the uniform engine API (LIFO-only resizes)."""
 
     name = "jump"

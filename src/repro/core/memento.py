@@ -14,10 +14,10 @@ import numpy as np
 
 from .hashing import MASK32, MASK64, hash2_32, hash2_64
 from .jump import jump32, jump64
-from .protocol import DeltaEmitter, DeviceImage, round_up
+from .protocol import DeltaEmitter, DeviceImage, ReplicatedLookup, round_up
 
 
-class MementoHash(DeltaEmitter):
+class MementoHash(ReplicatedLookup, DeltaEmitter):
     name = "memento"
 
     def __init__(self, initial_node_count: int, variant: str = "64"):

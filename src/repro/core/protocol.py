@@ -38,6 +38,110 @@ def round_up(x: int, m: int = 128) -> int:
     return ((x + m - 1) // m) * m
 
 
+#: Salted re-lookup bound for ``lookup_k`` (DESIGN.md §4.1).  With k ≤ w the
+#: probability a salted lookup collides with an already-chosen bucket is
+#: ≤ (k−1)/w per try, so exhausting the bound has probability ≤ ((k−1)/w)^CAP
+#: — unreachable in practice; the bound exists so the device loops terminate
+#: even on adversarial states.  Host and device share the constant so the
+#: planes stay bit-identical.
+REPLICA_SALT_CAP = 4096
+
+
+class ReplicatedLookup:
+    """Mixin: protocol-generic k-replication by salted re-lookup (DESIGN.md §4.1).
+
+    ``lookup_k(key, k)`` returns k *distinct* working buckets.  Replica 0 is
+    the plain ``lookup(key)`` (so k = 1 degenerates to the base algorithm);
+    replica j is found by looking up the salted key ``hash2(key, salt)`` for
+    salt = 1, 2, … and keeping the first candidate not already chosen.  The
+    salt counter is shared across slots, so the construction is a single
+    deterministic walk — the same walk the jnp and Pallas planes run
+    lane-synchronously (``kernels/replica_lookup.py``), bit-identical on
+    ``variant="32"`` states.
+
+    Disruption bound: removing bucket b changes a key's replica set only if
+    some salted lookup in its walk mapped to b; each salted lookup inherits
+    the base algorithm's minimal disruption, so expected slot churn per
+    removal is ≤ (k + expected dedup retries)/w — the per-slot analogue of
+    the paper's minimal-disruption property (DESIGN.md §4.1).
+    """
+
+    def _salt_hash2(self, key: int, salt: int) -> int:
+        """The salted re-key — variant-matched so device planes agree."""
+        from .hashing import hash2_32, hash2_64
+
+        if getattr(self, "variant", "64") == "32":
+            return hash2_32(key, salt)
+        return hash2_64(key, salt)
+
+    def lookup_k_filtered(self, key: int, k: int, reject,
+                          trace: list | None = None) -> list[int]:
+        """The one salted walk every k-replica variant shares.
+
+        ``reject(cand, chosen)`` skips a candidate the way the dedup rule
+        skips duplicates (plain ``lookup_k`` passes exactly that rule;
+        failure-domain placement adds a domain check — see
+        ``runtime/elastic.domain_distinct_replicas``).  Slot 0 is always the
+        plain lookup.  ``trace``, if given, collects every salted-lookup
+        result in walk order (rejected ones included).  Keeping the walk in
+        ONE place is what keeps the host bit-identical to the device planes
+        (``kernels/replica_lookup.replica_body``).
+        """
+        if k < 1:
+            raise ValueError("k must be ≥ 1")
+        out = [self.lookup(key)]
+        if trace is not None:
+            trace.append(out[0])
+        salt = 1
+        while len(out) < k:
+            if salt > REPLICA_SALT_CAP:
+                raise RuntimeError("replica salt budget exhausted")
+            cand = self.lookup(self._salt_hash2(key, salt))
+            if trace is not None:
+                trace.append(cand)
+            if not reject(cand, out):
+                out.append(cand)
+            salt += 1
+        return out
+
+    @staticmethod
+    def _reject_duplicate(cand: int, chosen: list[int]) -> bool:
+        return cand in chosen
+
+    def lookup_k(self, key: int, k: int) -> list[int]:
+        """k distinct working buckets for ``key``; ``lookup_k(key, 1)[0] ==
+        lookup(key)``.  Requires ``k ≤ working``."""
+        if k > self.working:
+            raise ValueError(f"k={k} exceeds working buckets ({self.working})")
+        return self.lookup_k_filtered(key, k, self._reject_duplicate)
+
+    def lookup_k_trace(self, key: int, k: int) -> tuple[list[int], list[int]]:
+        """``lookup_k`` returning ``(replicas, candidates)`` where
+        ``candidates`` lists every salted-lookup result in walk order
+        (including dedup-rejected ones) — the instrument the replica-stability
+        property tests use: a removal can change the set only if the removed
+        bucket appears among the candidates."""
+        if k > self.working:
+            raise ValueError(f"k={k} exceeds working buckets ({self.working})")
+        cands: list[int] = []
+        out = self.lookup_k_filtered(key, k, self._reject_duplicate,
+                                     trace=cands)
+        return out, cands
+
+
+def replica_sets(h, keys, k: int) -> np.ndarray:
+    """Numpy oracle: ``lookup_k`` over a key batch → int32 [len(keys), k].
+
+    The ground truth the device planes (`kernels/replica_lookup.py`) are
+    tested against; per-key scalar walk on the host control plane.
+    """
+    keys = np.asarray(keys)
+    out = np.empty((len(keys), k), dtype=np.int32)
+    for i, key in enumerate(keys):
+        out[i] = h.lookup_k(int(key), k)
+    return out
+
+
 @dataclass
 class DeviceImage:
     """Flat device image of a consistent-hash state.
@@ -167,6 +271,14 @@ class DeltaEmitter:
 
     _DELTA_LOG_CAP = 8192
 
+    @property
+    def image_algo(self) -> str:
+        """Dispatch key stamped on emitted images/deltas.  Defaults to
+        ``name``; overlay states (e.g. :class:`~repro.core.bounded.
+        BoundedLoad`) override it to their *inner* algorithm so the device
+        planes dispatch on the real table layout."""
+        return self.name
+
     def _init_delta_log(self) -> None:
         self._epoch = 0
         self._delta_log: list = []
@@ -211,7 +323,7 @@ class DeltaEmitter:
                                count=len(edits)).astype(np.int32))
             for name, edits in merged.items()
         }
-        return ImageDelta(algo=self.name, base_epoch=since_epoch,
+        return ImageDelta(algo=self.image_algo, base_epoch=since_epoch,
                           epoch=self._epoch, n=n, updates=updates,
                           scalars=scalars)
 
@@ -230,6 +342,8 @@ class ConsistentHash(Protocol):
     name: str
 
     def lookup(self, key: int) -> int: ...
+
+    def lookup_k(self, key: int, k: int) -> list[int]: ...
 
     def remove(self, b: int) -> None: ...
 

@@ -2,3 +2,6 @@
 # family (memento/anchor/dx/jump_lookup.py), the shared 32-bit hash
 # primitives (primitives.py), the jitted dispatch (ops.device_lookup),
 # and the oracles kernel tests compare against (ref.py).  See DESIGN.md §3.
+# Control-plane kernels: delta_apply.py (epoch-delta scatter, §3.5) and
+# migrate.py (fused two-epoch diff, §3.5).  Replica-aware serving:
+# replica_lookup.py (salted k-replication + bounded-load chain walk, §4).

@@ -1,6 +1,7 @@
 """Pallas TPU kernel: batched AnchorHash lookup.
 
-Same block-parallel shape as the Memento kernel (DESIGN.md §3.3): the grid
+Same block-parallel shape as the Memento kernel (image layout: DESIGN.md
+§3.3; kernel structure: §3.4): the grid
 runs over ``(BLOCK_ROWS, 128)`` uint32 key blocks; the A-array image (removal
 "timestamps") and the K-array (wrap successors) sit in VMEM for every
 program; the capacity ``a`` travels as a dynamic prefetched scalar so device

@@ -1,6 +1,7 @@
 """Pallas TPU kernel: batched DxHash lookup.
 
-Block-parallel pseudo-random probing (DESIGN.md §3.3): the grid runs over
+Block-parallel pseudo-random probing (image layout: DESIGN.md §3.3;
+kernel structure: §3.4): the grid runs over
 ``(BLOCK_ROWS, 128)`` uint32 key blocks; the packed active bitmap (bucket
 ``b`` ↔ bit ``b & 31`` of word ``b >> 5``, Θ(a) *bits* of VMEM) is resident
 per program.  Three dynamic scalars are prefetched: the capacity ``a``, the

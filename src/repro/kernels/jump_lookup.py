@@ -1,6 +1,7 @@
 """Pallas TPU kernel: batched JumpHash lookup.
 
-The stateless corner of the device plane: no table at all, just the shared
+The stateless corner of the device plane (image layout: DESIGN.md §3.3;
+kernel structure: §3.4): no table at all, just the shared
 TPU-native ``jump32`` state machine (``kernels/primitives.py``) over a
 ``(BLOCK_ROWS, 128)`` key block, with ``n`` as a dynamic prefetched scalar.
 Also the first hop of every Memento lookup — kept as its own kernel so Jump

@@ -13,11 +13,13 @@ per step.  On TPU we express this as a block-parallel kernel:
     replacement chain; a block settles in max-over-lanes sweeps which the
     paper bounds by E[τ],E[σ] ≤ ln(n/w) (Props. VII.1-3).
 
-TPU adaptation notes (DESIGN.md §3): JumpHash's 64-bit LCG is replaced by a
-murmur3-mixed (key, step) variate quantized to 24 bits so every divide is an
-exact f32 op; the replacement "hash table" becomes vector gathers.  Chain
-following is a gather off the same table — no pointer chasing.  The hash
-arithmetic is shared with the jnp oracle via ``kernels/primitives.py``.
+TPU adaptation notes (arithmetic: DESIGN.md §3.1; dense/compact table
+layouts: §3.2; kernel structure: §3.4): JumpHash's 64-bit LCG is replaced
+by a murmur3-mixed (key, step) variate quantized to 24 bits so every
+divide is an exact f32 op; the replacement "hash table" becomes vector
+gathers.  Chain following is a gather off the same table — no pointer
+chasing.  The hash arithmetic is shared with the jnp oracle via
+``kernels/primitives.py``.
 
 Validated in ``interpret=True`` mode on CPU against ``ref.py`` (the pure-jnp
 oracle, itself bit-identical to the numpy host plane).

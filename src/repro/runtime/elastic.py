@@ -33,10 +33,34 @@ class ClusterEvent:
     moved: int     # resources relocated by the event
 
 
+def domain_distinct_replicas(ch, key: int, k: int, domain_of) -> list[int]:
+    """k working buckets for ``key`` with pairwise-distinct failure domains.
+
+    The ``lookup_k`` salted walk (DESIGN.md §4.1, via
+    ``ReplicatedLookup.lookup_k_filtered`` so there is exactly one walk
+    implementation) with one extra skip rule: candidates whose domain is
+    already represented are rejected like duplicates, so a whole-domain
+    outage (rack, power feed) can never take out more than one replica of a
+    shard.  Requires ``k`` ≤ the number of distinct domains among working
+    buckets.
+    """
+    domains_avail = {domain_of(b) for b in ch.working_set()}
+    if k > len(domains_avail):
+        raise ValueError(f"k={k} exceeds the {len(domains_avail)} distinct "
+                         "failure domains among working buckets")
+
+    def reject(cand, chosen):
+        return cand in chosen or domain_of(cand) in {domain_of(b)
+                                                     for b in chosen}
+
+    return ch.lookup_k_filtered(key, k, reject)
+
+
 class ElasticCluster:
     def __init__(self, num_hosts: int, *, num_shards: int = 256,
                  ckpt_buckets: int | None = None, algo: str = "memento",
-                 capacity: int | None = None):
+                 capacity: int | None = None, replica_k: int = 1,
+                 num_domains: int | None = None, domain_of=None):
         self.placement = ShardPlacement(num_shards, num_hosts,
                                         algo=algo, capacity=capacity)
         # checkpoint-bucket placement follows the SAME algo= choice as the
@@ -44,6 +68,17 @@ class ElasticCluster:
         nb = ckpt_buckets or max(num_hosts // 2, 2)
         self.ckpt_ch = make_hash(algo, nb, capacity=capacity and max(capacity, nb))
         self.events: list[ClusterEvent] = []
+        # replica-aware placement (DESIGN.md §4.3): shards live on replica_k
+        # hosts whose failure domains are pairwise distinct.  Default domain
+        # map: host % num_domains (rack-striped ids); with neither given,
+        # every host is its own domain (plain distinctness).
+        self.replica_k = replica_k
+        if domain_of is not None:
+            self.domain_of = domain_of
+        elif num_domains is not None:
+            self.domain_of = lambda host: host % num_domains
+        else:
+            self.domain_of = lambda host: host
 
     @property
     def ckpt_memento(self):
@@ -68,6 +103,18 @@ class ElasticCluster:
 
     def movement_total(self) -> int:
         return sum(e.moved for e in self.events)
+
+    # -- replica-aware placement (DESIGN.md §4.3) ----------------------------
+    def replica_hosts(self, shard: int, k: int | None = None) -> list[int]:
+        """The shard's replica set: k hosts on pairwise-distinct failure
+        domains (host 0 of the list is the classic single-host placement)."""
+        return domain_distinct_replicas(self.placement.ch, shard,
+                                        k or self.replica_k, self.domain_of)
+
+    def replica_placement(self, k: int | None = None) -> dict[int, list[int]]:
+        """shard → replica hosts for every shard (distinct domains each)."""
+        return {s: self.replica_hosts(s, k)
+                for s in range(self.placement.num_shards)}
 
     def state(self) -> dict:
         """Protocol-generic controller state (plus Memento's ⟨n, R, l⟩)."""

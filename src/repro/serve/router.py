@@ -36,17 +36,29 @@ class RouterStats:
     routed: int = 0
     moved_on_failure: int = 0
     affinity_hits: int = 0
+    failovers: int = 0
 
 
 class SessionRouter:
+    """Session → replica router; with ``replicas_k > 1`` it is replica-aware
+    (DESIGN.md §4.3): every session has a k-replica set (salted ``lookup_k``,
+    so replica 0 is the classic placement) and a *marked-failed* replica
+    fails over to replica r+1 **before** any membership delta lands — the
+    instant a health checker calls :meth:`mark_failed`, routing avoids the
+    node, while the epoch delta (``fail_replica``) catches up asynchronously.
+    """
+
     def __init__(self, num_replicas: int, *, algo: str | ConsistentHash = "memento",
                  capacity: int | None = None, use_device_plane: bool = False,
-                 max_sessions: int = 1_000_000):
+                 max_sessions: int = 1_000_000, replicas_k: int = 1):
         if isinstance(algo, str):
             # variant="32": host lookups bit-identical to the device plane.
             self.ch = make_hash(algo, num_replicas, capacity=capacity, variant="32")
         else:
             self.ch = algo
+        if replicas_k < 1:
+            raise ValueError("replicas_k must be ≥ 1")
+        self.replicas_k = replicas_k
         self.use_device_plane = use_device_plane
         self.stats = RouterStats()
         self.max_sessions = max_sessions
@@ -54,6 +66,9 @@ class SessionRouter:
         # fleets must not grow host memory without limit.
         self._last: OrderedDict = OrderedDict()
         self._store: DeviceImageStore | None = None
+        # replicas marked failed but whose removal delta has not landed yet:
+        # route()/route_batch() fail over around them immediately.
+        self._failed: set[int] = set()
 
     @property
     def memento(self) -> ConsistentHash:
@@ -61,8 +76,23 @@ class SessionRouter:
         return self.ch
 
     # -- single-request path --------------------------------------------------
+    def replica_set(self, session_id) -> list[int]:
+        """The session's k distinct candidate replicas (replica 0 = the
+        classic single-lookup placement).  k is clamped to the surviving
+        fleet so deep failure cascades degrade instead of raising."""
+        k = min(self.replicas_k, self.ch.working)
+        return self.ch.lookup_k(key_to_u32(session_id), k)
+
     def route(self, session_id) -> int:
-        r = self.ch.lookup(key_to_u32(session_id))
+        if self.replicas_k > 1 and self._failed:
+            reps = self.replica_set(session_id)
+            # fail over to replica r+1 while the primary is marked failed;
+            # if every replica is marked, keep the primary (nothing better).
+            r = next((c for c in reps if c not in self._failed), reps[0])
+            if r != reps[0]:
+                self.stats.failovers += 1
+        else:
+            r = self.ch.lookup(key_to_u32(session_id))
         self.stats.routed += 1
         if self._last.get(session_id) == r:
             self.stats.affinity_hits += 1
@@ -86,7 +116,27 @@ class SessionRouter:
         from repro.core.hashing import np_key_to_u32
         keys = np_key_to_u32(np.asarray(session_ids))
         plane = "pallas" if self.use_device_plane else "jnp"
+        if self.replicas_k > 1 and self._failed:
+            # k-replica sets in one device pass; pick the first column not
+            # marked failed (the same failover rule the scalar path applies).
+            sets = self.replica_set_batch(session_ids)
+            ok = ~np.isin(sets, sorted(self._failed))
+            ok[:, 0] |= ~ok.any(axis=1)  # all failed → keep the primary
+            col = ok.argmax(axis=1)
+            self.stats.failovers += int((col > 0).sum())
+            return sets[np.arange(len(sets)), col]
         return self.image_store().lookup(keys, plane=plane)
+
+    def replica_set_batch(self, session_ids: np.ndarray) -> np.ndarray:
+        """k-replica sets for a session batch on the device plane:
+        int32 [len(ids), k], column 0 = the classic placement."""
+        from repro.core.hashing import np_key_to_u32
+        from repro.kernels.replica_lookup import replica_lookup
+        keys = np_key_to_u32(np.asarray(session_ids))
+        plane = "pallas" if self.use_device_plane else "jnp"
+        k = min(self.replicas_k, self.ch.working)
+        return np.asarray(replica_lookup(keys, self.image_store().image(),
+                                         k, plane=plane))
 
     # -- membership ----------------------------------------------------------
     def _push_delta(self) -> None:
@@ -94,10 +144,21 @@ class SessionRouter:
         if self._store is not None:
             self._store.sync()
 
+    def mark_failed(self, replica: int) -> None:
+        """Health-checker hook: route around ``replica`` NOW, before any
+        membership delta is emitted or applied (DESIGN.md §4.3)."""
+        self._failed.add(replica)
+
     def fail_replica(self, replica: int) -> dict:
         before = dict(self._last)
-        self.ch.remove(replica)
-        self._push_delta()
+        self.mark_failed(replica)  # failover active while the delta lands
+        try:
+            self.ch.remove(replica)
+            self._push_delta()
+        finally:
+            # membership reflects the failure (or the removal was invalid):
+            # either way the mark must not outlive this call
+            self._failed.discard(replica)
         moved = {s for s, r in before.items() if r == replica}
         self.stats.moved_on_failure += len(moved)
         info = {"replica": replica, "sessions_moved": len(moved)}

@@ -1,0 +1,92 @@
+"""Hypothesis property tests: replica sets under random churn (DESIGN.md §4.1).
+
+Gated on ``hypothesis`` like the other property files.  Two properties:
+
+* **cross-plane**: across random churn trajectories, host ``lookup_k``
+  and the jitted jnp replica walk stay bit-identical (the Pallas plane is
+  pinned to the jnp plane in test_replicas.py; interpret-mode runs are too
+  slow to fuzz here);
+
+* **replica stability** (the §4.1 disruption bound, exactly): removing
+  bucket b changes a key's replica set ONLY if b appeared among the key's
+  salted-walk candidates (including dedup-rejected ones) — keys whose
+  trace avoided b keep their set verbatim, and every new set is distinct,
+  working, and primary-consistent.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import make_hash, replica_sets  # noqa: E402
+
+ALGOS = ("memento", "anchor", "dx", "jump")
+KEYS = np.random.default_rng(11).integers(0, 2**32, size=128, dtype=np.uint32)
+
+
+def _churn(h, rng, events):
+    for _ in range(events):
+        if h.working > 2 and (rng.random() < 0.6
+                              or getattr(h, "R", None) in ([], None)):
+            if h.name == "jump":
+                h.remove(h.size - 1)
+            else:
+                ws = sorted(h.working_set())
+                h.remove(ws[int(rng.integers(len(ws)))])
+        else:
+            try:
+                h.add()
+            except ValueError:
+                pass
+
+
+@settings(max_examples=8, deadline=None)
+@given(algo=st.sampled_from(ALGOS),
+       n0=st.integers(min_value=8, max_value=96),
+       events=st.integers(min_value=0, max_value=40),
+       seed=st.integers(min_value=0, max_value=2**31))
+def test_host_jnp_replica_sets_bit_identical_under_churn(algo, n0, events,
+                                                         seed):
+    from repro.kernels.replica_lookup import replica_lookup
+
+    h = make_hash(algo, n0, capacity=4 * n0, variant="32")
+    _churn(h, np.random.default_rng(seed), events)
+    k = min(3, h.working)
+    want = replica_sets(h, KEYS, k)
+    got = np.asarray(replica_lookup(KEYS, h.device_image(), k, plane="jnp"))
+    np.testing.assert_array_equal(got, want)
+    assert all(len(set(r)) == k for r in got.tolist())
+
+
+@settings(max_examples=10, deadline=None)
+@given(algo=st.sampled_from(("memento", "anchor", "dx")),
+       n0=st.integers(min_value=16, max_value=96),
+       events=st.integers(min_value=0, max_value=30),
+       seed=st.integers(min_value=0, max_value=2**31))
+def test_replica_stability_under_removal(algo, n0, events, seed):
+    h = make_hash(algo, n0, capacity=4 * n0, variant="32")
+    rng = np.random.default_rng(seed)
+    _churn(h, rng, events)
+    k = min(3, h.working - 1)
+    if k < 1:
+        return
+    before = {}
+    for key in KEYS[:64]:
+        before[int(key)] = h.lookup_k_trace(int(key), k)
+
+    ws = sorted(h.working_set())
+    victim = ws[int(rng.integers(len(ws)))]
+    h.remove(victim)
+
+    for key in KEYS[:64]:
+        old_set, old_cands = before[int(key)]
+        new_set = h.lookup_k(int(key), k)
+        assert len(set(new_set)) == k
+        assert set(new_set) <= h.working_set()
+        assert new_set[0] == h.lookup(int(key))
+        if victim not in old_cands:
+            # the §4.1 disruption bound: an untouched walk is unchanged
+            assert new_set == old_set

@@ -1,0 +1,302 @@
+"""Replica-aware serving layer (DESIGN.md §4): k-replication, bounded load,
+router failover.
+
+The ISSUE 3 acceptance matrix:
+
+  * ``lookup_k`` k-distinctness + slot-0 = plain lookup, every algorithm,
+  * host / jnp / Pallas bit-equivalence of the replica sets across random
+    churn states (``variant="32"``),
+  * bounded-load cap ≤ ⌈c·keys/working⌉ invariant, device assignment
+    bit-identical to the ``BoundedLoadMemento``-preserving host oracle,
+  * load-word deltas riding the epoch store,
+  * router replica-failover before the membership delta lands.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (BoundedLoad, BoundedLoadMemento, DeviceImageStore,
+                        make_hash, replica_sets)
+from repro.core.bounded import bounded_assign_ref
+from repro.core.protocol import round_up
+
+ALGOS = ("memento", "anchor", "dx", "jump")
+
+
+def _state(algo, n0, removals, seed, variant="32"):
+    h = make_hash(algo, n0, capacity=4 * n0, variant=variant)
+    rng = np.random.default_rng(seed)
+    for _ in range(removals):
+        if algo == "jump":
+            h.remove(h.size - 1)
+        else:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+    return h
+
+
+def _load_len(image):
+    if image.algo == "anchor":
+        return image.arrays["A"].shape[0]
+    if image.algo == "memento":
+        return image.arrays["repl"].shape[0]
+    return round_up(image.n)
+
+
+KEYS = np.random.default_rng(3).integers(0, 2**32, size=513, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# lookup_k host semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("variant", ["64", "32"])
+def test_lookup_k_distinct_working_and_primary(algo, variant):
+    h = _state(algo, 64, 20, seed=1, variant=variant)
+    for k in (1, 2, 3, 5):
+        for key in KEYS[:50]:
+            reps = h.lookup_k(int(key), k)
+            assert len(reps) == k
+            assert len(set(reps)) == k  # pairwise distinct
+            assert reps[0] == h.lookup(int(key))  # slot 0 = classic placement
+            assert set(reps) <= h.working_set()
+
+
+def test_lookup_k_rejects_bad_k():
+    h = _state("memento", 8, 4, seed=0)
+    with pytest.raises(ValueError):
+        h.lookup_k(1, 0)
+    with pytest.raises(ValueError):
+        h.lookup_k(1, h.working + 1)
+
+
+def test_lookup_k_equals_working_enumerates_all():
+    h = _state("memento", 6, 2, seed=2)
+    reps = h.lookup_k(12345, h.working)
+    assert set(reps) == h.working_set()
+
+
+# ---------------------------------------------------------------------------
+# host / jnp / Pallas bit-equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("n0,removals", [(16, 0), (16, 6), (200, 130)])
+def test_replica_lookup_three_planes_bit_identical(algo, n0, removals):
+    from repro.kernels.replica_lookup import replica_lookup
+
+    h = _state(algo, n0, removals, seed=n0 + removals)
+    image = h.device_image()
+    k = min(3, h.working)
+    want = replica_sets(h, KEYS, k)  # numpy oracle over the host plane
+    got_jnp = np.asarray(replica_lookup(KEYS, image, k, plane="jnp"))
+    got_pallas = np.asarray(replica_lookup(KEYS, image, k, plane="pallas"))
+    np.testing.assert_array_equal(got_jnp, want)
+    np.testing.assert_array_equal(got_pallas, want)
+
+
+def test_replica_lookup_rejects_unknown_plane():
+    from repro.kernels.replica_lookup import replica_lookup
+
+    h = _state("memento", 16, 0, seed=0)
+    with pytest.raises(ValueError):
+        replica_lookup(KEYS[:4], h.device_image(), 2, plane="cuda")
+
+
+# ---------------------------------------------------------------------------
+# bounded load
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_bounded_load_cap_invariant(algo):
+    h = make_hash(algo, 32, capacity=128, variant="32")
+    bl = BoundedLoad(h, c=1.25)
+    n_keys = 1000
+    bl.assign_batch(KEYS[:n_keys // 2].astype(np.uint64))
+    for key in KEYS[n_keys // 2: n_keys // 2 + 100]:
+        bl.assign(int(key))
+    total = len(bl.assignment)
+    cap = max(1, math.ceil(1.25 * total / bl.working))
+    assert bl.load.max() <= cap  # the c-cap invariant
+    assert bl.load.sum() == total
+    assert bl.peak_to_mean() <= cap / (total / bl.working) + 1e-9
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("plane", ["jnp", "pallas"])
+def test_bounded_assign_device_matches_host_oracle(algo, plane):
+    h = _state(algo, 24, 8, seed=7)
+    image = h.device_image()
+    n_keys = 256
+    cap = max(1, math.ceil(1.25 * n_keys / h.working))
+    load0 = np.zeros(_load_len(image), np.int32)
+
+    from repro.kernels.replica_lookup import bounded_assign_device
+    want, want_load = bounded_assign_ref(h, KEYS[:n_keys], load0, cap)
+    got, got_load = bounded_assign_device(KEYS[:n_keys], image, load0, cap,
+                                          plane=plane)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got_load[: len(want_load)], want_load)
+    assert got_load.max() <= cap
+
+
+def test_bounded_single_assign_is_batch_of_one():
+    """The preserved BoundedLoadMemento semantics ARE the m=1 batch case."""
+    a = BoundedLoadMemento(10, c=1.25)
+    b = BoundedLoadMemento(10, c=1.25)
+    keys = [int(k) for k in KEYS[:300]]
+    for k in keys:
+        a.assign(k)
+    for k in keys:
+        b.assign_batch(np.asarray([k], np.uint64))
+    assert a.assignment == b.assignment
+    np.testing.assert_array_equal(a.load[: b.load.shape[0]],
+                                  b.load[: a.load.shape[0]])
+
+
+def test_bounded_load_words_ride_epoch_deltas():
+    """Assign/release/fail events reach the device as O(changed-words)
+    deltas; the synced load array matches the host's."""
+    bl = BoundedLoadMemento(16, c=1.5, variant="32")
+    store = DeviceImageStore(bl)
+    bl.assign_batch(KEYS[:200].astype(np.uint64))
+    st = store.sync()
+    assert st.mode == "delta"
+    np.testing.assert_array_equal(
+        np.asarray(store.image().arrays["load"])[: bl.load.shape[0]], bl.load)
+
+    victim = sorted(bl.working_set())[0]
+    moves = bl.remove(victim)  # membership + re-spill in one epoch
+    st = store.sync()
+    assert st.mode == "delta" and st.events == 1
+    img = store.image()
+    np.testing.assert_array_equal(
+        np.asarray(img.arrays["load"])[: bl.load.shape[0]], bl.load)
+    assert all(b in bl.working_set() for b in moves.values())
+    # the image still serves plain lookups (load is extra payload)
+    out = store.lookup(KEYS[:64])
+    host = [bl.lookup(int(k)) for k in KEYS[:64]]
+    np.testing.assert_array_equal(out, host)
+
+    bl.release(int(KEYS[0]))
+    assert store.sync().mode == "delta"
+    np.testing.assert_array_equal(
+        np.asarray(store.image().arrays["load"])[: bl.load.shape[0]], bl.load)
+
+
+def test_bounded_remove_moves_only_victims():
+    """The original BoundedLoadMemento contract still holds."""
+    bl = BoundedLoadMemento(10, c=1.25)
+    keys = [int(k) for k in
+            np.random.default_rng(2).integers(0, 2**63, size=2000)]
+    for k in keys:
+        bl.assign(k)
+    assert bl.peak_to_mean() <= 1.3
+    before = dict(bl.assignment)
+    victim = sorted(bl.m.working_set())[0]
+    victims = {k for k, b in before.items() if b == victim}
+    moves = bl.remove(victim)
+    assert set(moves) == victims
+    for k, b in bl.assignment.items():
+        if k not in victims:
+            assert b == before[k]
+
+
+def test_bounded_rejects_bad_c():
+    with pytest.raises(ValueError):
+        BoundedLoadMemento(4, c=1.0)
+
+
+@pytest.mark.parametrize("plane", ["host", "jnp"])
+def test_bounded_infeasible_cap_raises_instead_of_spinning(plane):
+    """cap·buckets < keys can never settle: both planes must raise the
+    host walk's 'no bucket below capacity' error, not loop forever."""
+    h = _state("memento", 4, 0, seed=0)
+    image = h.device_image()
+    keys, cap = KEYS[:16], 1  # 16 keys, 4 buckets × cap 1 = 4 slots
+    load0 = np.zeros(_load_len(image), np.int32)
+    with pytest.raises(RuntimeError, match="no bucket below capacity"):
+        if plane == "host":
+            bounded_assign_ref(h, keys, load0, cap)
+        else:
+            from repro.kernels.replica_lookup import bounded_assign_device
+            bounded_assign_device(keys, image, load0, cap, plane="jnp")
+
+
+# ---------------------------------------------------------------------------
+# router replica-failover
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["memento", "anchor"])
+def test_router_failover_before_delta_lands(algo):
+    from repro.serve.router import SessionRouter
+
+    r = SessionRouter(12, algo=algo, capacity=48, replicas_k=3)
+    sids = np.arange(400, dtype=np.uint64)
+    base = r.route_batch(sids)
+    sets = r.replica_set_batch(sids)
+    assert (sets[:, 0] == base).all()
+    assert all(len(set(row)) == 3 for row in sets.tolist())
+
+    victim = int(np.bincount(base).argmax())
+    r.mark_failed(victim)  # health check fired; NO membership delta yet
+    assert victim in r.replicas  # membership (and the device image) untouched
+    after = r.route_batch(sids)
+    assert victim not in set(after.tolist())
+    moved = after != base
+    # ONLY the victim's sessions fail over, and they go to replica 1
+    assert moved.sum() == (base == victim).sum()
+    np.testing.assert_array_equal(after[moved], sets[moved, 1])
+    # scalar path applies the same rule
+    for s in np.nonzero(moved)[0][:10]:
+        assert r.route(int(sids[s])) == after[s]
+    assert r.stats.failovers > 0
+
+    # the delta lands: the mark clears and membership catches up
+    info = r.fail_replica(victim)
+    assert victim not in r.replicas
+    assert info["control_plane"]["mode"] in ("delta", "snapshot")
+    final = r.route_batch(sids)
+    assert victim not in set(final.tolist())
+
+
+def test_router_all_marked_falls_back_to_primary():
+    from repro.serve.router import SessionRouter
+
+    r = SessionRouter(4, replicas_k=2)
+    for rep in list(r.replicas):
+        r.mark_failed(rep)
+    sid = 7
+    assert r.route(sid) == r.replica_set(sid)[0]
+
+
+# ---------------------------------------------------------------------------
+# elastic failure domains
+# ---------------------------------------------------------------------------
+
+def test_elastic_replica_sets_span_distinct_domains():
+    from repro.runtime.elastic import ElasticCluster
+
+    c = ElasticCluster(16, num_shards=64, replica_k=3, num_domains=4)
+    placement = c.replica_placement()
+    for shard, hosts in placement.items():
+        assert len(hosts) == 3
+        assert len({h % 4 for h in hosts}) == 3  # pairwise-distinct domains
+        assert hosts[0] == c.placement.host_of(shard)
+
+    c.fail(sorted(c.hosts)[0])
+    for shard, hosts in c.replica_placement().items():
+        assert len({h % 4 for h in hosts}) == 3
+        assert set(hosts) <= c.hosts
+
+
+def test_elastic_replica_k_exceeding_domains_raises():
+    from repro.runtime.elastic import ElasticCluster
+
+    c = ElasticCluster(8, num_shards=8, replica_k=3, num_domains=2)
+    with pytest.raises(ValueError):
+        c.replica_hosts(0)
