@@ -15,8 +15,10 @@ device:
 plus the data-plane side of availability: µs/key of bulk lookups served
 from the epoch-N front image *between* the event and the sync (stale but
 consistent serving — the old behaviour was a null image and a blocking
-rebuild), and the fused migration-diff cost that replaces per-key host
-loops in the movement planners.
+rebuild), and the fused epoch-diff cost (one launch of the unified
+engine, DESIGN.md §6) that replaces per-key host loops in the movement
+planners.  Both paths run through :class:`~repro.core.DeviceImageStore`,
+whose ``lookup``/``migration_diff`` are engine configurations.
 
 Emits the repo's usual ``(table, algo, x, metric, value)`` rows and
 returns a JSON-able summary; ``python -m benchmarks.bench_churn --out

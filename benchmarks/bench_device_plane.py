@@ -2,13 +2,16 @@
 
 Compares, at several cluster sizes / removal ratios, µs-per-key of:
   * host scalar Python (the control plane — paper methodology),
-  * vectorized numpy jump32,
-  * jnp batched lookup (jit; CPU backend here, TPU in production),
-  * Pallas kernel in interpret mode (correctness path; Mosaic on real TPU).
+  * the unified engine's jnp program (jit; CPU backend here, TPU in
+    production),
+  * the unified engine's Pallas launch in interpret mode (correctness
+    path; Mosaic on real TPU).
 
-Interpret-mode timings are NOT TPU performance — the derived column to watch
-is µs/key of the jnp path (XLA-compiled vectorized lookup) vs the scalar
-host plane: the data plane amortization that makes bulk routing viable.
+Both device rows are the SAME ``EngineOp`` configuration (DESIGN.md §6) —
+only the plane differs.  Interpret-mode timings are NOT TPU performance —
+the derived column to watch is µs/key of the jnp path (XLA-compiled
+vectorized lookup) vs the scalar host plane: the data plane amortization
+that makes bulk routing viable.
 """
 from __future__ import annotations
 
@@ -20,17 +23,15 @@ import numpy as np
 def bench_device_plane(emit, sizes=((1024, 0), (1024, 300), (65536, 2000)),
                        n_keys=16384):
     import jax.numpy as jnp
-    from repro.core import MementoTables, random_state
-    from repro.core.jax_lookup import memento_lookup
-    from repro.kernels.memento_lookup import dense_lookup
+    from repro.core import random_state
+    from repro.kernels.engine import engine_lookup
 
     keys = np.random.default_rng(0).integers(0, 2**32, size=n_keys, dtype=np.uint32)
     jkeys = jnp.asarray(keys)
 
     for n0, removals in sizes:
         m = random_state(np.random.default_rng(1), n0, removals, variant="32")
-        tabs = MementoTables(m)
-        repl = jnp.asarray(tabs.repl)
+        image = m.device_image()
         tag = f"n{n0}_r{removals}"
 
         t0 = time.perf_counter()
@@ -39,18 +40,18 @@ def bench_device_plane(emit, sizes=((1024, 0), (1024, 300), (65536, 2000)),
         emit("device_plane", "host_scalar", tag, "us_per_key",
              (time.perf_counter() - t0) / 2000 * 1e6)
 
-        jit_lookup = None
-        out = memento_lookup(jkeys, repl, m.n)  # compile+warm
+        out = engine_lookup(jkeys, image, plane="jnp")  # compile+warm
         out.block_until_ready()
         t0 = time.perf_counter()
         for _ in range(5):
-            memento_lookup(jkeys, repl, m.n).block_until_ready()
+            engine_lookup(jkeys, image, plane="jnp").block_until_ready()
         emit("device_plane", "jnp_batched", tag, "us_per_key",
              (time.perf_counter() - t0) / (5 * n_keys) * 1e6)
 
-        out2 = dense_lookup(jkeys, repl, m.n, interpret=True)
+        out2 = engine_lookup(jkeys, image, plane="pallas", interpret=True)
         np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
         t0 = time.perf_counter()
-        dense_lookup(jkeys, repl, m.n, interpret=True).block_until_ready()
+        engine_lookup(jkeys, image, plane="pallas",
+                      interpret=True).block_until_ready()
         emit("device_plane", "pallas_interpret", tag, "us_per_key",
              (time.perf_counter() - t0) / n_keys * 1e6)

@@ -1,0 +1,276 @@
+"""Unified-engine benchmark: fused vs multi-launch ops + mesh scale-out.
+
+Two stories (DESIGN.md §6), for the four algorithms across the paper's
+§VIII scenario groups (stable / one-shot / incremental, ``variant="32"``):
+
+* **fusion** — the engine's single-program ops against their multi-launch
+  decompositions, bit-equality asserted alongside the timing:
+
+    - epoch diff:        ``engine_diff`` (one program, both epoch tables)
+      vs two independent lookups + host compare,
+    - replica-set diff:  ``engine_diff(k=2)`` vs two k-replica lookups +
+      host compare,
+    - bounded k-replica: the fused ``engine_lookup(k, load=, cap=)``
+      throughput relative to the plain k-replica lookup (the op had no
+      single-launch form before the engine),
+
+* **scale-out** — single-device engine throughput vs the mesh-sharded
+  :class:`~repro.serve.plane.ShardedLookupPlane` for 10⁵–10⁷-key batches
+  (``--full`` reaches 10⁷), with sharded == single-device equality
+  asserted.  Run standalone (``python -m benchmarks.bench_engine``) the
+  module forces ``--xla_force_host_platform_device_count=2`` BEFORE jax
+  initializes, so even the CPU container exercises a real 2-device mesh;
+  under ``benchmarks.run --engine`` it uses whatever devices exist.
+
+Correctness gates are deterministic and CI-hard (``check_engine_claims``);
+timings — including the ≥1.8× two-device target at 10⁶ keys — are
+advisory on CPU (interpret-mode Pallas and simulated host devices are not
+TPU performance).  ``--out BENCH_engine.json`` writes the artifact CI
+uploads and ``benchmarks/report.py`` renders into RESULTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+ALGOS = ("memento", "jump", "anchor", "dx")
+SCENARIOS = ("stable", "oneshot", "incremental")
+
+
+def _remove(h, count, rng):
+    for _ in range(count):
+        if h.name == "jump":
+            h.remove(h.size - 1)
+        else:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+
+
+def _scenario_state(algo, scenario, w, a_over_w, frac, rng):
+    from repro.core import make_hash
+
+    h = make_hash(algo, w, capacity=a_over_w * w, variant="32")
+    if scenario == "oneshot":
+        _remove(h, int(frac * w), rng)
+    elif scenario == "incremental":
+        # ride out removals one by one (worst-case replacement chains)
+        _remove(h, int(frac * w), rng)
+        for _ in range(int(0.1 * w)):
+            h.add()
+            _remove(h, 1, rng)
+    return h
+
+
+def _time(fn, repeats=3):
+    fn()  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def bench_engine(emit, w=1024, a_over_w=4, key_counts=(100_000, 1_000_000),
+                 k_values=(1, 2, 3), algos=ALGOS, scenarios=SCENARIOS,
+                 frac=0.5, seed=0):
+    """Emit (table, algo, x, metric, value) rows; return the JSON summary."""
+    import jax
+
+    from repro.core import DeviceImageStore
+    from repro.kernels.engine import engine_diff, engine_lookup
+    from repro.serve.plane import ShardedLookupPlane
+
+    rng = np.random.default_rng(seed)
+    devices = len(jax.devices())
+    summary: dict = {
+        "bench": "engine", "w": w, "key_counts": list(key_counts),
+        "k_values": list(k_values),
+        "mesh": {"devices": devices, "axes": ["data"]},
+        "results": {},
+    }
+
+    for algo in algos:
+        for scenario in scenarios:
+            h = _scenario_state(algo, scenario, w, a_over_w, frac, rng)
+            store = DeviceImageStore(h)
+            image = store.image()
+            key = f"{algo}_{scenario}"
+            entry = summary["results"].setdefault(key, {
+                "algo": algo, "scenario": scenario, "working": h.working,
+            })
+
+            # -- single-device vs mesh throughput -------------------------
+            plane = ShardedLookupPlane(store)
+            for n_keys in key_counts:
+                keys = rng.integers(0, 2**32, size=n_keys, dtype=np.uint32)
+                single = np.asarray(engine_lookup(keys, image, plane="jnp"))
+                t_single = _time(lambda: np.asarray(
+                    engine_lookup(keys, image, plane="jnp")))
+                sharded = plane.lookup(keys)
+                t_mesh = _time(lambda: plane.lookup(keys))
+                equal = bool(np.array_equal(sharded, single))
+                tag = f"{n_keys}"
+                emit("engine_throughput", algo, tag,
+                     f"{scenario}_single_us_per_key", t_single / n_keys * 1e6)
+                emit("engine_throughput", algo, tag,
+                     f"{scenario}_mesh{devices}_us_per_key",
+                     t_mesh / n_keys * 1e6)
+                emit("engine_throughput", algo, tag,
+                     f"{scenario}_mesh_speedup", t_single / t_mesh)
+                entry[f"single_us_per_key_{n_keys}"] = t_single / n_keys * 1e6
+                entry[f"mesh_us_per_key_{n_keys}"] = t_mesh / n_keys * 1e6
+                entry[f"mesh_speedup_{n_keys}"] = t_single / t_mesh
+                entry["sharded_equal"] = entry.get("sharded_equal", True) and equal
+
+            # -- fused vs multi-launch ops (smallest key count) -----------
+            keys = rng.integers(0, 2**32, size=min(key_counts),
+                                dtype=np.uint32)
+            nk = len(keys)
+            _remove(h, max(1, w // 100), rng)
+            store.sync()
+            old, new = store.previous_image(), store.image()
+
+            d = engine_diff(keys, old, new, plane="jnp")
+            t_fused = _time(lambda: engine_diff(keys, old, new, plane="jnp"))
+
+            def two_launch(k=1):
+                o = np.asarray(engine_lookup(keys, old, k=k, plane="jnp"))
+                n_ = np.asarray(engine_lookup(keys, new, k=k, plane="jnp"))
+                return o, n_, (o != n_) if k == 1 else (o != n_).any(axis=1)
+
+            o2, n2, m2 = two_launch()
+            fused_equal = (np.array_equal(d.old, o2)
+                           and np.array_equal(d.new, n2)
+                           and np.array_equal(d.moved, m2))
+            t_two = _time(lambda: two_launch())
+            emit("engine_fusion", algo, scenario, "diff_fused_us_per_key",
+                 t_fused / nk * 1e6)
+            emit("engine_fusion", algo, scenario, "diff_two_launch_us_per_key",
+                 t_two / nk * 1e6)
+            entry["diff_fused_us_per_key"] = t_fused / nk * 1e6
+            entry["diff_two_launch_us_per_key"] = t_two / nk * 1e6
+
+            if max(k_values) > 1:
+                kk = max(k for k in k_values if k > 1)
+                dk = engine_diff(keys, old, new, k=kk, plane="jnp")
+                t_kfused = _time(lambda: engine_diff(keys, old, new, k=kk,
+                                                     plane="jnp"))
+                ok2, nk2, mk2 = two_launch(kk)
+                fused_equal = (fused_equal and np.array_equal(dk.old, ok2)
+                               and np.array_equal(dk.new, nk2)
+                               and np.array_equal(dk.moved, mk2))
+                t_ktwo = _time(lambda: two_launch(kk))
+                emit("engine_fusion", algo, scenario,
+                     f"replica{kk}_diff_fused_us_per_key", t_kfused / nk * 1e6)
+                emit("engine_fusion", algo, scenario,
+                     f"replica{kk}_diff_two_launch_us_per_key",
+                     t_ktwo / nk * 1e6)
+                entry[f"replica{kk}_diff_fused_us_per_key"] = t_kfused / nk * 1e6
+                entry[f"replica{kk}_diff_two_launch_us_per_key"] = t_ktwo / nk * 1e6
+
+                # fused bounded k-replica: no pre-engine single-launch form
+                from repro.kernels.engine import bounded_load_len
+                cap = max(2, math.ceil(1.25 * nk / h.working))
+                load = np.zeros(bounded_load_len(new), np.int32)
+                full = sorted(h.working_set())[: max(1, h.working // 4)]
+                load[full] = cap
+                bounded = np.asarray(engine_lookup(
+                    keys, new, k=kk, load=load, cap=cap, plane="jnp"))
+                entry["bounded_under_cap"] = bool((load[bounded] < cap).all())
+                t_bounded = _time(lambda: np.asarray(engine_lookup(
+                    keys, new, k=kk, load=load, cap=cap, plane="jnp")))
+                t_plain = _time(lambda: np.asarray(engine_lookup(
+                    keys, new, k=kk, plane="jnp")))
+                emit("engine_fusion", algo, scenario,
+                     f"bounded_replica{kk}_us_per_key", t_bounded / nk * 1e6)
+                emit("engine_fusion", algo, scenario,
+                     f"plain_replica{kk}_us_per_key", t_plain / nk * 1e6)
+                entry[f"bounded_replica{kk}_us_per_key"] = t_bounded / nk * 1e6
+                entry[f"plain_replica{kk}_us_per_key"] = t_plain / nk * 1e6
+
+            entry["fused_equal"] = fused_equal
+    return summary
+
+
+def check_engine_claims(summary: dict) -> bool:
+    """Deterministic acceptance gates (timings stay advisory):
+
+    * sharded lookups equal the single-device engine for every cell,
+    * fused diffs (k=1 and k>1) are bit-identical to their two-launch
+      decompositions,
+    * every fused bounded-replica bucket is below the cap.
+    """
+    ok = True
+
+    def claim(name, cond):
+        nonlocal ok
+        print(f"# claim: {name}: {'OK' if cond else 'FAIL'}")
+        ok &= bool(cond)
+
+    for key, e in summary["results"].items():
+        claim(f"{key}: sharded == single-device", e.get("sharded_equal"))
+        claim(f"{key}: fused diff == two-launch diff", e.get("fused_equal"))
+        if "bounded_under_cap" in e:
+            claim(f"{key}: bounded replicas below cap", e["bounded_under_cap"])
+    devices = summary["mesh"]["devices"]
+    for key, e in summary["results"].items():
+        for n_keys in summary["key_counts"]:
+            sp = e.get(f"mesh_speedup_{n_keys}")
+            if sp is not None:
+                print(f"# advisory: {key} mesh({devices}) speedup "
+                      f"@{n_keys}: {sp:.2f}×")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--full", action="store_true", help="10⁷-key batches")
+    ap.add_argument("--out", default=None, help="write JSON summary here")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        kw = dict(w=256, key_counts=(100_000,), k_values=(1, 2),
+                  scenarios=("stable", "oneshot"))
+    elif args.full:
+        kw = dict(w=10_000, key_counts=(100_000, 1_000_000, 10_000_000))
+    else:
+        kw = dict(w=1024, key_counts=(100_000, 1_000_000))
+
+    rows = []
+
+    def emit(table, algo, x, metric, value):
+        rows.append((table, algo, x, metric, value))
+        print(f"{table},{algo},{x},{metric},{value:.4f}"
+              if isinstance(value, float) else
+              f"{table},{algo},{x},{metric},{value}", flush=True)
+
+    print("table,algo,x,metric,value")
+    t0 = time.time()
+    summary = bench_engine(emit, **kw)
+    ok = check_engine_claims(summary)
+    summary["claims_pass"] = bool(ok)
+    summary["elapsed_s"] = round(time.time() - t0, 2)
+    if args.out:
+        Path(args.out).write_text(json.dumps(summary, indent=2) + "\n")
+        print(f"# wrote {args.out}")
+    print(f"# total {summary['elapsed_s']}s — engine claims: "
+          f"{'PASS' if ok else 'MISMATCH'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    # Force a 2-device host platform BEFORE jax initializes so the CPU
+    # container exercises a real mesh (the dry-run launcher's trick).
+    if "--xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=2").strip()
+    sys.exit(main())

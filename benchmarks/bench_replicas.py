@@ -5,8 +5,8 @@ For all four algorithms across the paper's §VIII scenario groups (stable /
 one-shot / incremental removals, ``variant="32"`` states) this measures:
 
   * **k-replica lookup throughput** — µs/key to compute k ∈ {1,2,3}
-    distinct replicas per key with :func:`repro.kernels.replica_lookup.
-    replica_lookup` (one jitted jnp program; one Pallas launch — interpret
+    distinct replicas per key with the unified engine's ``k>1``
+    configuration (one jitted jnp program; one Pallas launch — interpret
     mode on CPU, so the Pallas column is a correctness path off-TPU), and
 
   * **bounded-load balance** — peak-to-mean load after assigning the key
@@ -71,7 +71,13 @@ def bench_replicas(emit, w=1024, a_over_w=4, n_keys=8192, pallas_keys=2048,
     """Emit (table, algo, x, metric, value) rows; return the JSON summary."""
     import jax.numpy as jnp
     from repro.core.protocol import replica_sets
-    from repro.kernels.replica_lookup import bounded_assign_device, replica_lookup
+    # both ops are single configurations of the unified engine (DESIGN.md §6)
+    from repro.kernels.engine import (bounded_assign as bounded_assign_device,
+                                      engine_lookup)
+
+    def replica_lookup(keys, image, k, *, plane):
+        out = engine_lookup(keys, image, k=k, plane=plane)
+        return jnp.reshape(out, (-1, 1)) if k == 1 else out
 
     rng = np.random.default_rng(seed)
     keys = rng.integers(0, 2**32, size=n_keys, dtype=np.uint32)
@@ -119,13 +125,8 @@ def bench_replicas(emit, w=1024, a_over_w=4, n_keys=8192, pallas_keys=2048,
                 entry[f"k{k}_pallas_us_per_key"] = pus
 
             # -- bounded-load balance ------------------------------------
-            from repro.core.protocol import round_up
-            if algo == "anchor":
-                load_len = image.arrays["A"].shape[0]
-            elif algo == "memento":
-                load_len = image.arrays["repl"].shape[0]
-            else:  # dx packs bits, jump has no table: load is bucket-indexed
-                load_len = round_up(image.n)
+            from repro.kernels.engine import bounded_load_len
+            load_len = bounded_load_len(image)
             mean = n_keys / working
             for c in C_VALUES:
                 if math.isinf(c):

@@ -3,11 +3,12 @@
 Two modes:
 
 * default (``--results``, the checked-in story): render **RESULTS.md** at
-  the repo root from the three benchmark artifacts —
+  the repo root from the four benchmark artifacts —
 
       benchmarks/results/paper/bench.csv        (paper §VIII reproduction)
       benchmarks/results/BENCH_churn.json       (epoch-delta control plane)
       benchmarks/results/BENCH_replicas.json    (k-replication + bounded load)
+      benchmarks/results/BENCH_engine.json      (unified engine + mesh plane)
 
   Tables are keyed to the paper's figure numbers.  Rendering is a pure
   function of the artifacts, so CI can regenerate RESULTS.md and fail on
@@ -110,10 +111,54 @@ def _replica_balance_table(rep: dict) -> str:
     return "\n".join(out)
 
 
+def _engine_throughput_table(eng: dict) -> str:
+    devices = eng["mesh"]["devices"]
+    key_counts = eng["key_counts"]
+    head = ["state"]
+    for n in key_counts:
+        head += [f"single µs/key @{n:,}", f"mesh({devices}) µs/key @{n:,}",
+                 f"speedup @{n:,}"]
+    out = ["| " + " | ".join(head) + " |", "|---" * len(head) + "|"]
+    for key, e in eng["results"].items():
+        cells = []
+        for n in key_counts:
+            if f"single_us_per_key_{n}" not in e:
+                cells += ["—", "—", "—"]
+                continue
+            cells += [f"{e[f'single_us_per_key_{n}']:.3f}",
+                      f"{e[f'mesh_us_per_key_{n}']:.3f}",
+                      f"{e[f'mesh_speedup_{n}']:.2f}×"]
+        out.append(f"| {key} | " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+def _engine_fusion_table(eng: dict) -> str:
+    kk = max((k for k in eng.get("k_values", [1]) if k > 1), default=None)
+    head = ["state", "diff fused", "diff 2-launch"]
+    if kk:
+        head += [f"replica{kk} diff fused", f"replica{kk} diff 2-launch",
+                 f"bounded replica{kk}", f"plain replica{kk}"]
+    out = ["All columns µs/key.\n",
+           "| " + " | ".join(head) + " |",
+           "|---" * len(head) + "|"]
+    for key, e in eng["results"].items():
+        cells = [f"{e['diff_fused_us_per_key']:.3f}",
+                 f"{e['diff_two_launch_us_per_key']:.3f}"]
+        if kk:
+            cells += [
+                f"{e.get(f'replica{kk}_diff_fused_us_per_key', float('nan')):.3f}",
+                f"{e.get(f'replica{kk}_diff_two_launch_us_per_key', float('nan')):.3f}",
+                f"{e.get(f'bounded_replica{kk}_us_per_key', float('nan')):.3f}",
+                f"{e.get(f'plain_replica{kk}_us_per_key', float('nan')):.3f}"]
+        out.append(f"| {key} | " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
 def render_results() -> str:
     rows = _load_csv(RESULTS_DIR / "paper" / "bench.csv")
     churn = json.loads((RESULTS_DIR / "BENCH_churn.json").read_text())
     rep = json.loads((RESULTS_DIR / "BENCH_replicas.json").read_text())
+    eng = json.loads((RESULTS_DIR / "BENCH_engine.json").read_text())
 
     s = []
     s.append("# RESULTS — measured reproduction tables\n")
@@ -121,8 +166,9 @@ def render_results() -> str:
         "**Generated file — do not edit.**  Regenerate with\n"
         "`PYTHONPATH=src python -m benchmarks.report` from the checked-in\n"
         "artifacts `benchmarks/results/paper/bench.csv`,\n"
-        "`benchmarks/results/BENCH_churn.json`, and\n"
-        "`benchmarks/results/BENCH_replicas.json` (CI fails on drift).\n"
+        "`benchmarks/results/BENCH_churn.json`,\n"
+        "`benchmarks/results/BENCH_replicas.json`, and\n"
+        "`benchmarks/results/BENCH_engine.json` (CI fails on drift).\n"
         "Numbers are CPU-budget runs (small sizes, Pallas in interpret\n"
         "mode) — orderings and invariants are the signal, absolute\n"
         "timings are not TPU performance.  See [README.md](README.md) for\n"
@@ -175,6 +221,20 @@ def render_results() -> str:
     claims = "PASS" if rep.get("claims_pass") else "MISMATCH"
     s.append(f"Replica claims at capture time: **{claims}** "
              f"(w={rep.get('w')}, n_keys={rep.get('n_keys')}).\n")
+
+    s.append("## Beyond paper: the unified engine + mesh-sharded plane "
+             "(DESIGN.md §6, `BENCH_engine.json`)\n")
+    s.append("### Single-device vs mesh throughput "
+             "(`ShardedLookupPlane`, jnp plane)\n")
+    s.append("Simulated host devices on CPU — speedups are advisory; the "
+             "sharded == single-device equality gates are the hard part.\n")
+    s.append(_engine_throughput_table(eng) + "\n")
+    s.append("### Fused ops vs their multi-launch decompositions "
+             "(bit-identical, one program each)\n")
+    s.append(_engine_fusion_table(eng) + "\n")
+    claims = "PASS" if eng.get("claims_pass") else "MISMATCH"
+    s.append(f"Engine claims at capture time: **{claims}** "
+             f"(w={eng.get('w')}, devices={eng['mesh']['devices']}).\n")
     return "\n".join(s)
 
 

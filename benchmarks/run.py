@@ -1,13 +1,17 @@
 """Benchmark driver — one function per paper table/figure.
 
 Prints ``table,algo,x,metric,value`` CSV rows to stdout and writes them to
-``benchmarks/results/paper/bench.csv``; finishes with a PAPER-CLAIMS check
-section comparing the measured orderings against §VIII of the paper.
+a RUN-SCOPED directory (``benchmarks/results/runs/<timestamp>/bench.csv``
+or ``--out-dir``) so ordinary runs never dirty the tracked golden artifact;
+pass ``--update-golden`` to rewrite ``benchmarks/results/paper/bench.csv``
+(the file RESULTS.md is rendered from).  Finishes with a PAPER-CLAIMS
+check section comparing the measured orderings against §VIII of the paper.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run            # CPU-budget sizes
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale (10⁶)
     PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke sizes
+    PYTHONPATH=src python -m benchmarks.run --update-golden  # refresh golden
 """
 from __future__ import annotations
 
@@ -19,7 +23,8 @@ from pathlib import Path
 
 from . import paper_bench as pb
 
-RESULTS = Path(__file__).resolve().parent / "results" / "paper"
+RESULTS_ROOT = Path(__file__).resolve().parent / "results"
+GOLDEN = RESULTS_ROOT / "paper"
 
 
 def main(argv=None) -> int:
@@ -32,7 +37,18 @@ def main(argv=None) -> int:
                     help="also run the per-event churn control-plane benchmark")
     ap.add_argument("--replicas", action="store_true",
                     help="also run the k-replication + bounded-load benchmark")
+    ap.add_argument("--engine", action="store_true",
+                    help="also run the unified-engine / sharded-plane benchmark")
+    ap.add_argument("--out-dir", default=None,
+                    help="write bench.csv here (default: a run-scoped dir "
+                         "under benchmarks/results/runs/)")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="rewrite the tracked golden "
+                         "benchmarks/results/paper/bench.csv")
     args = ap.parse_args(argv)
+    if args.update_golden and args.out_dir:
+        ap.error("--update-golden writes the tracked golden artifact; "
+                 "it cannot be combined with --out-dir")
 
     if args.quick:
         sizes, n_keys = [10, 100], 2_000
@@ -89,12 +105,28 @@ def main(argv=None) -> int:
                            inc_fractions=(0.5,))
         else:
             bench_replicas(emit)
+    if args.engine:
+        # fused vs legacy multi-launch + single-device vs mesh throughput
+        # on the unified engine (DESIGN.md §6)
+        from .bench_engine import bench_engine
+        if args.quick:
+            bench_engine(emit, w=256, key_counts=(10_000,), k_values=(1, 2))
+        else:
+            bench_engine(emit)
 
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    with open(RESULTS / "bench.csv", "w", newline="") as f:
+    if args.update_golden:
+        out_dir = GOLDEN
+    else:
+        out_dir = Path(args.out_dir) if args.out_dir else (
+            RESULTS_ROOT / "runs" / time.strftime("%Y%m%d-%H%M%S"))
+    out_dir.mkdir(parents=True, exist_ok=True)
+    with open(out_dir / "bench.csv", "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(["table", "algo", "x", "metric", "value"])
         w.writerows(rows)
+    print(f"# wrote {out_dir / 'bench.csv'}"
+          + ("" if args.update_golden else " (run-scoped; use "
+             "--update-golden to refresh the tracked artifact)"))
 
     ok = check_paper_claims(rows)
     print(f"# total {time.time() - t0:.1f}s — paper-claims check: "

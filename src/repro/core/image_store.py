@@ -174,27 +174,28 @@ class DeviceImageStore:
                            scalars=dict(delta.scalars), epoch=delta.epoch)
 
     # -- data plane ------------------------------------------------------------
-    def lookup(self, keys, *, plane: str | None = None, **kw) -> np.ndarray:
-        """Bulk lookup against the front image (jitted jnp or Pallas).
+    def lookup(self, keys, *, plane: str | None = None, k: int = 1,
+               **kw) -> np.ndarray:
+        """Bulk lookup against the front image via the unified engine
+        (DESIGN.md §6; jitted jnp or one Pallas launch).
 
-        The jnp path compiles once per (algo, shapes); the store's stable
-        padded capacities make every subsequent epoch a cache hit.
+        Compiles once per engine configuration and shape set; the store's
+        stable padded capacities make every subsequent epoch a cache hit.
+        ``k > 1`` returns [K, k] replica sets in the same single program.
         Defaults to the store's configured apply plane.
         """
+        from repro.kernels.engine import engine_lookup
+
         plane = plane or self.plane
-        if plane == "jnp" and not kw:
-            from repro.core.jax_lookup import lookup_image_jit
+        return np.asarray(engine_lookup(keys, self._front, k=k, plane=plane,
+                                        **kw))
 
-            return np.asarray(lookup_image_jit(keys, self._front))
-        from repro.kernels import ops
-
-        return np.asarray(ops.device_lookup(
-            keys, self._front, plane=plane, **kw))
-
-    def migration_diff(self, keys, *, plane: str = "jnp", **kw):
-        """Moved-key mask between the retained epoch and the front epoch."""
-        from repro.kernels.migrate import migration_diff
+    def migration_diff(self, keys, *, plane: str = "jnp", k: int = 1, **kw):
+        """Moved-key mask between the retained epoch and the front epoch
+        (one fused engine launch; ``k > 1`` diffs whole replica sets)."""
+        from repro.kernels.engine import engine_diff
 
         if self._prev is None:
             raise ValueError("no previous epoch retained (sync() first)")
-        return migration_diff(keys, self._prev, self._front, plane=plane, **kw)
+        return engine_diff(keys, self._prev, self._front, plane=plane, k=k,
+                           **kw)

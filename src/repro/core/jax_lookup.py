@@ -16,8 +16,6 @@ geometric O(a/w) probe count.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -148,21 +146,15 @@ def lookup_image(keys, image):
     return lookup_dispatch(image.algo, keys, arrays, image_scalar_vec(image))
 
 
-@functools.partial(jax.jit, static_argnames=("algo",))
-def _lookup_image_jit(keys, arrays, scalars, *, algo):
-    return lookup_dispatch(algo, keys, arrays, scalars)
-
-
 def lookup_image_jit(keys, image):
-    """Jitted :func:`lookup_image`: compiles once per (algo, shapes) and is
-    reused across epochs — the serving path of the epoch store, where
-    stable 128-padded capacities make every churn event shape-preserving."""
-    from repro.core.protocol import image_scalar_vec
+    """Jitted :func:`lookup_image` — now a shim over the unified engine's
+    jnp configuration (kept for one release alongside the kernel shims):
+    compiles once per (algo, shapes) and is reused across epochs, since
+    the epoch store's stable 128-padded capacities make every churn event
+    shape-preserving."""
+    from repro.kernels.engine import engine_lookup
 
-    keys = jnp.asarray(keys, dtype=jnp.uint32)
-    arrays = {k: jnp.asarray(v) for k, v in image.arrays.items()}
-    scalars = tuple(jnp.asarray(s, jnp.int32) for s in image_scalar_vec(image))
-    return _lookup_image_jit(keys, arrays, scalars, algo=image.algo)
+    return engine_lookup(keys, image, plane="jnp")
 
 
 def memento_lookup_hosted(keys, memento_tables):

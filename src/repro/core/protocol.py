@@ -75,23 +75,28 @@ class ReplicatedLookup:
         return hash2_64(key, salt)
 
     def lookup_k_filtered(self, key: int, k: int, reject,
-                          trace: list | None = None) -> list[int]:
+                          trace: list | None = None,
+                          check_first: bool = False) -> list[int]:
         """The one salted walk every k-replica variant shares.
 
         ``reject(cand, chosen)`` skips a candidate the way the dedup rule
         skips duplicates (plain ``lookup_k`` passes exactly that rule;
         failure-domain placement adds a domain check — see
-        ``runtime/elastic.domain_distinct_replicas``).  Slot 0 is always the
-        plain lookup.  ``trace``, if given, collects every salted-lookup
-        result in walk order (rejected ones included).  Keeping the walk in
-        ONE place is what keeps the host bit-identical to the device planes
-        (``kernels/replica_lookup.replica_body``).
+        ``runtime/elastic.domain_distinct_replicas``).  Slot 0 is the plain
+        lookup, accepted unconditionally unless ``check_first`` — the
+        bounded-replica op (``kernels/engine.bounded_replica_sets``) applies
+        its load-cap rule to slot 0 too, so even the primary replica walks
+        past full buckets.  ``trace``, if given, collects every
+        salted-lookup result in walk order (rejected ones included).
+        Keeping the walk in ONE place is what keeps the host bit-identical
+        to the device planes (``kernels/engine.replica_body``).
         """
         if k < 1:
             raise ValueError("k must be ≥ 1")
-        out = [self.lookup(key)]
+        first = self.lookup(key)
         if trace is not None:
-            trace.append(out[0])
+            trace.append(first)
+        out = [] if check_first and reject(first, []) else [first]
         salt = 1
         while len(out) < k:
             if salt > REPLICA_SALT_CAP:

@@ -27,10 +27,11 @@ class ShardPlacement:
 
     Movement plans (``fail_host``/``add_host``) run on the device plane when
     the state is TPU-native (``variant="32"``): the epoch-N and epoch-N+1
-    images are diffed by the fused migration kernel
-    (:func:`repro.kernels.migrate.migration_diff`) instead of per-shard host
-    loops, and membership events reach the device as O(changed-words) deltas
-    through a :class:`~repro.core.DeviceImageStore` (DESIGN.md §3.5).
+    images are diffed by ONE fused launch of the unified lookup engine
+    (:func:`repro.kernels.engine.engine_diff`, DESIGN.md §6) instead of
+    per-shard host loops, and membership events reach the device as
+    O(changed-words) deltas through a
+    :class:`~repro.core.DeviceImageStore` (DESIGN.md §3.5).
     """
 
     def __init__(self, num_shards: int, num_hosts: int, variant: str = "32",

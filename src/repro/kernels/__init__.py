@@ -1,7 +1,10 @@
-# Device data plane: Pallas TPU lookup kernels for the full algorithm
-# family (memento/anchor/dx/jump_lookup.py), the shared 32-bit hash
-# primitives (primitives.py), the jitted dispatch (ops.device_lookup),
-# and the oracles kernel tests compare against (ref.py).  See DESIGN.md §3.
-# Control-plane kernels: delta_apply.py (epoch-delta scatter, §3.5) and
-# migrate.py (fused two-epoch diff, §3.5).  Replica-aware serving:
-# replica_lookup.py (salted k-replication + bounded-load chain walk, §4).
+# Device data plane: ONE unified lookup engine (engine.py, DESIGN.md §6)
+# — a single tiled Pallas dispatch (and matching jitted jnp program) whose
+# static EngineOp configuration covers plain lookup, k-replication,
+# bounded-load (incl. the fused k-replica-under-cap op), chain-walk
+# assignment rounds, and one/two-epoch diffs for all four algorithms.
+# ops.device_lookup is the public image-generic entry; primitives.py holds
+# the shared 32-bit hash arithmetic; ref.py the oracles kernel tests
+# compare against; delta_apply.py the epoch-delta scatter (§3.5).
+# memento/anchor/dx/jump/replica_lookup.py and migrate.py are thin
+# re-export shims kept for one release.

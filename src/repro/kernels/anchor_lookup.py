@@ -1,96 +1,9 @@
-"""Pallas TPU kernel: batched AnchorHash lookup.
+"""AnchorHash lookup — re-export shim over :mod:`repro.kernels.engine`.
 
-Same block-parallel shape as the Memento kernel (image layout: DESIGN.md
-§3.3; kernel structure: §3.4): the grid
-runs over ``(BLOCK_ROWS, 128)`` uint32 key blocks; the A-array image (removal
-"timestamps") and the K-array (wrap successors) sit in VMEM for every
-program; the capacity ``a`` travels as a dynamic prefetched scalar so device
-buffers keep a stable shape across resizes.
-
-The lane-synchronous loops mirror the host lookup exactly:
-
-  * outer: while the lane's bucket is removed (``A[b] > 0``), re-hash into
-    its wrap set ``hash(key, b) % A[b]``,
-  * inner: follow ``K`` successors while the candidate was removed
-    at-or-after ``b`` (``A[h] ≥ A[b]``) — a gather chain, no pointer chase.
-
-Expected sweeps ≈ ln(a/w) (AnchorHash Thm. 4).  Bit-identical to
-``core/jax_lookup.anchor_lookup`` and to the ``variant="32"`` host plane.
+The A/K-array kernel body now lives as the ``anchor`` configuration of the
+unified lookup engine (DESIGN.md §6).  Kept for one release; new code
+should target :mod:`repro.kernels.engine`.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from .memento_lookup import DEFAULT_BLOCK_ROWS, _pad_rows
-from .primitives import fmix32, gather1d, hash2
-
-_U = jnp.uint32
-
-
-def anchor_body(keys, A, K, a):
-    """Kernel-side Anchor lookup body over flat VMEM A/K (shared with the
-    fused migration-diff kernel in ``kernels/migrate.py``)."""
-    b = (fmix32(keys) % a.astype(_U)).astype(jnp.int32)
-
-    def outer_cond(b):
-        return jnp.any(gather1d(A, b) > 0)
-
-    def outer_body(b):
-        Ab = gather1d(A, b)
-        active = Ab > 0
-        denom = jnp.where(active, Ab, 1).astype(_U)
-        h = (hash2(keys, b) % denom).astype(jnp.int32)
-
-        def inner_cond(h):
-            return jnp.any(active & (gather1d(A, h) >= Ab))
-
-        def inner_body(h):
-            follow = active & (gather1d(A, h) >= Ab)  # removed at-or-after b
-            return jnp.where(follow, gather1d(K, h), h)
-
-        h = jax.lax.while_loop(inner_cond, inner_body, h)
-        return jnp.where(active, h, b)
-
-    return jax.lax.while_loop(outer_cond, outer_body, b)
-
-
-def _anchor_kernel(a_ref, keys_ref, A_ref, K_ref, out_ref):
-    keys = keys_ref[...].astype(_U)
-    A = A_ref[...].reshape(-1)  # (a_pad,) int32: 0 = working, else |W| at removal
-    K = K_ref[...].reshape(-1)  # (a_pad,) int32: wrap successor
-    out_ref[...] = anchor_body(keys, A, K, a_ref[0])
-
-
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def anchor_lookup(keys, A, K, a, *, block_rows: int = DEFAULT_BLOCK_ROWS,
-                  interpret: bool = True):
-    """Batched AnchorHash lookup: keys uint32 [K] → working bucket ids int32."""
-    keys2d, k = _pad_rows(keys.astype(_U))
-    rows = keys2d.shape[0]
-    block_rows = min(block_rows, rows)
-    grid = (-(-rows // block_rows),)
-    pad = A.shape[0]
-    shape2d = (-(-pad // 128), 128) if pad % 128 == 0 else (pad, 1)
-    A2d, K2d = A.reshape(shape2d), K.reshape(shape2d)
-
-    out = pl.pallas_call(
-        _anchor_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_rows, 128), lambda i, a_s: (i, 0)),
-                pl.BlockSpec(shape2d, lambda i, a_s: (0, 0)),
-                pl.BlockSpec(shape2d, lambda i, a_s: (0, 0)),
-            ],
-            out_specs=pl.BlockSpec((block_rows, 128), lambda i, a_s: (i, 0)),
-        ),
-        out_shape=jax.ShapeDtypeStruct(keys2d.shape, jnp.int32),
-        interpret=interpret,
-    )(jnp.asarray([a], jnp.int32), keys2d, A2d, K2d)
-    return out.reshape(-1)[:k]
+from .engine import DEFAULT_BLOCK_ROWS, anchor_body, anchor_lookup  # noqa: F401

@@ -1,86 +1,9 @@
-"""Pallas TPU kernel: batched DxHash lookup.
+"""DxHash lookup — re-export shim over :mod:`repro.kernels.engine`.
 
-Block-parallel pseudo-random probing (image layout: DESIGN.md §3.3;
-kernel structure: §3.4): the grid runs over
-``(BLOCK_ROWS, 128)`` uint32 key blocks; the packed active bitmap (bucket
-``b`` ↔ bit ``b & 31`` of word ``b >> 5``, Θ(a) *bits* of VMEM) is resident
-per program.  Three dynamic scalars are prefetched: the capacity ``a``, the
-probe bound (64·⌈a/w⌉, the host's cap), and the precomputed first-working
-``fallback`` bucket that catches the vanishing-probability bound overrun.
-
-The probe loop is lane-synchronous: step ``i`` tests candidate
-``hash(key, i) % a`` for every unsettled lane at once (word gather + bit
-test); a block runs until all 128·BLOCK_ROWS lanes hit a working bucket —
-max-over-lanes of geometric draws with success rate w/a.  Bit-identical to
-``core/jax_lookup.dx_lookup`` and to the ``variant="32"`` host plane.
+The packed-bitmap probing body now lives as the ``dx`` configuration of
+the unified lookup engine (DESIGN.md §6).  Kept for one release; new code
+should target :mod:`repro.kernels.engine`.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from .memento_lookup import DEFAULT_BLOCK_ROWS, _pad_rows
-from .primitives import gather1d, hash2
-
-_U = jnp.uint32
-
-
-def dx_body(keys, words, a, max_probes, fallback):
-    """Kernel-side Dx lookup body over the flat VMEM bitmap (shared with the
-    fused migration-diff kernel in ``kernels/migrate.py``)."""
-    b0 = jnp.zeros(keys.shape, jnp.int32)
-    found0 = jnp.zeros(keys.shape, jnp.bool_)
-
-    def cond(state):
-        i, _, found = state
-        return (i < max_probes) & jnp.any(~found)
-
-    def body(state):
-        i, b, found = state
-        cand = (hash2(keys, i) % a.astype(_U)).astype(jnp.int32)
-        w = gather1d(words, cand >> 5)
-        bit = (w >> (cand & 31).astype(_U)) & _U(1)
-        hit = ~found & (bit == _U(1))
-        return i + jnp.int32(1), jnp.where(hit, cand, b), found | hit
-
-    _, b, found = jax.lax.while_loop(cond, body, (jnp.int32(0), b0, found0))
-    return jnp.where(found, b, fallback)
-
-
-def _dx_kernel(s_ref, keys_ref, words_ref, out_ref):
-    keys = keys_ref[...].astype(_U)
-    words = words_ref[...].reshape(-1)  # (a_pad/32,) uint32 bitmap
-    out_ref[...] = dx_body(keys, words, s_ref[0], s_ref[1], s_ref[2])
-
-
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def dx_lookup(keys, words, a, max_probes, fallback, *,
-              block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
-    """Batched DxHash lookup: keys uint32 [K] → working bucket ids int32."""
-    keys2d, k = _pad_rows(keys.astype(_U))
-    rows = keys2d.shape[0]
-    block_rows = min(block_rows, rows)
-    grid = (-(-rows // block_rows),)
-    nwords = words.shape[0]
-    shape2d = (-(-nwords // 128), 128) if nwords % 128 == 0 else (nwords, 1)
-    w2d = words.reshape(shape2d)
-
-    out = pl.pallas_call(
-        _dx_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_rows, 128), lambda i, s: (i, 0)),
-                pl.BlockSpec(shape2d, lambda i, s: (0, 0)),
-            ],
-            out_specs=pl.BlockSpec((block_rows, 128), lambda i, s: (i, 0)),
-        ),
-        out_shape=jax.ShapeDtypeStruct(keys2d.shape, jnp.int32),
-        interpret=interpret,
-    )(jnp.asarray([a, max_probes, fallback], jnp.int32), keys2d, w2d)
-    return out.reshape(-1)[:k]
+from .engine import DEFAULT_BLOCK_ROWS, dx_body, dx_lookup  # noqa: F401

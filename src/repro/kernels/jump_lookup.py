@@ -1,49 +1,10 @@
-"""Pallas TPU kernel: batched JumpHash lookup.
+"""JumpHash lookup — re-export shim over :mod:`repro.kernels.engine`.
 
-The stateless corner of the device plane (image layout: DESIGN.md §3.3;
-kernel structure: §3.4): no table at all, just the shared
-TPU-native ``jump32`` state machine (``kernels/primitives.py``) over a
-``(BLOCK_ROWS, 128)`` key block, with ``n`` as a dynamic prefetched scalar.
-Also the first hop of every Memento lookup — kept as its own kernel so Jump
-is benchmarkable on the device plane like the other three algorithms.
+The stateless corner of the device plane is the ``jump`` configuration of
+the unified lookup engine (DESIGN.md §6); the state machine itself is
+``kernels/primitives.jump32``.  Kept for one release; new code should
+target :mod:`repro.kernels.engine`.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from .memento_lookup import DEFAULT_BLOCK_ROWS, _pad_rows
-from .primitives import jump32
-
-_U = jnp.uint32
-
-
-def _jump_kernel(n_ref, keys_ref, out_ref):
-    out_ref[...] = jump32(keys_ref[...].astype(_U), n_ref[0])
-
-
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def jump_lookup(keys, n, *, block_rows: int = DEFAULT_BLOCK_ROWS,
-                interpret: bool = True):
-    """Batched JumpHash lookup: keys uint32 [K] → bucket ids int32 in [0, n)."""
-    keys2d, k = _pad_rows(keys.astype(_U))
-    rows = keys2d.shape[0]
-    block_rows = min(block_rows, rows)
-    grid = (-(-rows // block_rows),)
-
-    out = pl.pallas_call(
-        _jump_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[pl.BlockSpec((block_rows, 128), lambda i, n_s: (i, 0))],
-            out_specs=pl.BlockSpec((block_rows, 128), lambda i, n_s: (i, 0)),
-        ),
-        out_shape=jax.ShapeDtypeStruct(keys2d.shape, jnp.int32),
-        interpret=interpret,
-    )(jnp.asarray([n], jnp.int32), keys2d)
-    return out.reshape(-1)[:k]
+from .engine import DEFAULT_BLOCK_ROWS, jump_lookup  # noqa: F401

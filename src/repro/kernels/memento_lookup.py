@@ -1,250 +1,20 @@
-"""Pallas TPU kernel: batched MementoHash lookup (paper Alg. 4).
+"""Memento lookup — re-export shim over :mod:`repro.kernels.engine`.
 
-The hot spot the paper optimizes is the *lookup*: the data plane routes
-millions of keys (tokens→data-shards, sessions→replicas, ckpt-keys→hosts)
-per step.  On TPU we express this as a block-parallel kernel:
-
-  * grid over key blocks of ``(BLOCK_ROWS, 128)`` uint32 keys (VMEM),
-  * the replacement table resident in VMEM for every program — either the
-    **dense** int32 image (``repl[b] = c | -1``, Θ(n) bytes) or the
-    **compact** open-addressing image (Θ(r) bytes, beyond-paper, for
-    r ≪ n clusters where the dense table would not fit VMEM),
-  * lane-synchronous bounded while-loops: every lane follows its own
-    replacement chain; a block settles in max-over-lanes sweeps which the
-    paper bounds by E[τ],E[σ] ≤ ln(n/w) (Props. VII.1-3).
-
-TPU adaptation notes (arithmetic: DESIGN.md §3.1; dense/compact table
-layouts: §3.2; kernel structure: §3.4): JumpHash's 64-bit LCG is replaced
-by a murmur3-mixed (key, step) variate quantized to 24 bits so every
-divide is an exact f32 op; the replacement "hash table" becomes vector
-gathers.  Chain following is a gather off the same table — no pointer
-chasing.  The hash arithmetic is shared with the jnp oracle via
-``kernels/primitives.py``.
-
-Validated in ``interpret=True`` mode on CPU against ``ref.py`` (the pure-jnp
-oracle, itself bit-identical to the numpy host plane).
+The Pallas TPU kernel bodies that used to live here (paper Alg. 4 over the
+dense Θ(n) table and the beyond-paper Θ(r) compact table) are now the
+``memento`` configuration of the unified lookup engine (DESIGN.md §6).
+This module is kept for one release so existing imports keep working;
+new code should target :mod:`repro.kernels.engine` /
+:func:`repro.kernels.ops.device_lookup`.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.core.hashing import GOLDEN32, np_fmix32
-from .primitives import fmix32, gather1d, hash2, jump32
-
-_U = jnp.uint32
-
-DEFAULT_BLOCK_ROWS = 8  # (8, 128) keys per program = 1024 lookups
-
-
-# ---------------------------------------------------------------------------
-# Dense-table kernel
-# ---------------------------------------------------------------------------
-
-def dense_body(keys, repl, n):
-    """Kernel-side dense lookup body: keys block + flat VMEM repl + dynamic n.
-
-    Shared between the lookup kernel and the fused migration-diff kernel
-    (``kernels/migrate.py``), which runs it once per epoch image.
-    """
-    b = jump32(keys, n)
-
-    def outer_cond(b):
-        return jnp.any(gather1d(repl, b) >= 0)
-
-    def outer_body(b):
-        c = gather1d(repl, b)
-        active = c >= 0
-        wb = jnp.where(active, c, 1)  # |W_b| after b was removed (Prop. V.3)
-        d = (hash2(keys, b) % wb.astype(_U)).astype(jnp.int32)
-
-        def inner_cond(d):
-            u = gather1d(repl, d)
-            return jnp.any(active & (u >= 0) & (u >= wb))
-
-        def inner_body(d):
-            u = gather1d(repl, d)
-            follow = active & (u >= 0) & (u >= wb)  # follow only while u ≥ w_b
-            return jnp.where(follow, u, d)
-
-        d = jax.lax.while_loop(inner_cond, inner_body, d)
-        return jnp.where(active, d, b)
-
-    return jax.lax.while_loop(outer_cond, outer_body, b)
-
-
-def _dense_kernel(n_ref, keys_ref, repl_ref, out_ref):
-    keys = keys_ref[...].astype(_U)
-    repl = repl_ref[...].reshape(-1)  # (cap,) int32, -1 = working
-    out_ref[...] = dense_body(keys, repl, n_ref[0])
-
-
-# ---------------------------------------------------------------------------
-# Compact-table kernel (beyond-paper): Θ(r) VMEM open-addressing image
-# ---------------------------------------------------------------------------
-
-def _compact_kernel(n_ref, keys_ref, slot_b_ref, slot_c_ref, out_ref):
-    n = n_ref[0]
-    keys = keys_ref[...].astype(_U)
-    slot_b = slot_b_ref[...].reshape(-1)  # removed bucket id per slot, -1 empty
-    slot_c = slot_c_ref[...].reshape(-1)  # its replacement c
-    nslots = slot_b.shape[0]  # power of two
-    mask = _U(nslots - 1)
-
-    def probe(idx):
-        """repl[idx] via linear probing: returns c or -1 (working)."""
-        h0 = (fmix32(idx.astype(_U) * _U(GOLDEN32) + _U(5)) & mask).astype(jnp.int32)
-
-        def cond(state):
-            pos, done, _ = state
-            return jnp.any(~done)
-
-        def body(state):
-            pos, done, val = state
-            sb = gather1d(slot_b, pos)
-            hit = sb == idx
-            empty = sb < 0
-            val = jnp.where(~done & hit, gather1d(slot_c, pos), val)
-            done = done | hit | empty
-            pos = jnp.where(done, pos, (pos + 1) % nslots)
-            return pos, done, val
-
-        val0 = jnp.full(idx.shape, -1, jnp.int32)
-        done0 = jnp.zeros(idx.shape, jnp.bool_)
-        _, _, val = jax.lax.while_loop(cond, body, (h0, done0, val0))
-        return val
-
-    b = jump32(keys, n)
-
-    def outer_cond(b):
-        return jnp.any(probe(b) >= 0)
-
-    def outer_body(b):
-        c = probe(b)
-        active = c >= 0
-        wb = jnp.where(active, c, 1)
-        d = (hash2(keys, b) % wb.astype(_U)).astype(jnp.int32)
-
-        def inner_cond(d):
-            u = probe(d)
-            return jnp.any(active & (u >= 0) & (u >= wb))
-
-        def inner_body(d):
-            u = probe(d)
-            follow = active & (u >= 0) & (u >= wb)
-            return jnp.where(follow, u, d)
-
-        d = jax.lax.while_loop(inner_cond, inner_body, d)
-        return jnp.where(active, d, b)
-
-    out_ref[...] = jax.lax.while_loop(outer_cond, outer_body, b)
-
-
-# ---------------------------------------------------------------------------
-# pallas_call builders
-# ---------------------------------------------------------------------------
-
-def _pad_rows(x, cols=128):
-    k = x.shape[0]
-    rows = max(1, -(-k // cols))
-    padded = jnp.zeros((rows * cols,), x.dtype).at[:k].set(x)
-    return padded.reshape(rows, cols), k
-
-
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def dense_lookup(keys, repl, n, *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
-    """Batched lookup with the dense Θ(n)-int32 table in VMEM."""
-    keys2d, k = _pad_rows(keys.astype(_U))
-    rows = keys2d.shape[0]
-    block_rows = min(block_rows, rows)
-    grid = (-(-rows // block_rows),)
-    cap = repl.shape[0]
-    repl2d = repl.reshape(-1, 128) if cap % 128 == 0 else repl.reshape(cap, 1)
-
-    out = pl.pallas_call(
-        _dense_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_rows, 128), lambda i, n_s: (i, 0)),
-                pl.BlockSpec(repl2d.shape, lambda i, n_s: (0, 0)),
-            ],
-            out_specs=pl.BlockSpec((block_rows, 128), lambda i, n_s: (i, 0)),
-        ),
-        out_shape=jax.ShapeDtypeStruct(keys2d.shape, jnp.int32),
-        interpret=interpret,
-    )(jnp.asarray([n], jnp.int32), keys2d, repl2d)
-    return out.reshape(-1)[:k]
-
-
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def compact_lookup(keys, slot_b, slot_c, n, *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
-    """Batched lookup with the Θ(r) open-addressing table in VMEM."""
-    keys2d, k = _pad_rows(keys.astype(_U))
-    rows = keys2d.shape[0]
-    block_rows = min(block_rows, rows)
-    grid = (-(-rows // block_rows),)
-    nslots = slot_b.shape[0]
-    shape2d = (-(-nslots // 128), 128) if nslots % 128 == 0 else (nslots, 1)
-    sb2d, sc2d = slot_b.reshape(shape2d), slot_c.reshape(shape2d)
-
-    out = pl.pallas_call(
-        _compact_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_rows, 128), lambda i, n_s: (i, 0)),
-                pl.BlockSpec(shape2d, lambda i, n_s: (0, 0)),
-                pl.BlockSpec(shape2d, lambda i, n_s: (0, 0)),
-            ],
-            out_specs=pl.BlockSpec((block_rows, 128), lambda i, n_s: (i, 0)),
-        ),
-        out_shape=jax.ShapeDtypeStruct(keys2d.shape, jnp.int32),
-        interpret=interpret,
-    )(jnp.asarray([n], jnp.int32), keys2d, sb2d, sc2d)
-    return out.reshape(-1)[:k]
-
-
-def build_compact_table(repl) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Host-side: dense repl image → open-addressing (slot_b, slot_c) arrays.
-
-    Slots = next power of two ≥ max(2r, 128) → load factor ≤ 0.5, so the
-    expected probe chain is ~1.5 and the VMEM working set is Θ(r).
-
-    Insertion is vectorized: each round, every still-unplaced key whose
-    current slot is free claims it (first pending key per slot wins); the
-    rest advance one slot.  Slots only ever fill, so every slot a key
-    skipped is occupied in the final table — the kernel's probe loop
-    (scan from h0 until hit or empty) finds every key.
-    """
-    repl = np.asarray(repl)
-    removed = np.nonzero(repl >= 0)[0].astype(np.int64)
-    r = int(removed.size)
-    nslots = 128
-    while nslots < 2 * max(r, 1):
-        nslots *= 2
-    slot_b = np.full((nslots,), -1, np.int32)
-    slot_c = np.full((nslots,), -1, np.int32)
-    mask = nslots - 1
-    with np.errstate(over="ignore"):
-        pos = np_fmix32(removed.astype(np.uint32) * np.uint32(GOLDEN32)
-                        + np.uint32(5)).astype(np.int64) & mask
-    pending = np.arange(r)
-    while pending.size:
-        p = pos[pending]
-        free = slot_b[p] < 0
-        cand = pending[free]
-        _, first = np.unique(p[free], return_index=True)
-        win = cand[first]
-        slot_b[pos[win]] = removed[win].astype(np.int32)
-        slot_c[pos[win]] = repl[removed[win]].astype(np.int32)
-        pending = np.setdiff1d(pending, win, assume_unique=True)
-        pos[pending] = (pos[pending] + 1) & mask
-    return jnp.asarray(slot_b), jnp.asarray(slot_c)
+from .engine import (  # noqa: F401
+    DEFAULT_BLOCK_ROWS,
+    _pad_rows,
+    build_compact_table,
+    compact_lookup,
+    dense_body,
+    dense_lookup,
+    memento_body,
+)

@@ -1,171 +1,22 @@
-"""Fused migration diff: lookup a key batch under two epochs in one pass.
+"""Fused migration diff — re-export shim over :mod:`repro.kernels.engine`.
 
-The device-side minimal-disruption / monotonicity instrument (DESIGN.md
-§3.5): given the epoch-N image and the epoch-N+1 image of the same
-algorithm (the two halves of a :class:`~repro.core.image_store.
-DeviceImageStore` double buffer), compute for a batch of keys
-
-    ``b_old[k]``  — bucket under epoch N,
-    ``b_new[k]``  — bucket under epoch N+1,
-    ``moved[k]``  — ``b_old != b_new``,
-
-without ever materializing per-key host loops.  The migration planners
-(``data/pipeline.ShardPlacement`` → ``runtime/elastic.ElasticCluster``)
-consume the mask to relocate exactly the moved resources, and the churn
-benchmark uses it to verify minimal disruption at device speed.
-
-Two planes, same semantics:
-
-  * ``plane='jnp'``    — both epoch lookups inside ONE jitted function, so
-    XLA schedules them as a single fused program (also allows diffing
-    images of *different* algorithms, e.g. an algo migration);
-  * ``plane='pallas'`` — one kernel launch per key block with BOTH epoch
-    tables resident in VMEM; the lookup bodies are the exact ones the
-    single-epoch kernels run (``dense_body`` / ``anchor_body`` /
-    ``dx_body`` / ``jump32``), so the diff is bit-identical to two
-    independent lookups.
+The two-epoch diff (DESIGN.md §3.5) is now the ``diff=True``
+configuration of the unified lookup engine (DESIGN.md §6), which also
+generalizes it to whole replica sets (``k>1``).  Kept for one release;
+new code should target :func:`repro.kernels.engine.engine_diff`.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.core.jax_lookup import lookup_dispatch
-from repro.core.protocol import IMAGE_LAYOUT, image_scalar_vec
-from .anchor_lookup import anchor_body
-from .dx_lookup import dx_body
-from .memento_lookup import DEFAULT_BLOCK_ROWS, _pad_rows, dense_body
-from .primitives import jump32, table_shape2d as _shape2d
-
-_U = jnp.uint32
-
-
-@dataclass
-class MigrationDiff:
-    """Per-key placement under two epochs plus the moved mask."""
-
-    old: np.ndarray    # int32 [K] — bucket under the old epoch
-    new: np.ndarray    # int32 [K] — bucket under the new epoch
-    moved: np.ndarray  # bool  [K]
-
-    @property
-    def num_moved(self) -> int:
-        return int(np.asarray(self.moved).sum())
-
-
-def _body(algo, keys, tables, s):
-    if algo == "memento":
-        return dense_body(keys, tables[0], s[0])
-    if algo == "anchor":
-        return anchor_body(keys, tables[0], tables[1], s[0])
-    if algo == "dx":
-        return dx_body(keys, tables[0], s[0], s[1], s[2])
-    if algo == "jump":
-        return jump32(keys, s[0])
-    raise ValueError(f"unknown algo {algo!r}")
-
-
-# ---------------------------------------------------------------------------
-# jnp plane: one jitted program over both images
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("algo_old", "algo_new"))
-def _diff_jnp(keys, old_arrays, old_scalars, new_arrays, new_scalars, *,
-              algo_old, algo_new):
-    b_old = lookup_dispatch(algo_old, keys, old_arrays, old_scalars)
-    b_new = lookup_dispatch(algo_new, keys, new_arrays, new_scalars)
-    return b_old, b_new, b_old != b_new
-
-
-# ---------------------------------------------------------------------------
-# Pallas plane: both epoch tables resident, one launch
-# ---------------------------------------------------------------------------
-
-def _migrate_kernel_factory(algo: str, num_tables: int, num_scalars: int):
-    def kernel(s_ref, keys_ref, *refs):
-        old_tabs = [r[...].reshape(-1) for r in refs[:num_tables]]
-        new_tabs = [r[...].reshape(-1) for r in refs[num_tables:2 * num_tables]]
-        out_old, out_new, out_moved = refs[2 * num_tables:]
-        keys = keys_ref[...].astype(_U)
-        s_old = [s_ref[i] for i in range(num_scalars)]
-        s_new = [s_ref[num_scalars + i] for i in range(num_scalars)]
-        b_old = _body(algo, keys, old_tabs, s_old)
-        b_new = _body(algo, keys, new_tabs, s_new)
-        out_old[...] = b_old
-        out_new[...] = b_new
-        out_moved[...] = (b_old != b_new).astype(jnp.int32)
-
-    return kernel
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("algo", "num_tables", "block_rows",
-                                    "interpret"))
-def _diff_pallas(scalars, keys2d, *tables2d, algo, num_tables,
-                 block_rows, interpret):
-    rows = keys2d.shape[0]
-    block_rows = min(block_rows, rows)
-    grid = (-(-rows // block_rows),)
-    key_spec = pl.BlockSpec((block_rows, 128), lambda i, s: (i, 0))
-    tab_specs = [pl.BlockSpec(t.shape, lambda i, s: (0, 0)) for t in tables2d]
-    num_scalars = scalars.shape[0] // 2
-
-    outs = pl.pallas_call(
-        _migrate_kernel_factory(algo, num_tables, num_scalars),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[key_spec] + tab_specs,
-            out_specs=[key_spec, key_spec, key_spec],
-        ),
-        out_shape=[jax.ShapeDtypeStruct(keys2d.shape, jnp.int32)] * 3,
-        interpret=interpret,
-    )(scalars, keys2d, *tables2d)
-    return outs
+from .engine import (  # noqa: F401
+    DEFAULT_BLOCK_ROWS,
+    EngineDiff as MigrationDiff,
+    engine_diff,
+)
 
 
 def migration_diff(keys, old_image, new_image, *, plane: str = "jnp",
                    interpret: bool | None = None,
                    block_rows: int = DEFAULT_BLOCK_ROWS) -> MigrationDiff:
     """Diff a key batch between two device images (old epoch vs new epoch)."""
-    keys = jnp.asarray(keys, dtype=_U)
-    if plane == "jnp":
-        tr = lambda img: (  # noqa: E731
-            {k: jnp.asarray(v) for k, v in img.arrays.items()},
-            tuple(jnp.asarray(s, jnp.int32) for s in image_scalar_vec(img)))
-        oa, os_ = tr(old_image)
-        na, ns = tr(new_image)
-        b_old, b_new, moved = _diff_jnp(keys, oa, os_, na, ns,
-                                        algo_old=old_image.algo,
-                                        algo_new=new_image.algo)
-        return MigrationDiff(np.asarray(b_old), np.asarray(b_new),
-                             np.asarray(moved))
-    if plane != "pallas":
-        raise ValueError(f"unknown plane {plane!r}")
-    if old_image.algo != new_image.algo:
-        raise ValueError("pallas migration diff requires one algorithm "
-                         f"({old_image.algo!r} != {new_image.algo!r})")
-    algo = old_image.algo
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    table_names = IMAGE_LAYOUT[algo][1]
-    scalars = jnp.asarray(image_scalar_vec(old_image) + image_scalar_vec(new_image),
-                          jnp.int32)
-    tables = []
-    for img in (old_image, new_image):
-        for name in table_names:
-            arr = jnp.asarray(img.arrays[name])
-            tables.append(arr.reshape(_shape2d(arr.shape[0])))
-    keys2d, k = _pad_rows(keys)
-    b_old, b_new, moved = _diff_pallas(
-        scalars, keys2d, *tables, algo=algo, num_tables=len(table_names),
-        block_rows=block_rows, interpret=interpret)
-    return MigrationDiff(np.asarray(b_old.reshape(-1)[:k]),
-                         np.asarray(b_new.reshape(-1)[:k]),
-                         np.asarray(moved.reshape(-1)[:k]).astype(bool))
+    return engine_diff(keys, old_image, new_image, plane=plane,
+                       interpret=interpret, block_rows=block_rows)

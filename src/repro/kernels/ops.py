@@ -1,16 +1,20 @@
-"""Jitted public wrappers around the Pallas lookup kernels.
+"""Jitted public wrappers around the unified lookup engine.
 
 :func:`device_lookup` is the algorithm-generic entry point: it takes any
 :class:`~repro.core.protocol.DeviceImage` (Memento, Anchor, Dx, Jump) and
-dispatches to the matching kernel, so routers / placements / benchmarks are
-algorithm-pluggable end to end.
+runs the matching :class:`~repro.kernels.engine.EngineOp` configuration,
+so routers / placements / benchmarks are algorithm-pluggable end to end.
+Every configuration — plain lookup, k-replica, bounded, epoch diff —
+compiles to exactly one Pallas launch (DESIGN.md §6).
 
 Execution planes:
 
-  * ``plane='pallas'`` — the Pallas kernels (default).  On non-TPU backends
-    they run in interpret mode (the validation path); on TPU they compile
-    via Mosaic.
-  * ``plane='jnp'``    — the pure-jnp oracles (no Pallas; any backend).
+  * ``plane='pallas'`` — the engine's Pallas launch (default).  On non-TPU
+    backends it runs in interpret mode (the validation path); on TPU it
+    compiles via Mosaic.
+  * ``plane='jnp'``    — the engine's pure-jnp program (no Pallas; any
+    backend; also the per-shard body of the mesh-sharded
+    :class:`~repro.serve.plane.ShardedLookupPlane`).
 
 Memento additionally picks its table layout via ``table``:
 
@@ -24,10 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import jax_lookup as _jnp
-from . import anchor_lookup as _anchor
-from . import dx_lookup as _dx
-from . import jump_lookup as _jump
-from . import memento_lookup as _k
+from . import engine as _engine
 
 
 def _default_interpret() -> bool:
@@ -35,39 +36,23 @@ def _default_interpret() -> bool:
 
 
 def device_lookup(keys, image, *, plane: str = "pallas", table: str = "dense",
+                  k: int = 1, load=None, cap: int | None = None,
                   interpret: bool | None = None, block_rows: int | None = None):
-    """Batched lookup over any DeviceImage: keys [K] → working bucket ids [K]."""
+    """Batched lookup over any DeviceImage: keys [K] → working bucket ids
+    [K] (or [K, k] replica sets for ``k > 1``; with ``load``/``cap`` every
+    returned bucket is additionally below the load cap — the fused
+    bounded-replica configuration, still one launch)."""
     keys = jnp.asarray(keys, dtype=jnp.uint32)
-    if plane == "jnp":
+    if plane == "jnp" and k == 1 and load is None:
         return _jnp.lookup_image(keys, image)
-    if plane != "pallas":
+    if plane not in ("jnp", "pallas"):
         raise ValueError(f"unknown plane {plane!r}")
-    if interpret is None:
-        interpret = _default_interpret()
-    kw = {"interpret": interpret}
-    if block_rows is not None:
-        kw["block_rows"] = block_rows
-
-    algo = image.algo
-    if algo == "memento":
-        repl = jnp.asarray(image.arrays["repl"], jnp.int32)
-        if table == "dense":
-            return _k.dense_lookup(keys, repl, image.n, **kw)
-        if table == "compact":
-            slot_b, slot_c = _k.build_compact_table(repl)
-            return _k.compact_lookup(keys, slot_b, slot_c, image.n, **kw)
-        raise ValueError(f"unknown table kind {table!r}")
-    if algo == "anchor":
-        return _anchor.anchor_lookup(keys, jnp.asarray(image.arrays["A"], jnp.int32),
-                                     jnp.asarray(image.arrays["K"], jnp.int32),
-                                     image.n, **kw)
-    if algo == "dx":
-        return _dx.dx_lookup(keys, jnp.asarray(image.arrays["words"], jnp.uint32),
-                             image.n, image.scalars["max_probes"],
-                             image.scalars["fallback"], **kw)
-    if algo == "jump":
-        return _jump.jump_lookup(keys, image.n, **kw)
-    raise ValueError(f"unknown device image algo {algo!r}")
+    if table != "dense" and image.algo != "memento":
+        raise ValueError(f"unknown table kind {table!r} for {image.algo!r}")
+    return _engine.engine_lookup(keys, image, k=k, load=load, cap=cap,
+                                 plane=plane, table=table,
+                                 interpret=interpret,
+                                 block_rows=block_rows)
 
 
 def memento_lookup(keys, repl, n, *, table: str = "dense", interpret: bool | None = None):
@@ -79,10 +64,11 @@ def memento_lookup(keys, repl, n, *, table: str = "dense", interpret: bool | Non
     if table == "jnp":
         return _jnp.memento_lookup(keys, repl, n)
     if table == "dense":
-        return _k.dense_lookup(keys, repl, n, interpret=interpret)
+        return _engine.dense_lookup(keys, repl, n, interpret=interpret)
     if table == "compact":
-        slot_b, slot_c = _k.build_compact_table(repl)
-        return _k.compact_lookup(keys, slot_b, slot_c, n, interpret=interpret)
+        slot_b, slot_c = _engine.build_compact_table(repl)
+        return _engine.compact_lookup(keys, slot_b, slot_c, n,
+                                      interpret=interpret)
     raise ValueError(f"unknown table kind {table!r}")
 
 

@@ -1,255 +1,25 @@
-"""Device-plane k-replication + bounded-load chain walk (DESIGN.md §4).
+"""k-replication + bounded-load walk — re-export shim over
+:mod:`repro.kernels.engine`.
 
-Two device entry points, both protocol-generic over any
-:class:`~repro.core.protocol.DeviceImage` (Memento, Anchor, Dx, Jump):
-
-* :func:`replica_lookup` — k *distinct* working buckets per key
-  (DESIGN.md §4.1): replica 0 is the plain lookup; replica j comes from
-  re-looking-up the salted key ``hash2(key, salt)`` for salt = 1, 2, …,
-  skipping candidates already chosen.  The salt counter is per-lane and
-  shared across slots, so the device walk is bit-identical to the host
-  ``ReplicatedLookup.lookup_k`` on ``variant="32"`` states.  One jitted
-  jnp program (any backend) or ONE Pallas launch per key batch: the salt
-  loop runs in-kernel as a lane-synchronous ``while_loop`` per replica
-  slot, with the image tables VMEM-resident and k static (k outputs).
-
-* :func:`chain_walk` / :func:`bounded_assign_device` — the bounded-load
-  data plane (DESIGN.md §4.2): given per-bucket load words and the cap
-  ``ceil(c·keys/working)``, walk each key's deterministic rehash chain
-  (``chain ← hash2(chain, probe)``) to the first bucket below the cap.
-  The walk order is exactly the host's (`core/bounded.py`), so host and
-  device assignments agree bit-for-bit; the round-based acceptance in
-  :func:`bounded_assign_device` resolves intra-batch races in key-index
-  order — identical to the numpy reference ``bounded_assign_ref``.
-
-The single-epoch lookup bodies are the exact ones the lookup and
-migration-diff kernels run (``dense_body`` / ``anchor_body`` / ``dx_body``
-/ ``jump32`` via ``kernels/migrate._body``), so replicas, bounded
-assignment, and plain lookups can never disagree about placement.
+The salted-re-lookup replica walk and the bounded-load chain walk
+(DESIGN.md §4) are now the ``k>1`` / ``walk`` configurations of the
+unified lookup engine (DESIGN.md §6) — including the fused
+k-replica-under-cap op (``engine_lookup(..., k, load=, cap=)``) that
+previously needed multiple launches.  Kept for one release; new code
+should target :mod:`repro.kernels.engine`.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.bounded import accept_in_index_order, walk_probe_bound
-from repro.core.jax_lookup import lookup_dispatch
-from repro.core.protocol import IMAGE_LAYOUT, REPLICA_SALT_CAP, image_scalar_vec
-from .memento_lookup import DEFAULT_BLOCK_ROWS, _pad_rows
-from .migrate import _body
-from .primitives import gather1d, hash2, table_shape2d as _shape2d
-
-_U = jnp.uint32
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-# ---------------------------------------------------------------------------
-# Shared lane-synchronous bodies (consumed by both planes)
-# ---------------------------------------------------------------------------
-
-def replica_body(keys, k, single_lookup):
-    """k distinct buckets per lane via the salted-re-lookup walk.
-
-    ``single_lookup(keys_u32) -> int32 buckets`` is the plane's one-epoch
-    lookup (jnp dispatch or a kernel body).  Returns a list of k int32
-    arrays (replica slots).  Mirrors ``ReplicatedLookup.lookup_k`` exactly:
-    per-lane salt counters advance on every try (including the successful
-    one) and carry over to the next slot.  Lanes that exhaust
-    ``REPLICA_SALT_CAP`` (probability ≤ ((k−1)/w)^CAP — see protocol.py)
-    keep the primary bucket; the host raises instead, so keep k ≤ working.
-    """
-    keys = jnp.asarray(keys).astype(_U)
-    first = single_lookup(keys)
-    outs = [first]
-    salt = jnp.ones(keys.shape, jnp.int32)
-    for _ in range(1, k):
-        prev = tuple(outs)
-
-        def cond(state):
-            salt, _slot, done = state
-            return jnp.any(~done & (salt <= REPLICA_SALT_CAP))
-
-        def body(state, prev=prev):
-            salt, slot, done = state
-            active = ~done & (salt <= REPLICA_SALT_CAP)
-            cand = single_lookup(hash2(keys, salt))
-            dup = cand == prev[0]
-            for o in prev[1:]:
-                dup = dup | (cand == o)
-            ok = active & ~dup
-            slot = jnp.where(ok, cand, slot)
-            salt = jnp.where(active, salt + 1, salt)
-            return salt, slot, done | ok
-
-        salt, slot, _ = jax.lax.while_loop(
-            cond, body, (salt, first, jnp.zeros(keys.shape, jnp.bool_)))
-        outs.append(slot)
-    return outs
-
-
-def chain_walk_body(chain, probe, pending, load, cap, single_lookup):
-    """Walk each pending lane's rehash chain to the first bucket with
-    ``load[b] < cap``; non-pending lanes are left untouched.
-
-    State per lane: the current chained key, the probe counter, the
-    candidate bucket.  One step is exactly the host's
-    ``probe += 1; chain = hash2(chain, probe); b = lookup(chain)``.
-    Returns ``(b, chain, probe)``.
-
-    Termination guard: lanes stop after ``64·len(load) + 64`` probes (same
-    bound as the host reference, derived from the load array so both planes
-    agree) — a lane that exhausts it is still above the cap, which the
-    batch driver turns into the host's "no bucket below capacity" error
-    instead of spinning forever on an infeasible cap.
-    """
-    chain = jnp.asarray(chain).astype(_U)
-    probe = jnp.asarray(probe).astype(jnp.int32)
-    max_probe = walk_probe_bound(load.shape[0])
-    b = single_lookup(chain)
-
-    def cond(state):
-        _chain, probe, b, active = state
-        return jnp.any(active & (gather1d(load, b) >= cap)
-                       & (probe < max_probe))
-
-    def body(state):
-        chain, probe, b, active = state
-        step = active & (gather1d(load, b) >= cap) & (probe < max_probe)
-        probe = jnp.where(step, probe + 1, probe)
-        chain = jnp.where(step, hash2(chain, probe), chain)
-        b = jnp.where(step, single_lookup(chain), b)
-        return chain, probe, b, active
-
-    chain, probe, b, _ = jax.lax.while_loop(
-        cond, body, (chain, probe, b, jnp.asarray(pending)))
-    return b, chain, probe
-
-
-# ---------------------------------------------------------------------------
-# jnp plane: one jitted program per (algo, k, shapes)
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("algo", "k"))
-def _replicas_jnp(keys, arrays, scalars, *, algo, k):
-    outs = replica_body(keys, k,
-                        lambda kk: lookup_dispatch(algo, kk, arrays, scalars))
-    return jnp.stack(outs)
-
-
-@functools.partial(jax.jit, static_argnames=("algo",))
-def _chain_walk_jnp(chain, probe, pending, load, cap, arrays, scalars, *, algo):
-    return chain_walk_body(
-        chain, probe, pending, load, cap,
-        lambda kk: lookup_dispatch(algo, kk, arrays, scalars))
-
-
-# ---------------------------------------------------------------------------
-# Pallas plane: one launch, image tables in VMEM, salt loop in-kernel
-# ---------------------------------------------------------------------------
-
-def _replica_kernel_factory(algo: str, num_tables: int, num_scalars: int,
-                            k: int):
-    def kernel(s_ref, keys_ref, *refs):
-        tabs = [r[...].reshape(-1) for r in refs[:num_tables]]
-        out_refs = refs[num_tables:]
-        keys = keys_ref[...].astype(_U)
-        s = [s_ref[i] for i in range(num_scalars)]
-        outs = replica_body(keys, k, lambda kk: _body(algo, kk, tabs, s))
-        for ref, o in zip(out_refs, outs):
-            ref[...] = o
-
-    return kernel
-
-
-@functools.partial(jax.jit, static_argnames=("algo", "k", "num_tables",
-                                             "block_rows", "interpret"))
-def _replicas_pallas(scalars, keys2d, *tables2d, algo, k, num_tables,
-                     block_rows, interpret):
-    rows = keys2d.shape[0]
-    block_rows = min(block_rows, rows)
-    grid = (-(-rows // block_rows),)
-    key_spec = pl.BlockSpec((block_rows, 128), lambda i, s: (i, 0))
-    tab_specs = [pl.BlockSpec(t.shape, lambda i, s: (0, 0)) for t in tables2d]
-
-    return pl.pallas_call(
-        _replica_kernel_factory(algo, num_tables, scalars.shape[0], k),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[key_spec] + tab_specs,
-            out_specs=[key_spec] * k,
-        ),
-        out_shape=[jax.ShapeDtypeStruct(keys2d.shape, jnp.int32)] * k,
-        interpret=interpret,
-    )(scalars, keys2d, *tables2d)
-
-
-def _walk_kernel_factory(algo: str, num_tables: int, num_scalars: int):
-    # scalar vector = algo scalars + cap appended last
-    def kernel(s_ref, chain_ref, probe_ref, pending_ref, *refs):
-        tabs = [r[...].reshape(-1) for r in refs[:num_tables]]
-        load = refs[num_tables][...].reshape(-1)
-        out_b, out_chain, out_probe = refs[num_tables + 1:]
-        s = [s_ref[i] for i in range(num_scalars)]
-        cap = s_ref[num_scalars]
-        b, chain, probe = chain_walk_body(
-            chain_ref[...].astype(_U), probe_ref[...],
-            pending_ref[...] != 0, load, cap,
-            lambda kk: _body(algo, kk, tabs, s))
-        out_b[...] = b
-        out_chain[...] = chain.astype(jnp.int32)
-        out_probe[...] = probe
-
-    return kernel
-
-
-@functools.partial(jax.jit, static_argnames=("algo", "num_tables",
-                                             "block_rows", "interpret"))
-def _chain_walk_pallas(scalars, chain2d, probe2d, pending2d, *tables2d,
-                       algo, num_tables, block_rows, interpret):
-    rows = chain2d.shape[0]
-    block_rows = min(block_rows, rows)
-    grid = (-(-rows // block_rows),)
-    blk = pl.BlockSpec((block_rows, 128), lambda i, s: (i, 0))
-    tab_specs = [pl.BlockSpec(t.shape, lambda i, s: (0, 0)) for t in tables2d]
-
-    return pl.pallas_call(
-        _walk_kernel_factory(algo, num_tables, scalars.shape[0] - 1),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[blk, blk, blk] + tab_specs,
-            out_specs=[blk, blk, blk],
-        ),
-        out_shape=[jax.ShapeDtypeStruct(chain2d.shape, jnp.int32)] * 3,
-        interpret=interpret,
-    )(scalars, chain2d, probe2d, pending2d, *tables2d)
-
-
-# ---------------------------------------------------------------------------
-# Public wrappers
-# ---------------------------------------------------------------------------
-
-def _image_operands(image):
-    arrays = {k: jnp.asarray(v) for k, v in image.arrays.items()}
-    scalars = tuple(jnp.asarray(s, jnp.int32) for s in image_scalar_vec(image))
-    return arrays, scalars
-
-
-def _image_tables2d(image):
-    tables = []
-    for name in IMAGE_LAYOUT[image.algo][1]:
-        arr = jnp.asarray(image.arrays[name])
-        tables.append(arr.reshape(_shape2d(arr.shape[0])))
-    return tables
+from .engine import (  # noqa: F401
+    DEFAULT_BLOCK_ROWS,
+    bounded_assign as bounded_assign_device,
+    chain_walk_body,
+    engine_chain_walk as chain_walk,
+    engine_lookup,
+    replica_body,
+)
 
 
 def replica_lookup(keys, image, k: int, *, plane: str = "jnp",
@@ -261,95 +31,6 @@ def replica_lookup(keys, image, k: int, *, plane: str = "jnp",
     (working buckets) provided k ≤ working.  Bit-identical to the host
     ``lookup_k`` on ``variant="32"`` states, on both planes.
     """
-    if k < 1:
-        raise ValueError("k must be ≥ 1")
-    keys = jnp.asarray(keys, dtype=_U)
-    if plane == "jnp":
-        arrays, scalars = _image_operands(image)
-        return jnp.transpose(_replicas_jnp(keys, arrays, scalars,
-                                           algo=image.algo, k=k))
-    if plane != "pallas":
-        raise ValueError(f"unknown plane {plane!r}")
-    if interpret is None:
-        interpret = _default_interpret()
-    scalars = jnp.asarray(image_scalar_vec(image), jnp.int32)
-    keys2d, nk = _pad_rows(keys)
-    outs = _replicas_pallas(scalars, keys2d, *_image_tables2d(image),
-                            algo=image.algo, k=k,
-                            num_tables=len(IMAGE_LAYOUT[image.algo][1]),
-                            block_rows=block_rows, interpret=interpret)
-    return jnp.stack([o.reshape(-1)[:nk] for o in outs]).T
-
-
-def chain_walk(chain, probe, pending, image, load, cap, *,
-               plane: str = "jnp", interpret: bool | None = None,
-               block_rows: int = DEFAULT_BLOCK_ROWS):
-    """One bounded-load walk step for a batch: advance every pending lane to
-    the first bucket of its rehash chain with ``load[b] < cap``.
-
-    Returns numpy ``(b, chain, probe)``; non-pending lanes come back
-    unchanged.  ``load`` is a bucket-indexed int32 array (the image's load
-    word array, or any array covering the bucket id space).
-    """
-    chain = jnp.asarray(chain, dtype=_U)
-    probe = jnp.asarray(probe, dtype=jnp.int32)
-    pending = jnp.asarray(pending, dtype=jnp.bool_)
-    load = jnp.asarray(load, dtype=jnp.int32)
-    if plane == "jnp":
-        arrays, scalars = _image_operands(image)
-        b, ch, pr = _chain_walk_jnp(chain, probe, pending, load,
-                                    jnp.asarray(cap, jnp.int32),
-                                    arrays, scalars, algo=image.algo)
-        return (np.asarray(b), np.asarray(ch).astype(np.uint32),
-                np.asarray(pr))
-    if plane != "pallas":
-        raise ValueError(f"unknown plane {plane!r}")
-    if interpret is None:
-        interpret = _default_interpret()
-    scalars = jnp.asarray(image_scalar_vec(image) + [int(cap)], jnp.int32)
-    nk = chain.shape[0]
-    chain2d, _ = _pad_rows(chain)
-    probe2d, _ = _pad_rows(probe)
-    pending2d, _ = _pad_rows(pending.astype(jnp.int32))
-    load2d = load.reshape(_shape2d(load.shape[0]))
-    b, ch, pr = _chain_walk_pallas(
-        scalars, chain2d, probe2d, pending2d, *_image_tables2d(image), load2d,
-        algo=image.algo, num_tables=len(IMAGE_LAYOUT[image.algo][1]),
-        block_rows=block_rows, interpret=interpret)
-    take = lambda x: np.asarray(x.reshape(-1)[:nk])  # noqa: E731
-    return take(b), take(ch).astype(np.uint32), take(pr)
-
-
-def bounded_assign_device(keys, image, load, cap: int, *, plane: str = "jnp",
-                          interpret: bool | None = None):
-    """Assign a key batch under the load cap on the device plane.
-
-    Per round: (1) the chain-walk kernel advances every pending key to the
-    first non-full bucket of its deterministic rehash chain; (2) intra-batch
-    races are resolved in key-index order — the first ``cap − load[b]``
-    pending proposers of each bucket are accepted, the rest stay pending
-    (their bucket is now full, so the next round's walk advances them).
-    Identical, round for round, to the numpy reference
-    ``repro.core.bounded.bounded_assign_ref`` — the walk runs on device,
-    the O(m log m) acceptance argsort on host.
-
-    Returns ``(assignments int32 [m], new_load int32)``.
-    """
-    keys = np.asarray(keys, dtype=np.uint32)
-    m = len(keys)
-    chain = keys.copy()
-    probe = np.zeros(m, np.int32)
-    out = np.full(m, -1, np.int32)
-    pending = np.ones(m, bool)
-    load = np.asarray(load, dtype=np.int32).copy()
-    while pending.any():
-        b, chain, probe = chain_walk(chain, probe, pending, image, load, cap,
-                                     plane=plane, interpret=interpret)
-        if (load[b[pending]] >= cap).any():  # probe bound exhausted
-            raise RuntimeError("no bucket below capacity (infeasible cap: "
-                               f"cap={cap} cannot hold the pending keys)")
-        accept_idx = accept_in_index_order(b, pending, load, cap)
-        out[accept_idx] = b[accept_idx]
-        np.add.at(load, b[accept_idx], 1)
-        pending[accept_idx] = False
-    return out, load
+    out = engine_lookup(keys, image, k=k, plane=plane, interpret=interpret,
+                        block_rows=block_rows)
+    return jnp.reshape(out, (-1, 1)) if k == 1 else out

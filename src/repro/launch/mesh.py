@@ -29,3 +29,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-scale distribution tests (requires enough devices)."""
     return _mesh(shape, axes)
+
+
+def make_lookup_mesh(num_devices: int | None = None, axis: str = "data"):
+    """1-D serving mesh for the sharded lookup plane (DESIGN.md §6): key
+    batches shard over ``axis`` across every available device (or the
+    first ``num_devices``), images replicate.  On the CPU container the
+    device count comes from ``--xla_force_host_platform_device_count``."""
+    n = num_devices or len(jax.devices())
+    return _mesh((n,), (axis,))

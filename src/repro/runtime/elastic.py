@@ -4,8 +4,10 @@ One ConsistentHash instance per resource class (data shards, checkpoint
 buckets, serving sessions) keeps every placement consistent through node
 churn; both the shard AND the checkpoint-bucket placement follow the one
 `algo=` choice (Memento by default, Anchor/Dx for fixed-capacity fleets),
-and movement plans come from the device-plane migration diff
-(DESIGN.md §3.5) on TPU-native states.  The controller is the
+and movement plans come from the device-plane epoch diff — one fused
+launch of the unified lookup engine (DESIGN.md §6), which
+:meth:`ElasticCluster.replica_movement` extends to whole k-replica sets —
+on TPU-native states.  The controller is the
 piece a real deployment would wire to its health checker: `fail(host)` →
 Θ(1) state update + minimal re-placement; `join()` → restores the most
 recent failure first (the paper's recommended LIFO discipline keeps R
@@ -105,6 +107,29 @@ class ElasticCluster:
         return sum(e.moved for e in self.events)
 
     # -- replica-aware placement (DESIGN.md §4.3) ----------------------------
+    def replica_movement(self, k: int | None = None) -> dict[int, dict]:
+        """Replica-set churn of the last membership event, planned on the
+        device plane: ONE fused engine launch (DESIGN.md §6) diffs every
+        shard's k-replica set between the retained and the front epoch of
+        the placement's image store.  Returns shard → {"old", "new"}
+        replica lists for exactly the shards whose set changed.
+
+        Covers the plain dedup replica sets (``lookup_k``); the
+        domain-distinct placement (:meth:`replica_hosts`) coincides with it
+        under the default identity domain map and stays host-planned
+        otherwise.
+        """
+        store = self.placement.image_store()
+        if store.previous_image() is None:
+            return {}
+        keys = np.arange(self.placement.num_shards, dtype=np.uint32)
+        d = store.migration_diff(keys, plane=self.placement.plane,
+                                 k=k or self.replica_k)
+        old = np.atleast_2d(d.old.T).T
+        new = np.atleast_2d(d.new.T).T
+        return {int(s): {"old": old[s].tolist(), "new": new[s].tolist()}
+                for s in np.nonzero(d.moved)[0]}
+
     def replica_hosts(self, shard: int, k: int | None = None) -> list[int]:
         """The shard's replica set: k hosts on pairwise-distinct failure
         domains (host 0 of the list is the classic single-host placement)."""

@@ -1,6 +1,8 @@
+from .plane import ShardedLookupPlane
 from .step import decode_shapes, decode_specs, make_decode_step, make_prefill_step, prefill_shapes, prefill_specs
 
 __all__ = [
+    "ShardedLookupPlane",
     "decode_shapes",
     "decode_specs",
     "make_decode_step",

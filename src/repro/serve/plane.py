@@ -1,0 +1,238 @@
+"""ShardedLookupPlane — mesh-sharded serving for million-key batches.
+
+The multi-device face of the lookup engine (DESIGN.md §6): one
+``shard_map`` over the axes of a :mod:`repro.launch.mesh` mesh fans a key
+batch across every device — each shard runs the engine's per-shard body
+(the jnp dispatch off-TPU, the one-launch Pallas configuration on TPU)
+against a **per-device replicated** copy of the
+:class:`~repro.core.protocol.DeviceImage`.  The image rides a
+:class:`~repro.core.DeviceImageStore` wherever the caller has one, so
+membership churn reaches every device as the store's O(changed-words)
+epoch deltas and the plane just re-pins the flipped front image
+(``_ensure``); plain images and raw ConsistentHash states work too.
+
+Throughput mechanics:
+
+  * keys are padded to ``devices × 128`` lanes and sharded over the mesh
+    axes; the image arrays and dynamic scalars are device_put once per
+    epoch with a replicated sharding (no per-call broadcast),
+  * the staged key buffer is **donated** to the jitted sharded program, so
+    steady-state streaming keeps exactly two key buffers and two result
+    buffers alive (double buffering),
+  * :meth:`route_stream` overlaps host-side result materialization of
+    batch *i* with device compute of batch *i+1* (dispatch is async).
+
+Correctness: a sharded lookup is bit-identical to the single-device
+engine for ANY mesh shape — the per-shard body is elementwise over keys
+(tests/test_engine.py, including the forced multi-device subprocess
+check).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.protocol import IMAGE_LAYOUT, image_scalar_vec
+
+
+def _is_store(source) -> bool:
+    return hasattr(source, "image") and hasattr(source, "sync")
+
+
+class ShardedLookupPlane:
+    """Fan engine lookups over a device mesh with per-device images.
+
+    ``source`` is a :class:`~repro.core.DeviceImageStore` (preferred: its
+    epoch deltas keep the replicated image fresh), a raw
+    :class:`~repro.core.protocol.DeviceImage`, or any ConsistentHash host
+    state (snapshot on epoch change).  ``mesh`` defaults to a 1-D
+    ``("data",)`` mesh over every device
+    (:func:`repro.launch.mesh.make_lookup_mesh`); any mesh works — keys
+    shard over the product of ``axes`` (default: all mesh axes).
+    """
+
+    def __init__(self, source, *, mesh=None, axes: tuple[str, ...] | None = None,
+                 k: int = 1, plane: str = "jnp", interpret: bool | None = None,
+                 block_rows: int | None = None):
+        import jax
+
+        if plane not in ("jnp", "pallas"):
+            raise ValueError(f"unknown plane {plane!r}")
+        if k < 1:
+            raise ValueError("k must be ≥ 1")
+        if mesh is None:
+            from repro.launch.mesh import make_lookup_mesh
+            mesh = make_lookup_mesh()
+        self.mesh = mesh
+        self.axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+        self.k = k
+        self.plane = plane
+        self._interpret = (jax.default_backend() != "tpu"
+                           if interpret is None else interpret)
+        self._block_rows = block_rows
+        self._source = source
+        self._image = None       # host-side image the device copy mirrors
+        self._dev = None         # (arrays dict, scalars tuple) replicated
+        self._rep_cache: dict = {}  # name → (source array, replicated copy)
+        self._fns: dict = {}     # (algo, shape sig, padded) → jitted program
+
+    # -- mesh geometry -------------------------------------------------------
+    @property
+    def num_shards(self) -> int:
+        n = 1
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        for a in self.axes:
+            n *= sizes[a]
+        return n
+
+    @property
+    def lanes(self) -> int:
+        """Key-count granularity: every shard gets 128-aligned rows."""
+        return self.num_shards * 128
+
+    # -- image replication ---------------------------------------------------
+    def _current_image(self):
+        if _is_store(self._source):
+            return self._source.image()
+        if hasattr(self._source, "device_image"):
+            src = self._source
+            if self._image is not None and \
+                    getattr(src, "epoch", None) == self._image.epoch:
+                return self._image
+            return src.device_image()
+        return self._source  # a plain DeviceImage
+
+    def _ensure(self):
+        """Re-pin the replicated per-device image iff the epoch flipped.
+
+        Arrays the store's out-of-place delta apply did NOT touch are the
+        same objects across epochs, so their replicated copies are reused
+        — per-flip fan-out cost is O(changed arrays), and the compiled
+        sharded programs survive flips (they are keyed by shape, and every
+        operand is an argument, not a constant)."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        img = self._current_image()
+        if self._dev is not None and img is self._image:
+            return
+        rep = NamedSharding(self.mesh, P())
+        names = IMAGE_LAYOUT[img.algo][1]
+        arrays = {}
+        for n in names:
+            src = img.arrays[n]
+            cached = self._rep_cache.get(n)
+            if cached is None or cached[0] is not src:
+                self._rep_cache[n] = (src, jax.device_put(jnp.asarray(src),
+                                                          rep))
+            arrays[n] = self._rep_cache[n][1]
+        scalars = tuple(jax.device_put(jnp.asarray(s, jnp.int32), rep)
+                        for s in image_scalar_vec(img))
+        self._image = img
+        self._dev = (arrays, scalars)
+
+    # -- the sharded program -------------------------------------------------
+    def _sharded_fn(self, padded: int):
+        """One jitted shard_map program per (algo, table shapes, padded
+        key count) — epoch flips at stable shapes reuse the compiled
+        program (the store pads capacities exactly so this holds)."""
+        arrays, _ = self._dev
+        key = (self._image.algo,
+               tuple(sorted((n, a.shape) for n, a in arrays.items())),
+               padded)
+        fn = self._fns.get(key)
+        if fn is not None:
+            return fn
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.jax_lookup import lookup_dispatch
+        from repro.kernels.engine import (DEFAULT_BLOCK_ROWS, EngineOp,
+                                          _engine_pallas, _pad_rows,
+                                          _tables2d, replica_body)
+        from repro.sharding.rules import shard_map
+
+        op = EngineOp(algo=self._image.algo, k=self.k)
+        names = op.table_names
+        shard_dim = self.axes if len(self.axes) > 1 else self.axes[0]
+        key_spec = P(shard_dim)
+
+        def per_shard(keys, arrays, scalars):
+            # keys travel as an int32 buffer so the k=1 result (int32, same
+            # shape) can alias the donated input; bitcast restores uint32.
+            keys = jax.lax.bitcast_convert_type(keys, jnp.uint32)
+            if self.plane == "jnp":
+                outs = replica_body(
+                    keys, op.k,
+                    lambda kk: lookup_dispatch(op.algo, kk, arrays, scalars))
+            else:  # one Pallas launch per shard, tables in VMEM
+                keys2d, nk = _pad_rows(keys)
+                tabs = tuple(_tables2d([arrays[n] for n in names]))
+                scal = (jnp.stack(scalars) if scalars
+                        else jnp.zeros((0,), jnp.int32))
+                raw = _engine_pallas(
+                    scal, (keys2d,), tabs, op=op,
+                    block_rows=self._block_rows or DEFAULT_BLOCK_ROWS,
+                    interpret=self._interpret)
+                outs = [o.reshape(-1)[:nk] for o in raw]
+            return outs[0] if op.k == 1 else jnp.stack(outs)  # [K'] | [k, K']
+
+        f = shard_map(per_shard, mesh=self.mesh,
+                      in_specs=(key_spec, P(), P()),
+                      out_specs=key_spec if op.k == 1 else P(None, shard_dim))
+        # k=1: the int32 result aliases the donated int32 key buffer —
+        # steady-state streaming keeps two buffers alive, not 2×batches.
+        fn = jax.jit(f, donate_argnums=(0,) if op.k == 1 else ())
+        self._fns[key] = fn
+        return fn
+
+    def _stage(self, keys) -> tuple:
+        """Pad + device_put a key batch with the sharded layout."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        keys = np.asarray(keys, dtype=np.uint32)
+        n = len(keys)
+        padded = max(self.lanes, -(-n // self.lanes) * self.lanes)
+        buf = np.zeros(padded, np.int32)  # donated: int32 so results alias
+        buf[:n] = keys.view(np.int32)
+        key_spec = P(self.axes if len(self.axes) > 1 else self.axes[0])
+        dev = jax.device_put(jnp.asarray(buf),
+                             NamedSharding(self.mesh, key_spec))
+        return dev, n, padded
+
+    # -- public data plane ---------------------------------------------------
+    def lookup(self, keys) -> np.ndarray:
+        """Sharded batched lookup: keys [K] → np int32 [K] (k=1) or [K, k]."""
+        self._ensure()
+        dev, n, padded = self._stage(keys)
+        arrays, scalars = self._dev
+        out = self._sharded_fn(padded)(dev, arrays, scalars)
+        return self._finish(out, n)
+
+    def route_stream(self, batches):
+        """Stream key batches through the plane with double buffering.
+
+        Yields one np result per input batch, in order.  The donated key
+        buffers and the one-batch pipeline keep host staging of batch
+        *i+1* overlapped with device compute of batch *i*.
+        """
+        pending = None  # (device out, n)
+        for batch in batches:
+            self._ensure()  # pick up any epoch flip between batches
+            arrays, scalars = self._dev
+            dev, n, padded = self._stage(batch)
+            out = self._sharded_fn(padded)(dev, arrays, scalars)  # async
+            if pending is not None:
+                yield self._finish(*pending)
+            pending = (out, n)
+        if pending is not None:
+            yield self._finish(*pending)
+
+    def _finish(self, out, n) -> np.ndarray:
+        out = np.asarray(out)
+        return out[:n] if self.k == 1 else out[:, :n].T

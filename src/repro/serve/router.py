@@ -18,7 +18,10 @@ requests) runs on the device data plane through a
 :class:`~repro.core.DeviceImageStore`: ``fail_replica``/``restore_replica``
 push O(changed-words) epoch deltas to the device instead of nulling and
 rebuilding the O(n) image (DESIGN.md §3.5), and lookups keep serving the
-old epoch until the flip.
+old epoch until the flip.  Batch lookups are single launches of the
+unified engine (DESIGN.md §6); :meth:`SessionRouter.route_stream` fans
+streams of batches across every device via the mesh-sharded
+:class:`~repro.serve.plane.ShardedLookupPlane`.
 """
 from __future__ import annotations
 
@@ -66,6 +69,8 @@ class SessionRouter:
         # fleets must not grow host memory without limit.
         self._last: OrderedDict = OrderedDict()
         self._store: DeviceImageStore | None = None
+        self._plane = None    # lazy ShardedLookupPlane (route_stream)
+        self._plane_k = None  # lazy k-replica plane (failover streaming)
         # replicas marked failed but whose removal delta has not landed yet:
         # route()/route_batch() fail over around them immediately.
         self._failed: set[int] = set()
@@ -112,31 +117,94 @@ class SessionRouter:
     def device_image(self):
         return self.image_store().image()
 
+    def _failover_pick(self, sets: np.ndarray) -> np.ndarray:
+        """THE failover rule, shared by every batch path: per row of k
+        candidate replicas, pick the first not marked failed (all marked →
+        keep the primary).  Accepts 1-D input (k clamped to 1 by a
+        collapsed fleet)."""
+        sets = np.asarray(sets)
+        if sets.ndim == 1:
+            sets = sets.reshape(-1, 1)
+        ok = ~np.isin(sets, sorted(self._failed))
+        ok[:, 0] |= ~ok.any(axis=1)  # all failed → keep the primary
+        col = ok.argmax(axis=1)
+        self.stats.failovers += int((col > 0).sum())
+        return sets[np.arange(len(sets)), col]
+
     def route_batch(self, session_ids: np.ndarray) -> np.ndarray:
         from repro.core.hashing import np_key_to_u32
         keys = np_key_to_u32(np.asarray(session_ids))
         plane = "pallas" if self.use_device_plane else "jnp"
         if self.replicas_k > 1 and self._failed:
-            # k-replica sets in one device pass; pick the first column not
-            # marked failed (the same failover rule the scalar path applies).
-            sets = self.replica_set_batch(session_ids)
-            ok = ~np.isin(sets, sorted(self._failed))
-            ok[:, 0] |= ~ok.any(axis=1)  # all failed → keep the primary
-            col = ok.argmax(axis=1)
-            self.stats.failovers += int((col > 0).sum())
-            return sets[np.arange(len(sets)), col]
+            # k-replica sets in one device pass; same rule as route()
+            return self._failover_pick(self.replica_set_batch(session_ids))
         return self.image_store().lookup(keys, plane=plane)
 
     def replica_set_batch(self, session_ids: np.ndarray) -> np.ndarray:
-        """k-replica sets for a session batch on the device plane:
+        """k-replica sets for a session batch in one engine launch:
         int32 [len(ids), k], column 0 = the classic placement."""
         from repro.core.hashing import np_key_to_u32
-        from repro.kernels.replica_lookup import replica_lookup
         keys = np_key_to_u32(np.asarray(session_ids))
         plane = "pallas" if self.use_device_plane else "jnp"
         k = min(self.replicas_k, self.ch.working)
-        return np.asarray(replica_lookup(keys, self.image_store().image(),
-                                         k, plane=plane))
+        out = self.image_store().lookup(keys, plane=plane, k=k)
+        return out.reshape(-1, 1) if k == 1 else out
+
+    # -- streaming path (mesh-sharded plane) ----------------------------------
+    def sharded_plane(self, *, mesh=None, axes=None):
+        """The router's :class:`~repro.serve.plane.ShardedLookupPlane` over
+        its image store: million-session batches fan out across every
+        device, with membership deltas reaching each device through the
+        store's epoch sync (DESIGN.md §6)."""
+        from repro.serve.plane import ShardedLookupPlane
+        if self._plane is None or mesh is not None or axes is not None:
+            plane = ShardedLookupPlane(self.image_store(), mesh=mesh,
+                                       axes=axes)
+            if mesh is None and axes is None:
+                self._plane = plane
+            return plane
+        return self._plane
+
+    def route_stream(self, session_id_batches, *, mesh=None):
+        """Stream batches of session ids → np int32 replica batches through
+        the mesh-sharded plane.  Membership events applied between batches
+        (``fail_replica``/``restore_replica``) are picked up at the next
+        batch boundary, and — like :meth:`route_batch` — replicas marked
+        failed (:meth:`mark_failed`) are failed over BEFORE their removal
+        delta lands.  A replica-unaware router (``replicas_k == 1``)
+        streams through the plane's pipelined double-buffered path; a
+        replica-aware one dispatches per batch so the failover mask is
+        applied with the same rule as the scalar path."""
+        from repro.core.hashing import np_key_to_u32
+        plane = self.sharded_plane(mesh=mesh)
+        if self.replicas_k == 1:
+            def to_keys():
+                for ids in session_id_batches:
+                    self.stats.routed += len(ids)
+                    yield np_key_to_u32(np.asarray(ids))
+
+            yield from plane.route_stream(to_keys())
+            return
+        kplane = self._replica_plane(mesh)  # built once per stream, not per batch
+        for ids in session_id_batches:
+            ids = np.asarray(ids)
+            self.stats.routed += len(ids)
+            keys = np_key_to_u32(ids)
+            if not self._failed:
+                yield plane.lookup(keys)
+            else:
+                yield self._failover_pick(kplane.lookup(keys))
+
+    def _replica_plane(self, mesh=None):
+        """Sharded k-replica plane for the failover stream path."""
+        from repro.serve.plane import ShardedLookupPlane
+        k = min(self.replicas_k, self.ch.working)
+        if self._plane_k is None or self._plane_k.k != k or mesh is not None:
+            plane = ShardedLookupPlane(self.image_store(), mesh=mesh, k=k)
+            if mesh is None:
+                self._plane_k = plane
+            return plane
+        return self._plane_k
 
     # -- membership ----------------------------------------------------------
     def _push_delta(self) -> None:

@@ -1,0 +1,321 @@
+"""The unified lookup engine (DESIGN.md §6): every (algorithm × op-mode ×
+plane) cell bit-identical to the pre-engine kernels and the numpy/host
+oracles on random churned states, plus the mesh-sharded serving plane.
+
+Op modes covered: plain lookup, k-replica lookup, fused bounded-replica
+lookup (k replicas under a load cap, one launch), bounded chain-walk
+assignment, one-epoch→epoch diff, and the fused replica-set diff.  The
+sharded plane is checked on whatever mesh the process has (1 CPU device
+here) and, in ``test_property_engine.py``, on forced multi-device
+subprocesses for arbitrary mesh shapes.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import DeviceImageStore, make_hash
+from repro.core.protocol import replica_sets
+from repro.kernels import engine, ref
+
+ALGOS = ["memento", "anchor", "dx", "jump"]
+PLANES = ["jnp", "pallas"]
+
+
+def _state(algo, n0, removals, seed):
+    h = make_hash(algo, n0, capacity=4 * n0, variant="32")
+    rng = np.random.default_rng(seed)
+    removals = min(removals, n0 - 1) if algo == "jump" else removals
+    for _ in range(removals):
+        if algo == "jump":
+            h.remove(h.size - 1)
+        else:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+    return h
+
+
+def _churn(h, events, seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(events):
+        if h.name != "jump" and h.working > 2 and rng.random() < 0.7:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+        elif h.name == "jump" and h.size > 2 and rng.random() < 0.7:
+            h.remove(h.size - 1)
+        else:
+            h.add()
+
+
+_load_len = engine.bounded_load_len  # the one sizing rule for load words
+
+
+KEYS = np.random.default_rng(77).integers(0, 2**32, size=700, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Lookup modes vs host oracles, all planes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("plane", PLANES)
+def test_lookup_matches_host(algo, plane):
+    h = _state(algo, 96, 40, seed=1)
+    out = np.asarray(engine.engine_lookup(KEYS, h.device_image(), plane=plane))
+    np.testing.assert_array_equal(out, ref.lookup_host(KEYS, h))
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("plane", PLANES)
+@pytest.mark.parametrize("k", [2, 3])
+def test_lookup_k_matches_host(algo, plane, k):
+    h = _state(algo, 64, 20, seed=2)
+    out = np.asarray(engine.engine_lookup(KEYS[:128], h.device_image(), k=k,
+                                          plane=plane))
+    np.testing.assert_array_equal(out, replica_sets(h, KEYS[:128], k))
+    assert all(len(set(row)) == k for row in out.tolist())
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("plane", PLANES)
+def test_bounded_replica_lookup_fused(algo, plane):
+    """The fused k-replica-under-cap op: one launch, every slot below the
+    cap, bit-identical to the host salted walk with the load reject rule."""
+    h = _state(algo, 64, 16, seed=3)
+    image = h.device_image()
+    load = np.zeros(_load_len(image), np.int32)
+    cap = 7
+    ws = sorted(h.working_set())
+    load[ws[: len(ws) // 3]] = cap  # a third of the fleet is full
+    want = engine.bounded_replica_sets(h, KEYS[:96], 2, load, cap)
+    got = np.asarray(engine.engine_lookup(KEYS[:96], image, k=2, load=load,
+                                          cap=cap, plane=plane))
+    np.testing.assert_array_equal(got, want)
+    assert (load[got] < cap).all()
+    # bounded slot 0 may legitimately differ from the unbounded primary
+    plain = np.asarray(engine.engine_lookup(KEYS[:96], image, plane=plane))
+    moved = got[:, 0] != plain
+    assert (load[plain[moved]] >= cap).all()
+    # an infeasible cap (< k buckets under cap) must raise, like the host
+    # oracle — never silently return over-cap buckets
+    full_load = np.full_like(load, cap)
+    with pytest.raises(RuntimeError, match="salt budget"):
+        engine.engine_lookup(KEYS[:16], image, k=2, load=full_load, cap=cap,
+                             plane=plane)
+
+
+@pytest.mark.parametrize("plane", PLANES)
+def test_bounded_replica_duplicate_rows_raise(plane):
+    """Fewer than k DISTINCT below-cap buckets (primary itself below cap)
+    must raise too — not return duplicate replica sets."""
+    h = make_hash("memento", 2, variant="32")
+    image = h.device_image()
+    load = np.zeros(_load_len(image), np.int32)
+    load[1] = 5  # bucket 1 full: only bucket 0 remains below cap
+    with pytest.raises(RuntimeError, match="salt budget"):
+        engine.engine_lookup(KEYS[:32], image, k=2, load=load, cap=5,
+                             plane=plane)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("plane", PLANES)
+def test_epoch_diff_and_replica_set_diff(algo, plane):
+    h = _state(algo, 96, 30, seed=4)
+    store = DeviceImageStore(h)
+    _churn(h, 5, seed=5)
+    store.sync()
+    old, new = store.previous_image(), store.image()
+    d = engine.engine_diff(KEYS, old, new, plane=plane)
+    np.testing.assert_array_equal(
+        d.old, np.asarray(engine.engine_lookup(KEYS, old, plane="jnp")))
+    np.testing.assert_array_equal(
+        d.new, np.asarray(engine.engine_lookup(KEYS, new, plane="jnp")))
+    np.testing.assert_array_equal(d.moved, d.old != d.new)
+    # fused replica-set diff == per-epoch replica lookups
+    dk = engine.engine_diff(KEYS[:200], old, new, k=2, plane=plane)
+    np.testing.assert_array_equal(
+        dk.old, np.asarray(engine.engine_lookup(KEYS[:200], old, k=2,
+                                                plane="jnp")))
+    np.testing.assert_array_equal(
+        dk.new, np.asarray(engine.engine_lookup(KEYS[:200], new, k=2,
+                                                plane="jnp")))
+    np.testing.assert_array_equal(dk.moved, (dk.old != dk.new).any(axis=1))
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("plane", PLANES)
+def test_bounded_assign_matches_reference(algo, plane):
+    from repro.core.bounded import bounded_assign_ref
+
+    h = _state(algo, 48, 12, seed=6)
+    image = h.device_image()
+    keys = KEYS[:300]
+    cap = max(1, int(np.ceil(1.25 * len(keys) / h.working)))
+    load0 = np.zeros(_load_len(image), np.int32)
+    want, want_load = bounded_assign_ref(h, keys, load0, cap)
+    got, got_load = engine.bounded_assign(keys, image, load0, cap,
+                                          plane=plane)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got_load, want_load)
+    assert got_load.max() <= cap
+
+
+def test_memento_compact_all_modes():
+    h = _state("memento", 200, 130, seed=7)
+    image = h.device_image()
+    host = ref.lookup_host(KEYS, h)
+    out = np.asarray(engine.engine_lookup(KEYS, image, plane="pallas",
+                                          table="compact"))
+    np.testing.assert_array_equal(out, host)
+
+
+def test_engine_op_validation():
+    with pytest.raises(ValueError):
+        engine.EngineOp("cuckoo")
+    with pytest.raises(ValueError):
+        engine.EngineOp("memento", k=0)
+    with pytest.raises(ValueError):
+        engine.EngineOp("anchor", table="compact")
+    with pytest.raises(ValueError):
+        engine.EngineOp("memento", mode="walk", k=2)
+    h = _state("memento", 16, 0, seed=0)
+    with pytest.raises(ValueError):
+        engine.engine_lookup(KEYS[:4], h.device_image(), plane="cuda")
+    with pytest.raises(ValueError):
+        engine.engine_lookup(KEYS[:4], h.device_image(), load=np.zeros(16))
+
+
+# ---------------------------------------------------------------------------
+# Legacy shim compatibility: old entry points == engine configurations
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_legacy_shims_are_engine(algo):
+    from repro.kernels.migrate import migration_diff
+    from repro.kernels.replica_lookup import replica_lookup
+
+    h = _state(algo, 64, 20, seed=8)
+    image = h.device_image()
+    np.testing.assert_array_equal(
+        np.asarray(replica_lookup(KEYS[:64], image, 1)),
+        np.asarray(engine.engine_lookup(KEYS[:64], image,
+                                        plane="jnp")).reshape(-1, 1))
+    h2 = _state(algo, 64, 24, seed=9)
+    d = migration_diff(KEYS[:64], image, h2.device_image())
+    e = engine.engine_diff(KEYS[:64], image, h2.device_image())
+    np.testing.assert_array_equal(d.old, e.old)
+    np.testing.assert_array_equal(d.moved, e.moved)
+
+
+def test_cross_algo_diff_jnp():
+    """Algorithm migrations diff across table layouts on the jnp plane."""
+    hm = _state("memento", 64, 10, seed=10)
+    ha = _state("anchor", 64, 10, seed=10)
+    d = engine.engine_diff(KEYS[:128], hm.device_image(), ha.device_image(),
+                           plane="jnp")
+    np.testing.assert_array_equal(d.old, ref.lookup_host(KEYS[:128], hm))
+    np.testing.assert_array_equal(d.new, ref.lookup_host(KEYS[:128], ha))
+    with pytest.raises(ValueError):
+        engine.engine_diff(KEYS[:8], hm.device_image(), ha.device_image(),
+                           plane="pallas")
+
+
+# ---------------------------------------------------------------------------
+# Sharded serving plane (this process' devices; multi-device: property test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_sharded_plane_matches_single_device(algo):
+    from repro.serve.plane import ShardedLookupPlane
+
+    h = _state(algo, 96, 30, seed=11)
+    store = DeviceImageStore(h)
+    plane = ShardedLookupPlane(store)
+    keys = np.random.default_rng(12).integers(0, 2**32, size=4321,
+                                              dtype=np.uint32)
+    np.testing.assert_array_equal(plane.lookup(keys),
+                                  store.lookup(keys, plane="jnp"))
+    p2 = ShardedLookupPlane(store, k=2)
+    np.testing.assert_array_equal(p2.lookup(keys[:512]),
+                                  store.lookup(keys[:512], k=2, plane="jnp"))
+
+
+def test_sharded_plane_stream_tracks_epochs():
+    from repro.serve.plane import ShardedLookupPlane
+
+    h = _state("memento", 64, 10, seed=13)
+    store = DeviceImageStore(h)
+    plane = ShardedLookupPlane(store)
+    keys = np.random.default_rng(14).integers(0, 2**32, size=1000,
+                                              dtype=np.uint32)
+
+    def batches():
+        yield keys
+        h.remove(sorted(h.working_set())[0])
+        store.sync()  # flips between batches; plane must re-pin
+        yield keys
+
+    out0, out1 = list(plane.route_stream(batches()))
+    np.testing.assert_array_equal(out1, ref.lookup_host(keys, h))
+    assert (out0 != out1).any()
+
+
+def test_router_route_stream_matches_route_batch():
+    from repro.serve.router import SessionRouter
+
+    r = SessionRouter(12)
+    ids = [np.arange(i * 64, (i + 1) * 64, dtype=np.uint64) for i in range(3)]
+    streamed = list(r.route_stream(iter(ids)))
+    for batch, out in zip(ids, streamed):
+        np.testing.assert_array_equal(out, r.route_batch(batch))
+
+
+def test_router_route_stream_honours_mark_failed():
+    """Streamed traffic must fail over around a health-marked replica with
+    the same rule as route_batch — BEFORE the membership delta lands."""
+    from repro.serve.router import SessionRouter
+
+    r = SessionRouter(8, replicas_k=2)
+    ids = np.arange(0, 256, dtype=np.uint64)
+    primary = r.route_batch(ids)
+    victim = int(np.bincount(primary).argmax())
+    r.mark_failed(victim)
+    want = r.route_batch(ids)
+    assert victim not in set(want.tolist())
+    (streamed,) = list(r.route_stream([ids]))
+    np.testing.assert_array_equal(streamed, want)
+    assert r.stats.failovers > 0
+    r._failed.clear()
+    (clean,) = list(r.route_stream([ids]))
+    np.testing.assert_array_equal(clean, primary)
+
+
+def test_router_route_stream_survives_fleet_collapse():
+    """replicas_k > 1 with the fleet collapsed to one survivor: the
+    k-clamped (1-D) replica sets must stream without error, matching
+    route_batch."""
+    from repro.serve.router import SessionRouter
+
+    r = SessionRouter(3, replicas_k=2)
+    ids = np.arange(0, 64, dtype=np.uint64)
+    r.fail_replica(2)
+    r.fail_replica(1)
+    r.mark_failed(0)  # every candidate marked → keep the primary
+    want = r.route_batch(ids)
+    (streamed,) = list(r.route_stream([ids]))
+    np.testing.assert_array_equal(streamed, want)
+
+
+def test_elastic_replica_movement_plan():
+    from repro.runtime.elastic import ElasticCluster
+
+    c = ElasticCluster(16, num_shards=64, replica_k=2)
+    before = {s: c.replica_hosts(s) for s in range(64)}
+    c.fail(5)
+    mv = c.replica_movement()
+    after = {s: c.replica_hosts(s) for s in range(64)}
+    # default identity domains: device plan == host lookup_k churn
+    want = {s for s in range(64) if before[s] != after[s]}
+    assert set(mv) == want
+    for s in mv:
+        assert mv[s]["old"] == before[s] and mv[s]["new"] == after[s]

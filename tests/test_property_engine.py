@@ -1,0 +1,124 @@
+"""Hypothesis property tests for the lookup engine + sharded plane.
+
+Gated on ``hypothesis`` like the other ``test_property_*`` modules.
+
+Two properties:
+
+* **engine ≡ host on random churned states** — for random event streams,
+  every engine op mode stays bit-identical to the host control plane
+  (in-process, both planes).
+
+* **sharded ≡ single-device for any mesh shape** — a forced multi-device
+  subprocess (``--xla_force_host_platform_device_count``, the same trick
+  the dry-run launcher uses) builds a mesh of the drawn shape over the
+  drawn axes and checks :class:`~repro.serve.plane.ShardedLookupPlane`
+  against the single-device engine.  Results are memoized per drawn case
+  so hypothesis re-draws stay cheap.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import make_hash  # noqa: E402
+from repro.kernels import engine, ref  # noqa: E402
+
+ALGOS = ("memento", "anchor", "dx", "jump")
+NDEV = 4  # forced host-platform device count in the subprocess
+MESH_SHAPES = ((1,), (2,), (4,), (2, 2), (1, 4), (2, 1))
+
+
+def _churned(algo, seed):
+    rng = np.random.default_rng(seed)
+    h = make_hash(algo, 48, capacity=192, variant="32")
+    for _ in range(int(rng.integers(5, 40))):
+        if h.name != "jump" and h.working > 2 and rng.random() < 0.65:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+        elif h.name == "jump" and h.size > 2 and rng.random() < 0.65:
+            h.remove(h.size - 1)
+        else:
+            h.add()
+    return h
+
+
+@settings(max_examples=10, deadline=None)
+@given(algo=st.sampled_from(ALGOS), seed=st.integers(0, 2**16),
+       plane=st.sampled_from(("jnp", "pallas")), k=st.integers(1, 3))
+def test_engine_matches_host_on_random_churn(algo, seed, plane, k):
+    h = _churned(algo, seed)
+    keys = np.random.default_rng(seed ^ 0xA5).integers(
+        0, 2**32, size=257, dtype=np.uint32)
+    out = np.asarray(engine.engine_lookup(keys, h.device_image(), k=k,
+                                          plane=plane))
+    if k == 1:
+        np.testing.assert_array_equal(out, ref.lookup_host(keys, h))
+    else:
+        from repro.core.protocol import replica_sets
+        np.testing.assert_array_equal(out, replica_sets(h, keys, k))
+
+
+_SUBPROCESS_CHECK = textwrap.dedent("""
+    import numpy as np, jax
+    assert len(jax.devices()) == {ndev}, jax.devices()
+    from repro.core import DeviceImageStore, make_hash
+    from repro.kernels.engine import engine_lookup
+    from repro.launch.mesh import _mesh
+    from repro.serve.plane import ShardedLookupPlane
+
+    shape, algo, seed = {shape!r}, {algo!r}, {seed}
+    rng = np.random.default_rng(seed)
+    h = make_hash(algo, 64, capacity=256, variant="32")
+    for _ in range(int(rng.integers(3, 25))):
+        if algo == "jump":
+            h.remove(h.size - 1) if h.size > 2 else h.add()
+        elif h.working > 2 and rng.random() < 0.7:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+        else:
+            h.add()
+    store = DeviceImageStore(h)
+    axes = ("data", "model")[: len(shape)]
+    mesh = _mesh(shape, axes)
+    plane = ShardedLookupPlane(store, mesh=mesh)
+    keys = rng.integers(0, 2**32, size=20_011, dtype=np.uint32)
+    want = np.asarray(engine_lookup(keys, store.image(), plane="jnp"))
+    np.testing.assert_array_equal(plane.lookup(keys), want)
+    outs = list(plane.route_stream([keys[:4096], keys[4096:8192]]))
+    np.testing.assert_array_equal(outs[0], want[:4096])
+    np.testing.assert_array_equal(outs[1], want[4096:8192])
+    print("OK", shape, algo)
+""")
+
+
+@functools.lru_cache(maxsize=None)
+def _run_mesh_case(shape: tuple, algo: str, seed: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={NDEV} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    code = _SUBPROCESS_CHECK.format(ndev=NDEV, shape=tuple(shape), algo=algo,
+                                    seed=seed)
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+
+
+@settings(max_examples=6, deadline=None)
+@given(shape=st.sampled_from(MESH_SHAPES), algo=st.sampled_from(ALGOS),
+       seed=st.integers(0, 3))
+def test_sharded_plane_equals_single_device_any_mesh(shape, algo, seed):
+    res = _run_mesh_case(shape, algo, seed)
+    assert res.returncode == 0, f"{res.stdout}\n{res.stderr}"
+    assert "OK" in res.stdout
