@@ -12,8 +12,8 @@ one-shot / incremental removals, ``variant="32"`` states) this measures:
   * **bounded-load balance** — peak-to-mean load after assigning the key
     batch with cap ``ceil(c·keys/working)`` for c ∈ {1.05, 1.25, ∞}
     (∞ = plain consistent hashing, the no-bound baseline) via the
-    device-plane chain walk (:func:`~repro.kernels.replica_lookup.
-    bounded_assign_device`).
+    device-plane chain walk (:func:`~repro.kernels.engine.
+    bounded_assign`).
 
 The deterministic claims gate (``check_replica_claims``): replica sets are
 pairwise distinct with column 0 equal to the plain lookup, and bounded
@@ -73,11 +73,7 @@ def bench_replicas(emit, w=1024, a_over_w=4, n_keys=8192, pallas_keys=2048,
     from repro.core.protocol import replica_sets
     # both ops are single configurations of the unified engine (DESIGN.md §6)
     from repro.kernels.engine import (bounded_assign as bounded_assign_device,
-                                      engine_lookup)
-
-    def replica_lookup(keys, image, k, *, plane):
-        out = engine_lookup(keys, image, k=k, plane=plane)
-        return jnp.reshape(out, (-1, 1)) if k == 1 else out
+                                      replica_lookup)
 
     rng = np.random.default_rng(seed)
     keys = rng.integers(0, 2**32, size=n_keys, dtype=np.uint32)

@@ -39,6 +39,8 @@ def main(argv=None) -> int:
                     help="also run the k-replication + bounded-load benchmark")
     ap.add_argument("--engine", action="store_true",
                     help="also run the unified-engine / sharded-plane benchmark")
+    ap.add_argument("--scenarios", action="store_true",
+                    help="also replay the scenario-engine lifecycle suite")
     ap.add_argument("--out-dir", default=None,
                     help="write bench.csv here (default: a run-scoped dir "
                          "under benchmarks/results/runs/)")
@@ -113,6 +115,16 @@ def main(argv=None) -> int:
             bench_engine(emit, w=256, key_counts=(10_000,), k_values=(1, 2))
         else:
             bench_engine(emit)
+    if args.scenarios:
+        # the paper's lifecycle scenarios + beyond-paper churn traces
+        # replayed through the whole device stack, guarantees checked per
+        # event (DESIGN.md §7)
+        from .bench_scenarios import bench_scenarios
+        if args.quick:
+            bench_scenarios(emit, w=32, n_keys=512, probe_keys=512,
+                            deg_w=128, deg_keys=256)
+        else:
+            bench_scenarios(emit)
 
     if args.update_golden:
         out_dir = GOLDEN

@@ -6,6 +6,11 @@ consistent-hashed onto replicas, so the failure moves ONLY the dead
 replica's sessions (their caches re-prefill — a measured, minimal cache-miss
 set) while every other session keeps decoding on its warm cache.
 
+The churn script is a scenario-engine trace (DESIGN.md §7): the rounds and
+the mid-run failure replay ``repro.sim.traces.serving_failure_trace``, with
+the victim resolved by the simulator's own ``pick_victim`` rule — the demo
+and ``benchmarks/bench_scenarios.py`` exercise ONE churn path.
+
     PYTHONPATH=src python examples/serve_cluster.py [--replicas 4] [--sessions 24]
 """
 from __future__ import annotations
@@ -20,6 +25,7 @@ import numpy as np
 from repro.configs import smoke_config
 from repro.models import LM
 from repro.serve.router import BatchScheduler, Request, SessionRouter
+from repro.sim import make_trace, pick_victim
 
 
 class Replica:
@@ -61,6 +67,8 @@ def main(argv=None):
     ap.add_argument("--sessions", type=int, default=24)
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--fail-at", type=int, default=3)
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="seed of the serving_failure scenario trace")
     ap.add_argument("--cache-dtype", default="bfloat16",
                     choices=["bfloat16", "int8"])
     args = ap.parse_args(argv)
@@ -81,10 +89,18 @@ def main(argv=None):
     placement_before_failure = {}
     retired: list[Replica] = []
 
+    # the churn script: rounds + ONE mid-run failure, as a replayable
+    # scenario trace — the same path the scenario engine benchmarks drive
+    trace = make_trace("serving_failure", seed=args.trace_seed,
+                       replicas=args.replicas, rounds=args.rounds,
+                       fail_at=args.fail_at)
+    trace_rng = np.random.default_rng([trace.seed, 0])  # membership stream
+
     t0 = time.time()
-    for rnd in range(args.rounds):
-        if rnd == args.fail_at:
-            victim = sorted(router.replicas)[0]
+    rnd = 0
+    for ev in trace.events:
+        if ev.op == "fail":
+            victim = pick_victim(router.ch, ev.select, trace_rng, ev.bucket)
             placement_before_failure = {
                 s: router.route(s) for s in prompts}
             info = router.fail_replica(victim)
@@ -93,7 +109,8 @@ def main(argv=None):
             print(f"\n!! replica {victim} FAILED "
                   f"(held {len(dead.caches)} warm sessions; "
                   f"router moved {info['sessions_moved']})")
-
+            continue
+        assert ev.op == "route"  # one decode round
         batches, overflow = sched.assign([Request(session_id=s) for s in prompts])
         if overflow:
             print(f"   (back-pressure: {len(overflow)} requests re-queued)")
@@ -105,6 +122,7 @@ def main(argv=None):
         done = sum(len(v) for v in outputs.values())
         print(f"round {rnd}: {done} tokens total, "
               f"replicas={{{', '.join(f'{r}:{len(rep.caches)}s' for r, rep in sorted(replicas.items()))}}}")
+        rnd += 1
 
     # --- report ---------------------------------------------------------
     fleet = list(replicas.values()) + retired

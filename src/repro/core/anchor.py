@@ -98,6 +98,22 @@ class AnchorHash(ReplicatedLookup, DeltaEmitter):
             b = h
         return b
 
+    # convenience for tests/benchmarks (mirrors MementoHash.lookup_trace)
+    def lookup_trace(self, key: int) -> tuple[int, int, int]:
+        """Lookup returning (bucket, external_iters, internal_iters)."""
+        key &= self._mask
+        A, K = self.A, self.K
+        b = self._fmix(key) % self.a
+        ext = inn = 0
+        while A[b] > 0:
+            ext += 1
+            h = self._hash2(key, b) % A[b]
+            while A[h] >= A[b]:
+                inn += 1
+                h = K[h]
+            b = h
+        return b, ext, inn
+
     def device_image(self, capacity: int | None = None) -> DeviceImage:
         """A/K image: removal timestamps + wrap successors (DESIGN.md §3.3).
 

@@ -14,8 +14,8 @@ array** that rides in the :class:`~repro.core.protocol.DeviceImage` next to
 the algorithm's lookup tables and is synced to the device as epoch deltas
 (O(changed-words), like every other table — DESIGN.md §3.5/§4.2).  The
 chain walk itself runs on the device planes too
-(:func:`repro.kernels.replica_lookup.chain_walk` /
-:func:`~repro.kernels.replica_lookup.bounded_assign_device`), bit-identical
+(:func:`repro.kernels.engine.engine_chain_walk` /
+:func:`~repro.kernels.engine.bounded_assign`), bit-identical
 to the host walk here on ``variant="32"`` states; intra-batch races are
 resolved in key-index order by :func:`accept_in_index_order`, shared
 verbatim between the numpy reference and the device driver.
@@ -36,8 +36,8 @@ def accept_in_index_order(b, pending, load, cap) -> np.ndarray:
     lowest-batch-index proposers up to the bucket's remaining room
     ``cap − load[b]``.  The one acceptance rule both the numpy reference
     (:func:`bounded_assign_ref`) and the device driver
-    (:func:`repro.kernels.replica_lookup.bounded_assign_device`) apply, so
-    the planes cannot diverge on intra-batch races."""
+    (:func:`repro.kernels.engine.bounded_assign`) apply, so the planes
+    cannot diverge on intra-batch races."""
     idx = np.nonzero(pending)[0]
     pb = np.asarray(b)[idx]
     order = np.argsort(pb, kind="stable")
@@ -237,8 +237,8 @@ class BoundedLoad(DeltaEmitter):
         """Batch assignment at ``cap = ceil(c·(assigned+len(keys))/working)``
         via the numpy reference semantics; one composed epoch delta carries
         every changed load word.  (Device-plane callers run
-        ``kernels.replica_lookup.bounded_assign_device`` against the synced
-        image and get bit-identical assignments.)"""
+        ``kernels.engine.bounded_assign`` against the synced image and
+        get bit-identical assignments.)"""
         keys = np.asarray(keys, dtype=np.uint64)
         cap = self.capacity(incoming=len(keys))
         out, new_load = bounded_assign_ref(self.ch, keys, self._load, cap)

@@ -92,6 +92,18 @@ class DxHash(ReplicatedLookup, DeltaEmitter):
                 return b
         raise RuntimeError("no working bucket")
 
+    # convenience for tests/benchmarks (mirrors MementoHash.lookup_trace)
+    def lookup_trace(self, key: int) -> tuple[int, int, int]:
+        """Lookup returning (bucket, probes_past_first, 0) — Dx's cost is
+        its geometric probe count, reported in the external slot."""
+        key &= self._mask
+        a, active = self.a, self.active
+        for i in range(self.max_probes()):
+            b = self._hash2(key, i) % a
+            if active[b]:
+                return b, i, 0
+        return self.lookup(key), self.max_probes(), 0
+
     def device_image(self, capacity: int | None = None) -> DeviceImage:
         """Packed active bitmap (bucket b ↔ bit b&31 of word b>>5) plus the
         dynamic probe bound and the maintained first-working ``fallback``

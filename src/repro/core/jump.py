@@ -94,6 +94,12 @@ class JumpHash(ReplicatedLookup, DeltaEmitter):
     def lookup(self, key: int) -> int:
         return self._fn(key, self.n)
 
+    # convenience for tests/benchmarks (mirrors MementoHash.lookup_trace)
+    def lookup_trace(self, key: int) -> tuple[int, int, int]:
+        """Jump has no replacement walk: the jump chain is internal to
+        ``jump32``/``jump64``, so the step counts are reported as 0."""
+        return self.lookup(key), 0, 0
+
     def add(self) -> int:
         self.n += 1
         self._record({}, self.n)  # the whole delta is the new n

@@ -56,7 +56,7 @@ class ReplicatedLookup:
     salt = 1, 2, … and keeping the first candidate not already chosen.  The
     salt counter is shared across slots, so the construction is a single
     deterministic walk — the same walk the jnp and Pallas planes run
-    lane-synchronously (``kernels/replica_lookup.py``), bit-identical on
+    lane-synchronously (``kernels/engine.py``), bit-identical on
     ``variant="32"`` states.
 
     Disruption bound: removing bucket b changes a key's replica set only if
@@ -137,7 +137,7 @@ class ReplicatedLookup:
 def replica_sets(h, keys, k: int) -> np.ndarray:
     """Numpy oracle: ``lookup_k`` over a key batch → int32 [len(keys), k].
 
-    The ground truth the device planes (`kernels/replica_lookup.py`) are
+    The ground truth the device planes (`kernels/engine.py`) are
     tested against; per-key scalar walk on the host control plane.
     """
     keys = np.asarray(keys)

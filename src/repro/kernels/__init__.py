@@ -6,5 +6,5 @@
 # ops.device_lookup is the public image-generic entry; primitives.py holds
 # the shared 32-bit hash arithmetic; ref.py the oracles kernel tests
 # compare against; delta_apply.py the epoch-delta scatter (§3.5).
-# memento/anchor/dx/jump/replica_lookup.py and migrate.py are thin
-# re-export shims kept for one release.
+# engine.py is the only import surface: the PR-4 per-algorithm re-export
+# shims served their one release and are gone.

@@ -26,8 +26,9 @@ program).  The configuration space is :class:`EngineOp`:
 Algorithms: ``memento`` (dense Θ(n) table or the beyond-paper compact
 Θ(r) open-addressing table), ``anchor`` (A/K arrays), ``dx`` (packed
 bitmap), ``jump`` (stateless).  The per-algorithm lookup bodies live HERE
-and only here — ``kernels/{memento,anchor,dx,jump,replica}_lookup.py``
-and ``kernels/migrate.py`` are thin re-export shims kept for one release.
+and only here; this module is the one import surface for device lookups
+(the per-algorithm re-export shims of the engine's first release are
+retired).
 
 Planes: ``plane='pallas'`` (Mosaic on TPU, interpret elsewhere) and
 ``plane='jnp'`` (pure-jnp, any backend; also the per-shard body the
@@ -595,6 +596,15 @@ def engine_lookup(keys, image, *, k: int = 1, load=None, cap: int | None = None,
                 "replica salt budget exhausted (infeasible cap: fewer than "
                 f"k={k} distinct working buckets below cap={cap})")
     return out
+
+
+def replica_lookup(keys, image, k: int, *, plane: str = "jnp", **kw):
+    """k-replica sets with a STABLE 2-D shape: keys [K] → int32 [K, k] even
+    for k=1 (where :func:`engine_lookup` returns the flat classic op) —
+    the convenience replica-set consumers and tests share instead of each
+    hand-rolling the k=1 reshape."""
+    out = engine_lookup(keys, image, k=k, plane=plane, **kw)
+    return jnp.reshape(out, (-1, 1)) if k == 1 else out
 
 
 @dataclass

@@ -53,7 +53,8 @@ class SessionRouter:
 
     def __init__(self, num_replicas: int, *, algo: str | ConsistentHash = "memento",
                  capacity: int | None = None, use_device_plane: bool = False,
-                 max_sessions: int = 1_000_000, replicas_k: int = 1):
+                 max_sessions: int = 1_000_000, replicas_k: int = 1,
+                 store: DeviceImageStore | None = None):
         if isinstance(algo, str):
             # variant="32": host lookups bit-identical to the device plane.
             self.ch = make_hash(algo, num_replicas, capacity=capacity, variant="32")
@@ -68,7 +69,11 @@ class SessionRouter:
         # session id → last replica (metrics), LRU-bounded: million-session
         # fleets must not grow host memory without limit.
         self._last: OrderedDict = OrderedDict()
-        self._store: DeviceImageStore | None = None
+        # an injected store (e.g. the scenario driver's) must wrap the SAME
+        # host state, or deltas and lookups would split across two clusters
+        if store is not None and store._ch is not self.ch:
+            raise ValueError("injected store wraps a different host state")
+        self._store: DeviceImageStore | None = store
         self._plane = None    # lazy ShardedLookupPlane (route_stream)
         self._plane_k = None  # lazy k-replica plane (failover streaming)
         # replicas marked failed but whose removal delta has not landed yet:

@@ -1,0 +1,44 @@
+"""Scenario engine — deterministic cluster-lifecycle simulation
+(DESIGN.md §7).
+
+The paper's evaluation is scenario-driven (§VIII: stable, one-shot
+removal, incremental removals) and its headline claims are guarantees
+under churn.  This package turns both into executable artifacts:
+
+* :mod:`repro.sim.traces`   — declarative, seeded, JSON-replayable
+  lifecycle scripts (the paper's three scenarios + flapping, churn
+  storms, failure-domain outages, staged scaling, Zipf traffic,
+  session-affinity serving),
+* :mod:`repro.sim.driver`   — replays a trace through the REAL stack
+  (host algorithms → epoch deltas → :class:`~repro.core.DeviceImageStore`
+  → the unified engine / :class:`~repro.serve.router.SessionRouter` /
+  :class:`~repro.serve.plane.ShardedLookupPlane`),
+* :mod:`repro.sim.checkers` — per-event guarantee laws (minimal
+  disruption, balance, replica stability, bounded-load caps) plus the
+  graceful-degradation knee locator,
+* :mod:`repro.sim.metrics`  — movement / delta-words / epoch-flip /
+  throughput accumulation and the bit-for-bit replay fingerprint.
+
+``benchmarks/bench_scenarios.py`` sweeps the registry across algorithms
+and planes into ``BENCH_scenarios.json``.
+"""
+from .checkers import Violation, degradation_knee
+from .driver import ScenarioDriver, ScenarioResult, pick_victim, replay, resolve_victims
+from .metrics import EventRecord, ScenarioMetrics
+from .traces import SCENARIOS, Trace, TraceEvent, make_trace
+
+__all__ = [
+    "EventRecord",
+    "SCENARIOS",
+    "ScenarioDriver",
+    "ScenarioMetrics",
+    "ScenarioResult",
+    "Trace",
+    "TraceEvent",
+    "Violation",
+    "degradation_knee",
+    "make_trace",
+    "pick_victim",
+    "replay",
+    "resolve_victims",
+]

@@ -1,0 +1,433 @@
+"""Trace replay through the real production stack (DESIGN.md §7.2).
+
+:class:`ScenarioDriver` feeds a :class:`~repro.sim.traces.Trace` event by
+event through the exact objects that serve traffic in this repo — never a
+parallel reimplementation:
+
+* membership events mutate the host :class:`~repro.core.ConsistentHash`
+  (its :class:`~repro.core.protocol.DeltaEmitter` log records the deltas),
+* every sync drains ``device_delta()`` into the driver's
+  :class:`~repro.core.DeviceImageStore` (double-buffered epoch flip),
+* traffic runs the unified engine (``store.lookup`` → one jitted jnp
+  program or one Pallas launch; ``plane="host"`` runs the scalar host
+  control plane instead), bounded assignment runs
+  :func:`repro.kernels.engine.bounded_assign`, session traffic runs a
+  :class:`~repro.serve.router.SessionRouter` **sharing the driver's
+  store**, and ``sharded=True`` fans lookups through a
+  :class:`~repro.serve.plane.ShardedLookupPlane`,
+* after each synced membership event the guarantee checkers
+  (:mod:`repro.sim.checkers`) interrogate the engine's fused epoch diff
+  over a fixed probe batch.
+
+Determinism: victims come from one seeded stream, traffic keys from a
+second (both derived from ``trace.seed``), so a replay of the **resolved**
+trace (explicit victims, no membership randomness) draws identical
+traffic and reproduces every placement bit-for-bit —
+``result.metrics.fingerprint`` is the equality instrument.
+
+Cross-plane equality holds whenever traffic runs at a synced epoch (every
+built-in trace).  During an *unsynced* window (``sync=False`` membership
+still pending) the planes intentionally diverge the way production does
+(DESIGN.md §3.5): the host control plane answers from the live membership
+while the device planes keep serving the last synced epoch — stale but
+consistent.  The epoch catches up at the next sync, after which the
+fingerprints track again only if both sides looked up the same epochs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import DeviceImageStore, make_hash
+from repro.core.hashing import np_fmix32
+from repro.core.protocol import replica_sets
+
+from .checkers import (Violation, candidate_hits, check_balance,
+                       check_cap_invariant, check_minimal_disruption,
+                       check_replica_stability)
+from .metrics import EventRecord, ScenarioMetrics
+from .traces import Trace, TraceEvent
+
+PLANES = ("host", "jnp", "pallas")
+
+
+def pick_victim(h, select: str, rng: np.random.Generator,
+                bucket: int | None = None) -> int:
+    """Resolve ONE removal victim against the live working set.
+
+    The single churn-victim rule shared by the scenario driver and
+    ``examples/serve_cluster.py``.  Jump degrades every policy to LIFO
+    (its only legal removal); explicit ``bucket`` wins over any policy.
+    """
+    if bucket is not None:
+        return bucket
+    if h.name == "jump":
+        return h.size - 1
+    ws = sorted(h.working_set())
+    if select == "lifo":
+        return ws[-1]
+    if select == "first":
+        return ws[0]
+    if select == "random":
+        return ws[int(rng.integers(len(ws)))]
+    raise ValueError(f"unresolvable victim policy {select!r}")
+
+
+def resolve_victims(h, ev: TraceEvent, rng: np.random.Generator,
+                    num_domains: int | None = None) -> list[int]:
+    """The whole burst's victims, resolved BEFORE any removal mutates the
+    state (so replica-stability candidates can be walked on the pre-event
+    state).  Always leaves at least one working bucket."""
+    budget = h.working - 1
+    if ev.select == "domain":
+        nd = num_domains or 1
+        members = [b for b in sorted(h.working_set()) if b % nd == ev.domain]
+        if h.name == "jump":  # no arbitrary victims: a LIFO burst of the
+            # same size, so the lifecycle stays comparable across algos
+            return [h.size - 1 - i for i in range(min(len(members), budget))]
+        return members[:budget]
+    count = min(ev.count, budget)
+    if ev.bucket is not None:
+        return [ev.bucket]
+    if h.name == "jump":
+        return [h.size - 1 - i for i in range(count)]
+    ws = np.asarray(sorted(h.working_set()))
+    if ev.select == "random":
+        return [int(b) for b in rng.choice(ws, size=count, replace=False)]
+    if ev.select == "lifo":
+        return [int(b) for b in ws[::-1][:count]]
+    if ev.select == "first":
+        return [int(b) for b in ws[:count]]
+    raise ValueError(f"unresolvable victim policy {ev.select!r}")
+
+
+@dataclass
+class ScenarioResult:
+    """One replay: metrics, violations, and the resolved (replayable) trace."""
+
+    trace: Trace
+    algo: str
+    plane: str
+    metrics: ScenarioMetrics
+    violations: list[Violation] = field(default_factory=list)
+    resolved: Trace | None = None
+    final_working: int = 0
+    final_epoch: int = 0
+
+    @property
+    def fingerprint(self) -> str:
+        return self.metrics.fingerprint
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def summary(self) -> dict:
+        out = {"scenario": self.trace.name, "algo": self.algo,
+               "plane": self.plane, "seed": self.trace.seed,
+               "initial_nodes": self.trace.initial_nodes,
+               "final_working": self.final_working,
+               "final_epoch": self.final_epoch}
+        out.update(self.metrics.summary())
+        return out
+
+
+class ScenarioDriver:
+    """Replay one trace over one algorithm on one plane (see module doc)."""
+
+    def __init__(self, trace: Trace, *, algo: str = "memento",
+                 plane: str = "jnp", probe_keys: int = 2048,
+                 replica_k: int = 1, check: bool = True,
+                 sharded: bool = False, step_sample: int = 256,
+                 balance_tol: float = 6.0):
+        if plane not in PLANES:
+            raise ValueError(f"unknown plane {plane!r} (have {PLANES})")
+        self.trace = trace
+        self.algo = algo
+        self.plane = plane
+        self.check = check
+        self.replica_k = replica_k
+        self.balance_tol = balance_tol
+        self.h = make_hash(algo, trace.initial_nodes,
+                           capacity=trace.capacity_factor * trace.initial_nodes,
+                           variant="32")
+        # the ONE store every consumer shares (router included); the host
+        # plane still needs it for delta bookkeeping and the epoch diff
+        self.store = DeviceImageStore(
+            self.h, plane="jnp" if plane == "host" else plane)
+        # independent streams: membership victims vs traffic keys — a
+        # resolved-trace replay consumes no membership randomness yet must
+        # draw identical traffic (see module doc)
+        self._rng_member = np.random.default_rng([trace.seed, 0])
+        self._rng_traffic = np.random.default_rng([trace.seed, 1])
+        self.probe = np.random.default_rng([trace.seed, 2]).integers(
+            0, 2**32, size=probe_keys, dtype=np.uint32)
+        self._step_sample = self.probe[:step_sample]
+        self.metrics = ScenarioMetrics()
+        self.violations: list[Violation] = []
+        self._router = None
+        self._sharded = sharded
+        self._planes_sharded: dict = {}  # k → ShardedLookupPlane
+        # membership applied since the last sync (checker comparands)
+        self._pending_removed: set[int] = set()
+        self._pending_added: set[int] = set()
+        self._pending_hits: np.ndarray | None = None
+        self._resolved_events: list[TraceEvent] = []
+        self._route_prev: np.ndarray | None = None
+
+    # -- consumers ----------------------------------------------------------
+    @property
+    def router(self):
+        """Lazy SessionRouter sharing the driver's host state AND store, so
+        router-driven membership events ride the same epoch deltas."""
+        if self._router is None:
+            from repro.serve.router import SessionRouter
+            self._router = SessionRouter(
+                0, algo=self.h, store=self.store,
+                use_device_plane=(self.plane == "pallas"),
+                replicas_k=self.trace.meta.get("replicas_k", 1))
+        return self._router
+
+    # -- traffic ------------------------------------------------------------
+    def _draw_keys(self, ev: TraceEvent) -> np.ndarray:
+        if ev.dist == "zipf":
+            ranks = self._rng_traffic.zipf(ev.skew, size=ev.n_keys)
+            return np_fmix32((ranks % (2**32)).astype(np.uint32))
+        return self._rng_traffic.integers(0, 2**32, size=ev.n_keys,
+                                          dtype=np.uint32)
+
+    def _lookup(self, keys: np.ndarray, k: int = 1) -> np.ndarray:
+        k = min(k, self.h.working)
+        if self.plane == "host":
+            if k == 1:
+                return np.asarray([self.h.lookup(int(x)) for x in keys],
+                                  dtype=np.int32)
+            return replica_sets(self.h, keys, k)
+        if self._sharded:
+            plane = self._planes_sharded.get(k)
+            if plane is None:
+                from repro.serve.plane import ShardedLookupPlane
+                plane = self._planes_sharded[k] = ShardedLookupPlane(
+                    self.store, k=k, plane=self.plane)  # host returned above
+            return np.asarray(plane.lookup(keys))
+        return self.store.lookup(keys, k=k)
+
+    # -- the event loop ------------------------------------------------------
+    def run(self) -> ScenarioResult:
+        for i, ev in enumerate(self.trace.events):
+            handler = getattr(self, f"_do_{ev.op}")
+            handler(i, ev)
+        res = ScenarioResult(
+            trace=self.trace, algo=self.algo, plane=self.plane,
+            metrics=self.metrics, violations=self.violations,
+            resolved=Trace(name=f"{self.trace.name}/resolved",
+                           seed=self.trace.seed,
+                           initial_nodes=self.trace.initial_nodes,
+                           capacity_factor=self.trace.capacity_factor,
+                           num_domains=self.trace.num_domains,
+                           meta=dict(self.trace.meta),
+                           events=self._resolved_events),
+            final_working=self.h.working,
+            final_epoch=self.h.epoch)
+        return res
+
+    # -- membership ----------------------------------------------------------
+    def _do_remove(self, i: int, ev: TraceEvent) -> None:
+        victims = resolve_victims(self.h, ev, self._rng_member,
+                                  self.trace.num_domains)
+        self._pre_membership(set(victims))
+        for j, b in enumerate(victims):
+            self.h.remove(b)
+            self._resolved_events.append(TraceEvent(
+                "remove", bucket=b, sync=ev.sync and j == len(victims) - 1))
+        if not victims:
+            # a collapsed fleet clamps the burst to nothing, but the event's
+            # sync must survive into the resolved trace (it may flush EARLIER
+            # unsynced removals); re-emitting the abstract event resolves to
+            # zero victims again on replay, then syncs identically
+            self._resolved_events.append(TraceEvent(
+                "remove", count=ev.count, select=ev.select, bucket=ev.bucket,
+                domain=ev.domain, sync=ev.sync))
+        self._pending_removed.update(victims)
+        self._finish_membership(i, "remove", victims, ev.sync)
+
+    def _do_add(self, i: int, ev: TraceEvent) -> None:
+        joiners = []
+        for _ in range(ev.count):
+            try:
+                joiners.append(self.h.add())
+            except ValueError:
+                break  # fixed-capacity baseline exhausted: recorded no-op
+        self._resolved_events.append(TraceEvent(
+            "add", count=max(len(joiners), 1), sync=ev.sync))
+        self._pending_added.update(joiners)
+        # a restore of a bucket whose removal is still pending cancels it
+        self._pending_removed -= set(joiners)
+        self._finish_membership(i, "add", joiners, ev.sync)
+
+    def _do_fail(self, i: int, ev: TraceEvent) -> None:
+        b = pick_victim(self.h, ev.select, self._rng_member, ev.bucket)
+        self._pre_membership({b})
+        t0 = time.perf_counter()  # the flip happens inside fail_replica
+        self.router.fail_replica(b)  # removes + syncs the shared store
+        self._resolved_events.append(TraceEvent("fail", bucket=b))
+        self._pending_removed.add(b)
+        self._finish_membership(i, "fail", [b], sync=True, synced=True,
+                                t0=t0)
+
+    def _do_restore(self, i: int, ev: TraceEvent) -> None:
+        joiners = []
+        t0 = time.perf_counter()  # the flips happen inside restore_replica
+        for _ in range(ev.count):
+            try:
+                joiners.append(self.router.restore_replica())  # adds + syncs
+            except ValueError:
+                break
+        self._resolved_events.append(TraceEvent(
+            "restore", count=max(len(joiners), 1)))
+        self._pending_added.update(joiners)
+        self._pending_removed -= set(joiners)
+        self._finish_membership(i, "restore", joiners, sync=True,
+                                synced=True, t0=t0)
+
+    def _do_mark_failed(self, i: int, ev: TraceEvent) -> None:
+        b = pick_victim(self.h, ev.select, self._rng_member, ev.bucket)
+        self.router.mark_failed(b)
+        self._resolved_events.append(TraceEvent("mark_failed", bucket=b,
+                                                sync=False))
+        self.metrics.add_record(EventRecord(i, "mark_failed", buckets=[b]))
+
+    def _pre_membership(self, victims: set[int]) -> None:
+        """Walk the replica-stability candidates on the PRE-event state."""
+        if self.check and self.replica_k > 1 and not self._pending_added:
+            hits = candidate_hits(self.h, self.probe, self.replica_k, victims)
+            if self._pending_hits is None:
+                self._pending_hits = hits
+            else:
+                self._pending_hits |= hits
+
+    def _finish_membership(self, i: int, op: str, buckets: list[int],
+                           sync: bool, synced: bool = False,
+                           t0: float | None = None) -> None:
+        """``t0`` lets router-driven events (whose store sync already ran
+        inside fail_replica/restore_replica) start the flip clock before
+        that call, so sync_us means the same thing for every event kind."""
+        rec = EventRecord(i, op, buckets=list(buckets))
+        if sync:
+            if t0 is None:
+                t0 = time.perf_counter()
+            if not synced:
+                self.store.sync()
+            for arr in self.store.image().arrays.values():
+                if hasattr(arr, "block_until_ready"):
+                    arr.block_until_ready()
+            rec.sync_us = (time.perf_counter() - t0) * 1e6
+            st = self.store.last_sync
+            if st is not None:
+                rec.sync_mode, rec.sync_words = st.mode, st.words
+            rec.violations = len(self._run_checkers(i, rec))
+            self._degradation_point()
+            self._pending_removed.clear()
+            self._pending_added.clear()
+            self._pending_hits = None
+        self.metrics.add_record(rec)
+
+    # -- checkers ------------------------------------------------------------
+    def _run_checkers(self, i: int, rec: EventRecord) -> list[Violation]:
+        if not (self._pending_removed or self._pending_added):
+            return []
+        diff_plane = "jnp" if self.plane == "host" else self.plane
+        if self.store.previous_image() is None:
+            return []
+        d = self.store.migration_diff(self.probe, plane=diff_plane)
+        rec.moved = int(d.num_moved)
+        self.metrics.fingerprint_update(np.asarray(d.new))
+        if not self.check:
+            return []
+        found = check_minimal_disruption(i, d.old, d.new,
+                                         self._pending_removed,
+                                         self._pending_added)
+        found += check_balance(i, d.new, sorted(self.h.working_set()),
+                               tol_sigma=self.balance_tol)
+        if (self.replica_k > 1 and self._pending_hits is not None
+                and not self._pending_added
+                and self.h.working >= self.replica_k):
+            dk = self.store.migration_diff(self.probe, plane=diff_plane,
+                                           k=self.replica_k)
+            found += check_replica_stability(i, dk.moved, self._pending_hits)
+        self.violations.extend(found)
+        return found
+
+    def _degradation_point(self) -> None:
+        """(fraction removed, mean host lookup steps) — the graceful-
+        degradation profile instrument (paper Figs. 23–26).  The fraction
+        is of the initial working fleet (not the fixed-capacity ``a``),
+        clamped at 0 when a scale-up grew past it."""
+        w0 = max(self.trace.initial_nodes, 1)
+        frac = max(0.0, 1.0 - self.h.working / w0)
+        steps = [sum(self.h.lookup_trace(int(x))[1:])
+                 for x in self._step_sample]
+        self.metrics.add_degradation_point(frac, float(np.mean(steps)))
+
+    # -- traffic events --------------------------------------------------------
+    def _do_lookup(self, i: int, ev: TraceEvent) -> None:
+        keys = self._draw_keys(ev)
+        t0 = time.perf_counter()
+        out = self._lookup(keys, k=ev.k)
+        out = np.asarray(out)
+        us = (time.perf_counter() - t0) / max(len(keys), 1) * 1e6
+        self.metrics.fingerprint_update(out)
+        self._resolved_events.append(ev)
+        self.metrics.add_record(EventRecord(i, "lookup", keys=len(keys),
+                                            us_per_key=us))
+
+    def _do_assign(self, i: int, ev: TraceEvent) -> None:
+        from repro.core.bounded import bounded_assign_ref
+        from repro.kernels.engine import bounded_assign, bounded_load_len
+
+        keys = self._draw_keys(ev)
+        cap = int(np.ceil(ev.cap_c * len(keys) / self.h.working))
+        image = self.store.image()
+        load0 = np.zeros(bounded_load_len(image), np.int32)
+        t0 = time.perf_counter()
+        if self.plane == "host":
+            out, load = bounded_assign_ref(self.h, keys, load0, cap)
+        else:
+            out, load = bounded_assign(keys, image, load0, cap,
+                                       plane=self.plane)
+        us = (time.perf_counter() - t0) / max(len(keys), 1) * 1e6
+        self.metrics.fingerprint_update(np.asarray(out))
+        found = check_cap_invariant(i, out, load, cap) if self.check else []
+        self.violations.extend(found)
+        self._resolved_events.append(ev)
+        self.metrics.add_record(EventRecord(i, "assign", keys=len(keys),
+                                            us_per_key=us,
+                                            violations=len(found)))
+
+    def _do_route(self, i: int, ev: TraceEvent) -> None:
+        ids = np.arange(ev.n_keys, dtype=np.uint64)  # fixed session fleet
+        t0 = time.perf_counter()
+        if self.plane == "host":
+            out = np.asarray([self.router.route(int(s)) for s in ids],
+                             dtype=np.int32)
+        else:
+            out = np.asarray(self.router.route_batch(ids))
+            self.router.stats.routed += len(ids)  # the bulk path skips this
+        us = (time.perf_counter() - t0) / max(len(ids), 1) * 1e6
+        self.metrics.fingerprint_update(out)
+        rec = EventRecord(i, "route", keys=len(ids), us_per_key=us)
+        # session affinity: how many sessions changed replica vs the
+        # previous round (0 between uneventful rounds = warm KV caches)
+        if self._route_prev is not None and len(self._route_prev) == len(out):
+            rec.moved = int((out != self._route_prev).sum())
+        self._route_prev = out
+        self._resolved_events.append(ev)
+        self.metrics.add_record(rec)
+
+
+def replay(trace: Trace, *, algo: str = "memento", plane: str = "jnp",
+           **kw) -> ScenarioResult:
+    """One-call replay: build a :class:`ScenarioDriver` and run it."""
+    return ScenarioDriver(trace, algo=algo, plane=plane, **kw).run()

@@ -1,0 +1,103 @@
+"""Scenario metrics — what one replay measured (DESIGN.md §7.4).
+
+:class:`ScenarioMetrics` accumulates, per replayed trace:
+
+* **movement** — probe keys moved per membership event (the engine's
+  fused epoch diff), total and per event,
+* **control plane** — 32-bit words transferred host→device per sync
+  (delta vs snapshot, straight from ``DeviceImageStore``'s
+  :class:`~repro.core.image_store.SyncStats`) and the epoch-flip latency,
+* **data plane** — lookup/route throughput (µs/key) per traffic event,
+* **degradation** — (fraction removed, mean host lookup steps) checkpoints
+  for the graceful-degradation profile (paper Figs. 23–26),
+* **fingerprint** — a running CRC over every data-plane result, the
+  bit-for-bit replay-equivalence instrument (two replays agree iff every
+  placement of every event agreed).
+
+``summary()`` flattens it into the JSON-able dict
+``benchmarks/bench_scenarios.py`` writes to ``BENCH_scenarios.json``.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class EventRecord:
+    """One replayed trace event (the replay log's unit)."""
+
+    index: int
+    op: str
+    buckets: list[int] = field(default_factory=list)  # resolved victims/joiners
+    moved: int = 0            # probe keys moved (membership events)
+    sync_mode: str = ""       # "delta" | "snapshot" | "noop"
+    sync_words: int = 0
+    sync_us: float = 0.0      # epoch-flip latency (sync + device block)
+    keys: int = 0             # traffic batch size (lookup/assign/route)
+    us_per_key: float = 0.0
+    violations: int = 0
+
+
+class ScenarioMetrics:
+    """Accumulator the driver feeds; one instance per replay."""
+
+    def __init__(self) -> None:
+        self.records: list[EventRecord] = []
+        self.degradation: list[tuple[float, float]] = []
+        self._crc = 0
+        # per-op traffic accumulators: lookup, assign, and route timings
+        # are different code paths and must not blend into one number
+        self._keys: dict[str, int] = {}
+        self._secs: dict[str, float] = {}
+
+    # -- feeding -----------------------------------------------------------
+    def add_record(self, rec: EventRecord) -> None:
+        self.records.append(rec)
+        if rec.keys and rec.us_per_key:
+            self._keys[rec.op] = self._keys.get(rec.op, 0) + rec.keys
+            self._secs[rec.op] = (self._secs.get(rec.op, 0.0)
+                                  + rec.us_per_key * rec.keys / 1e6)
+
+    def fingerprint_update(self, arr: np.ndarray) -> None:
+        """Fold a data-plane result into the replay fingerprint."""
+        a = np.ascontiguousarray(np.asarray(arr, dtype=np.int64))
+        self._crc = zlib.crc32(a.tobytes(), self._crc)
+
+    def add_degradation_point(self, frac_removed: float,
+                              mean_steps: float) -> None:
+        self.degradation.append((float(frac_removed), float(mean_steps)))
+
+    # -- reading -----------------------------------------------------------
+    @property
+    def fingerprint(self) -> str:
+        return f"{self._crc & 0xFFFFFFFF:08x}"
+
+    def summary(self) -> dict:
+        recs = self.records
+        member = [r for r in recs if r.op in ("remove", "add", "fail",
+                                              "restore")]
+        syncs = [r for r in member if r.sync_mode]
+        out = {
+            "events": len(recs),
+            "membership_events": sum(len(r.buckets) for r in member),
+            "moved_probe_total": sum(r.moved for r in member),
+            "delta_words_total": sum(r.sync_words for r in syncs
+                                     if r.sync_mode == "delta"),
+            "snapshot_words_total": sum(r.sync_words for r in syncs
+                                        if r.sync_mode == "snapshot"),
+            "snapshot_rebuilds": sum(r.sync_mode == "snapshot" for r in syncs),
+            "delta_applies": sum(r.sync_mode == "delta" for r in syncs),
+            "epoch_flip_us_mean": (float(np.mean([r.sync_us for r in syncs]))
+                                   if syncs else 0.0),
+            "violations": sum(r.violations for r in recs),
+            "fingerprint": self.fingerprint,
+        }
+        for op, keys in self._keys.items():
+            out[f"{op}_keys_total"] = keys
+            out[f"{op}_us_per_key"] = self._secs[op] / keys * 1e6
+        if self.degradation:
+            out["degradation"] = [[f, s] for f, s in self.degradation]
+        return out

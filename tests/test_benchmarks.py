@@ -74,3 +74,20 @@ def test_engine_bench_smoke():
     assert mesh["devices"] >= 1
     for key, e in summary["results"].items():
         assert e["sharded_equal"], key
+
+
+def test_scenarios_bench_smoke():
+    """Scenario benchmark emits its schema and every deterministic gate
+    holds (checkers silent, cross-plane fingerprints equal, knee in-band)
+    on a trimmed scenario × algo grid."""
+    from benchmarks.bench_scenarios import bench_scenarios, check_scenario_claims
+    rows = []
+    summary = bench_scenarios(lambda *r: rows.append(r), w=24, n_keys=384,
+                              probe_keys=384, deg_w=128, deg_keys=256,
+                              scenarios=("oneshot", "flapping"),
+                              algos=("memento", "dx"))
+    assert rows and all(isinstance(r[4], (int, float)) for r in rows)
+    assert check_scenario_claims(summary)
+    for key, s in summary["results"].items():
+        assert s["violations"] == 0, key
+    assert summary["results"]["oneshot_memento"]["planes_agree"]

@@ -185,26 +185,13 @@ def test_engine_op_validation():
         engine.engine_lookup(KEYS[:4], h.device_image(), load=np.zeros(16))
 
 
-# ---------------------------------------------------------------------------
-# Legacy shim compatibility: old entry points == engine configurations
-# ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("algo", ALGOS)
-def test_legacy_shims_are_engine(algo):
-    from repro.kernels.migrate import migration_diff
-    from repro.kernels.replica_lookup import replica_lookup
-
-    h = _state(algo, 64, 20, seed=8)
-    image = h.device_image()
-    np.testing.assert_array_equal(
-        np.asarray(replica_lookup(KEYS[:64], image, 1)),
-        np.asarray(engine.engine_lookup(KEYS[:64], image,
-                                        plane="jnp")).reshape(-1, 1))
-    h2 = _state(algo, 64, 24, seed=9)
-    d = migration_diff(KEYS[:64], image, h2.device_image())
-    e = engine.engine_diff(KEYS[:64], image, h2.device_image())
-    np.testing.assert_array_equal(d.old, e.old)
-    np.testing.assert_array_equal(d.moved, e.moved)
+def test_shim_modules_are_gone():
+    """The PR-4 re-export shims were retired after their one release: the
+    engine is the only import surface for device lookups."""
+    for mod in ("memento_lookup", "anchor_lookup", "dx_lookup",
+                "jump_lookup", "replica_lookup", "migrate"):
+        with pytest.raises(ImportError):
+            __import__(f"repro.kernels.{mod}")
 
 
 def test_cross_algo_diff_jnp():

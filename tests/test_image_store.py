@@ -193,7 +193,7 @@ def test_store_log_overflow_falls_back_to_snapshot():
 @pytest.mark.parametrize("plane", ["jnp", "pallas"])
 @pytest.mark.parametrize("algo", ALGOS)
 def test_migration_diff_matches_host(algo, plane):
-    from repro.kernels.migrate import migration_diff
+    from repro.kernels.engine import engine_diff
 
     h = _mk(algo)
     store = DeviceImageStore(h)
@@ -204,7 +204,7 @@ def test_migration_diff_matches_host(algo, plane):
     store.sync()
     after = np.asarray([h.lookup(int(k)) for k in KEYS], np.int32)
 
-    d = migration_diff(KEYS, store.previous_image(), store.image(), plane=plane)
+    d = engine_diff(KEYS, store.previous_image(), store.image(), plane=plane)
     np.testing.assert_array_equal(d.old, before)
     np.testing.assert_array_equal(d.new, after)
     np.testing.assert_array_equal(d.moved, before != after)
@@ -215,11 +215,11 @@ def test_migration_diff_matches_host(algo, plane):
 
 def test_migration_diff_cross_algorithm_jnp():
     """The jnp plane may diff two different algorithms (algo migration)."""
-    from repro.kernels.migrate import migration_diff
+    from repro.kernels.engine import engine_diff
 
     a = _mk("memento")
     b = _mk("anchor")
-    d = migration_diff(KEYS[:100], a.device_image(), b.device_image())
+    d = engine_diff(KEYS[:100], a.device_image(), b.device_image())
     host_a = np.asarray([a.lookup(int(k)) for k in KEYS[:100]])
     host_b = np.asarray([b.lookup(int(k)) for k in KEYS[:100]])
     np.testing.assert_array_equal(d.old, host_a)
@@ -228,11 +228,11 @@ def test_migration_diff_cross_algorithm_jnp():
 
 
 def test_migration_diff_pallas_rejects_cross_algorithm():
-    from repro.kernels.migrate import migration_diff
+    from repro.kernels.engine import engine_diff
 
     a, b = _mk("memento"), _mk("anchor")
     with pytest.raises(ValueError):
-        migration_diff(KEYS[:10], a.device_image(), b.device_image(),
+        engine_diff(KEYS[:10], a.device_image(), b.device_image(),
                        plane="pallas")
 
 

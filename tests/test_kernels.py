@@ -40,7 +40,7 @@ def test_compact_kernel_matches_oracle(n0, removals):
 
 
 def test_compact_table_is_theta_r():
-    from repro.kernels.memento_lookup import build_compact_table
+    from repro.kernels.engine import build_compact_table
 
     m, tabs = _state(100000, 50, seed=3)
     slot_b, slot_c = build_compact_table(tabs.repl)
@@ -59,7 +59,7 @@ def test_kernel_key_dtypes(dtype):
 
 def test_kernel_block_rows_sweep():
     import jax.numpy as jnp
-    from repro.kernels.memento_lookup import dense_lookup
+    from repro.kernels.engine import dense_lookup
 
     m, tabs = _state(512, 170, seed=5)
     keys = np.random.default_rng(4).integers(0, 2**32, size=2048, dtype=np.uint32)

@@ -50,7 +50,7 @@ def _churn(h, rng, events):
        seed=st.integers(min_value=0, max_value=2**31))
 def test_host_jnp_replica_sets_bit_identical_under_churn(algo, n0, events,
                                                          seed):
-    from repro.kernels.replica_lookup import replica_lookup
+    from repro.kernels.engine import replica_lookup
 
     h = make_hash(algo, n0, capacity=4 * n0, variant="32")
     _churn(h, np.random.default_rng(seed), events)

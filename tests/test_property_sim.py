@@ -1,0 +1,82 @@
+"""Hypothesis property tests for the scenario engine (DESIGN.md §7).
+
+Gated on ``hypothesis`` like the other property suites.  The core
+property (ISSUE 5 acceptance): for RANDOM scenario scripts — arbitrary
+interleavings of removal bursts, additions, and traffic over a random
+fleet — the replayed guarantee checkers never fire: minimal disruption
+and monotonicity hold exactly per event, balance stays within the ε
+bound, and the replay is deterministic (same script → same fingerprint).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.sim import Trace, TraceEvent, replay  # noqa: E402
+
+ALGOS = ("memento", "anchor", "dx", "jump")
+
+
+def _random_script(draw) -> tuple[str, Trace]:
+    algo = draw(st.sampled_from(ALGOS))
+    w = draw(st.integers(min_value=8, max_value=48))
+    seed = draw(st.integers(min_value=0, max_value=2**31))
+    n_events = draw(st.integers(min_value=1, max_value=8))
+    events: list[TraceEvent] = []
+    for _ in range(n_events):
+        op = draw(st.sampled_from(("remove", "add", "lookup", "remove")))
+        if op == "remove":
+            events.append(TraceEvent(
+                "remove",
+                count=draw(st.integers(min_value=1, max_value=6)),
+                select=draw(st.sampled_from(("random", "lifo", "first"))),
+                sync=draw(st.booleans())))
+        elif op == "add":
+            events.append(TraceEvent(
+                "add", count=draw(st.integers(min_value=1, max_value=4))))
+        else:
+            events.append(TraceEvent(
+                "lookup", n_keys=256,
+                dist=draw(st.sampled_from(("uniform", "zipf")))))
+    events.append(TraceEvent("lookup", n_keys=256))  # always end with traffic
+    return algo, Trace("random_script", seed, w, events)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_random_scripts_never_fire_the_checkers(data):
+    """Minimal disruption, monotonicity, and balance hold for every random
+    lifecycle — the paper's guarantees as a property over the whole event
+    space, replayed through the real device stack."""
+    algo, trace = _random_script(data.draw)
+    r = replay(trace, algo=algo, plane="jnp", probe_keys=768)
+    assert r.ok, [str(v) for v in r.violations]
+
+
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_random_scripts_replay_deterministically(data):
+    algo, trace = _random_script(data.draw)
+    a = replay(trace, algo=algo, plane="jnp", probe_keys=256, check=False)
+    b = replay(trace, algo=algo, plane="jnp", probe_keys=256, check=False)
+    assert a.fingerprint == b.fingerprint
+    # and the resolved script replays to the same placements
+    c = replay(Trace.from_json(a.resolved.to_json()), algo=algo,
+               plane="jnp", probe_keys=256, check=False)
+    assert c.fingerprint == a.fingerprint
+
+
+@settings(max_examples=6, deadline=None)
+@given(algo=st.sampled_from(ALGOS),
+       seed=st.integers(min_value=0, max_value=2**31),
+       k=st.integers(min_value=2, max_value=3))
+def test_replica_stability_bound_under_random_churn(algo, seed, k):
+    """k-replica sets only change for keys whose salted walk candidates
+    touched a victim (DESIGN.md §4.1), replayed per removal event."""
+    events = [TraceEvent("remove", count=c) for c in (2, 1, 3)]
+    trace = Trace("replica_churn", seed, 32, events)
+    r = replay(trace, algo=algo, plane="jnp", probe_keys=384, replica_k=k)
+    assert r.ok, [str(v) for v in r.violations]

@@ -87,7 +87,7 @@ def test_lookup_k_equals_working_enumerates_all():
 @pytest.mark.parametrize("algo", ALGOS)
 @pytest.mark.parametrize("n0,removals", [(16, 0), (16, 6), (200, 130)])
 def test_replica_lookup_three_planes_bit_identical(algo, n0, removals):
-    from repro.kernels.replica_lookup import replica_lookup
+    from repro.kernels.engine import replica_lookup
 
     h = _state(algo, n0, removals, seed=n0 + removals)
     image = h.device_image()
@@ -100,11 +100,11 @@ def test_replica_lookup_three_planes_bit_identical(algo, n0, removals):
 
 
 def test_replica_lookup_rejects_unknown_plane():
-    from repro.kernels.replica_lookup import replica_lookup
+    from repro.kernels.engine import engine_lookup
 
     h = _state("memento", 16, 0, seed=0)
     with pytest.raises(ValueError):
-        replica_lookup(KEYS[:4], h.device_image(), 2, plane="cuda")
+        engine_lookup(KEYS[:4], h.device_image(), k=2, plane="cuda")
 
 
 # ---------------------------------------------------------------------------
@@ -135,7 +135,7 @@ def test_bounded_assign_device_matches_host_oracle(algo, plane):
     cap = max(1, math.ceil(1.25 * n_keys / h.working))
     load0 = np.zeros(_load_len(image), np.int32)
 
-    from repro.kernels.replica_lookup import bounded_assign_device
+    from repro.kernels.engine import bounded_assign as bounded_assign_device
     want, want_load = bounded_assign_ref(h, KEYS[:n_keys], load0, cap)
     got, got_load = bounded_assign_device(KEYS[:n_keys], image, load0, cap,
                                           plane=plane)
@@ -223,7 +223,7 @@ def test_bounded_infeasible_cap_raises_instead_of_spinning(plane):
         if plane == "host":
             bounded_assign_ref(h, keys, load0, cap)
         else:
-            from repro.kernels.replica_lookup import bounded_assign_device
+            from repro.kernels.engine import bounded_assign as bounded_assign_device
             bounded_assign_device(keys, image, load0, cap, plane="jnp")
 
 
