@@ -27,6 +27,18 @@ timings — including the ≥1.8× two-device target at 10⁶ keys — are
 advisory on CPU (interpret-mode Pallas and simulated host devices are not
 TPU performance).  ``--out BENCH_engine.json`` writes the artifact CI
 uploads and ``benchmarks/report.py`` renders into RESULTS.md.
+
+Beyond timings the benchmark *accounts* (DESIGN.md §8):
+
+* **bytes/key + roofline utilization per op** — the HLO cost model
+  (``launch/hlo_analysis.analyze_jit``) over the engine's jnp program,
+  divided against the detected backend's roofline
+  (``launch/roofline.HARDWARE``; override with ``REPRO_ROOFLINE_HW``),
+* **compact images** — the 10⁶-bucket packed-vs-dense table-byte claim
+  (``pack_image``; gated ≥ 2× for Memento, with bit-identical lookups),
+* **tuning** (``--tune``) — refreshes ``benchmarks/results/
+  TUNE_engine.json``, the autotuner cache the engine consults at
+  dispatch time.
 """
 from __future__ import annotations
 
@@ -76,6 +88,23 @@ def _time(fn, repeats=3):
     return (time.perf_counter() - t0) / repeats
 
 
+def _lookup_accounting(images, op, keys, n_keys, measured_s):
+    """bytes/key + roofline terms for one engine op, from the HLO cost
+    model of its jnp program (the canonical algorithmic traffic — the
+    Pallas plane runs the same algorithm with hand-placed tiles)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.engine import _engine_jnp, _jnp_operands
+    from repro.launch.hlo_analysis import analyze_jit
+    from repro.launch.roofline import lookup_roofline
+
+    arrays, scalars = _jnp_operands(images)
+    a = analyze_jit(_engine_jnp, (jnp.asarray(keys),), arrays, scalars,
+                    None, None, static={"op": op})
+    return lookup_roofline(a.traffic_bytes, a.flops, n_keys,
+                           measured_s=measured_s)
+
+
 def bench_engine(emit, w=1024, a_over_w=4, key_counts=(100_000, 1_000_000),
                  k_values=(1, 2, 3), algos=ALGOS, scenarios=SCENARIOS,
                  frac=0.5, seed=0):
@@ -86,12 +115,17 @@ def bench_engine(emit, w=1024, a_over_w=4, key_counts=(100_000, 1_000_000),
     from repro.kernels.engine import engine_diff, engine_lookup
     from repro.serve.plane import ShardedLookupPlane
 
+    from dataclasses import asdict
+
+    from repro.launch.roofline import hardware_spec
+
     rng = np.random.default_rng(seed)
     devices = len(jax.devices())
     summary: dict = {
         "bench": "engine", "w": w, "key_counts": list(key_counts),
         "k_values": list(k_values),
         "mesh": {"devices": devices, "axes": ["data"]},
+        "hardware": asdict(hardware_spec()),
         "results": {},
     }
 
@@ -128,6 +162,17 @@ def bench_engine(emit, w=1024, a_over_w=4, key_counts=(100_000, 1_000_000),
                 entry[f"mesh_speedup_{n_keys}"] = t_single / t_mesh
                 entry["sharded_equal"] = entry.get("sharded_equal", True) and equal
 
+                if n_keys == min(key_counts):
+                    from repro.kernels.engine import EngineOp
+                    acct = _lookup_accounting(
+                        [image], EngineOp(algo=algo), keys, n_keys, t_single)
+                    entry["lookup_accounting"] = acct
+                    emit("engine_accounting", algo, scenario,
+                         "lookup_bytes_per_key", acct["bytes_per_key"])
+                    emit("engine_accounting", algo, scenario,
+                         "lookup_roofline_utilization",
+                         acct["roofline_utilization"])
+
             # -- fused vs multi-launch ops (smallest key count) -----------
             keys = rng.integers(0, 2**32, size=min(key_counts),
                                 dtype=np.uint32)
@@ -155,6 +200,15 @@ def bench_engine(emit, w=1024, a_over_w=4, key_counts=(100_000, 1_000_000),
                  t_two / nk * 1e6)
             entry["diff_fused_us_per_key"] = t_fused / nk * 1e6
             entry["diff_two_launch_us_per_key"] = t_two / nk * 1e6
+
+            from repro.kernels.engine import EngineOp
+            acct_d = _lookup_accounting(
+                [old, new], EngineOp(algo=algo, diff=True), keys, nk, t_fused)
+            entry["diff_accounting"] = acct_d
+            emit("engine_accounting", algo, scenario, "diff_bytes_per_key",
+                 acct_d["bytes_per_key"])
+            emit("engine_accounting", algo, scenario,
+                 "diff_roofline_utilization", acct_d["roofline_utilization"])
 
             if max(k_values) > 1:
                 kk = max(k for k in k_values if k > 1)
@@ -198,6 +252,84 @@ def bench_engine(emit, w=1024, a_over_w=4, key_counts=(100_000, 1_000_000),
     return summary
 
 
+def bench_compact(emit, n=1_000_000, removals=1024, n_keys=8192, seed=0):
+    """The packed-image claim (DESIGN.md §8.2): at 10⁶ buckets, the packed
+    Memento table is ≥ 2× smaller than the dense int32 image with
+    bit-identical lookups on host, jnp, and Pallas.  Dx is reported against
+    the 4·n int32 image it would need WITHOUT its bitmap encoding (its
+    dense layout is already packed — the precedent the Memento packing
+    follows)."""
+    from repro.core import make_hash
+    from repro.core.packing import image_table_bytes, pack_image
+    from repro.kernels import ref
+    from repro.kernels.engine import engine_lookup
+
+    rng = np.random.default_rng(seed)
+    out: dict = {}
+    for algo in ("memento", "dx"):
+        h = make_hash(algo, n, variant="32")
+        # distinct random removals: each target is still working when its
+        # turn comes, so no O(n·removals) working-set rescans
+        for b in rng.choice(n, size=removals, replace=False):
+            h.remove(int(b))
+        dense = h.device_image()
+        packed = pack_image(dense)
+        keys = rng.integers(0, 2**32, size=n_keys, dtype=np.uint32)
+        host = ref.lookup_host(keys, h)
+        planes_equal = True
+        for img in (dense, packed):
+            for plane in ("jnp", "pallas"):
+                got = np.asarray(engine_lookup(keys, img, plane=plane))
+                planes_equal &= bool(np.array_equal(got, host))
+        db, pb = image_table_bytes(dense), image_table_bytes(packed)
+        int32_equiv = 4 * n  # one int32 word per bucket
+        ratio = (db if algo == "memento" else int32_equiv) / max(pb, 1)
+        t_dense = _time(lambda: np.asarray(
+            engine_lookup(keys, dense, plane="jnp")))
+        t_packed = _time(lambda: np.asarray(
+            engine_lookup(keys, packed, plane="jnp")))
+        out[algo] = {
+            "n": n, "removals": removals,
+            "dense_bytes": int(db), "packed_bytes": int(pb),
+            "int32_equivalent_bytes": int(int32_equiv),
+            "reduction_ratio": round(ratio, 2),
+            "planes_equal": planes_equal,
+            "dense_us_per_key": t_dense / n_keys * 1e6,
+            "packed_us_per_key": t_packed / n_keys * 1e6,
+        }
+        emit("engine_compact", algo, f"{n}", "reduction_ratio", ratio)
+        emit("engine_compact", algo, f"{n}", "packed_bytes", float(pb))
+    return out
+
+
+def tune_engine(w=1024, n_keys=16_384, seed=0, out_path=None):
+    """Refresh the autotuner cache: one cell per (algo × layout) at the
+    benchmark's serving shape, saved deterministically (sorted keys) so
+    re-tuning on identical hardware is a no-op diff."""
+    from repro.core import make_hash
+    from repro.core.packing import pack_image
+    from repro.kernels import autotune
+
+    rng = np.random.default_rng(seed)
+    cache = autotune.TuneCache.load(out_path or autotune.DEFAULT_CACHE_PATH)
+    tuned = {}
+    for algo in ALGOS:
+        h = _scenario_state(algo, "oneshot", w, 4, 0.5, rng)
+        images = [h.device_image()]
+        images.append(pack_image(h.device_image()))
+        for image in images:
+            key, cfg = autotune.autotune_lookup(image, n_keys, seed=seed,
+                                                cache=cache)
+            tuned[key] = {"block_rows": cfg.block_rows, "plane": cfg.plane,
+                          "us_per_key": cfg.us_per_key}
+            print(f"# tuned {key}: block_rows={cfg.block_rows} "
+                  f"plane={cfg.plane} ({cfg.us_per_key} us/key)", flush=True)
+    path = cache.save(out_path)
+    autotune.set_active_cache(cache)  # dispatch sees the fresh winners
+    print(f"# wrote {path} ({len(cache)} entries)")
+    return tuned
+
+
 def check_engine_claims(summary: dict) -> bool:
     """Deterministic acceptance gates (timings stay advisory):
 
@@ -218,6 +350,11 @@ def check_engine_claims(summary: dict) -> bool:
         claim(f"{key}: fused diff == two-launch diff", e.get("fused_equal"))
         if "bounded_under_cap" in e:
             claim(f"{key}: bounded replicas below cap", e["bounded_under_cap"])
+    for algo, c in summary.get("compact", {}).items():
+        claim(f"compact[{algo}]: ≥2× table-byte reduction "
+              f"({c['reduction_ratio']}×)", c["reduction_ratio"] >= 2)
+        claim(f"compact[{algo}]: packed lookups bit-identical on all planes",
+              c["planes_equal"])
     devices = summary["mesh"]["devices"]
     for key, e in summary["results"].items():
         for n_keys in summary["key_counts"]:
@@ -225,6 +362,11 @@ def check_engine_claims(summary: dict) -> bool:
             if sp is not None:
                 print(f"# advisory: {key} mesh({devices}) speedup "
                       f"@{n_keys}: {sp:.2f}×")
+        acct = e.get("lookup_accounting")
+        if acct:
+            print(f"# advisory: {key} lookup {acct['bytes_per_key']:.0f} "
+                  f"bytes/key, {acct['roofline_utilization']:.1%} of the "
+                  f"{acct['hardware']} roofline")
     return ok
 
 
@@ -233,6 +375,10 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true", help="CI smoke sizes")
     ap.add_argument("--full", action="store_true", help="10⁷-key batches")
     ap.add_argument("--out", default=None, help="write JSON summary here")
+    ap.add_argument("--tune", action="store_true",
+                    help="refresh the autotuner cache (TUNE_engine.json)")
+    ap.add_argument("--no-compact", action="store_true",
+                    help="skip the 10⁶-bucket packed-image claim")
     args = ap.parse_args(argv)
 
     if args.quick:
@@ -253,7 +399,11 @@ def main(argv=None) -> int:
 
     print("table,algo,x,metric,value")
     t0 = time.time()
+    if args.tune:
+        tune_engine()
     summary = bench_engine(emit, **kw)
+    if not args.no_compact:
+        summary["compact"] = bench_compact(emit)
     ok = check_engine_claims(summary)
     summary["claims_pass"] = bool(ok)
     summary["elapsed_s"] = round(time.time() - t0, 2)

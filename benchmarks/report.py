@@ -155,6 +155,41 @@ def _engine_fusion_table(eng: dict) -> str:
     return "\n".join(out)
 
 
+def _engine_accounting_table(eng: dict) -> str:
+    head = ["state", "lookup bytes/key", "lookup roofline util",
+            "diff bytes/key", "diff roofline util"]
+    out = ["| " + " | ".join(head) + " |", "|---" * len(head) + "|"]
+    for key, e in eng["results"].items():
+        la, da = e.get("lookup_accounting"), e.get("diff_accounting")
+        if not (la or da):
+            continue
+        cells = []
+        for a in (la, da):
+            if a:
+                cells += [f"{a['bytes_per_key']:.0f}",
+                          f"{a['roofline_utilization']:.1%}"]
+            else:
+                cells += ["—", "—"]
+        out.append(f"| {key} | " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+def _engine_compact_table(eng: dict) -> str:
+    comp = eng.get("compact", {})
+    head = ["algo", "n", "dense bytes", "packed bytes", "reduction",
+            "planes equal", "dense µs/key", "packed µs/key"]
+    out = ["| " + " | ".join(head) + " |", "|---" * len(head) + "|"]
+    for algo, c in comp.items():
+        dense = (c["dense_bytes"] if algo == "memento"
+                 else c["int32_equivalent_bytes"])
+        out.append(
+            f"| {algo} | {c['n']:,} | {dense:,} | {c['packed_bytes']:,} | "
+            f"{c['reduction_ratio']:.1f}× | "
+            f"{'yes' if c['planes_equal'] else 'NO'} | "
+            f"{c['dense_us_per_key']:.3f} | {c['packed_us_per_key']:.3f} |")
+    return "\n".join(out)
+
+
 def _scenario_table(scen: dict, key: str, fmt="{:.0f}") -> str:
     """rows = scenarios, columns = algorithms, cells = results[key]."""
     res = scen["results"]
@@ -264,6 +299,22 @@ def render_results() -> str:
     s.append("### Fused ops vs their multi-launch decompositions "
              "(bit-identical, one program each)\n")
     s.append(_engine_fusion_table(eng) + "\n")
+    hw = eng.get("hardware", {})
+    if any("lookup_accounting" in e for e in eng["results"].values()):
+        s.append("### Bytes/key + roofline utilization per op "
+                 "(DESIGN.md §8, HLO cost model)\n")
+        s.append(f"Rooflines computed against the `{hw.get('name', '?')}` "
+                 "hardware spec (`launch/roofline.HARDWARE`; utilization = "
+                 "memory-bound floor time / measured time).\n")
+        s.append(_engine_accounting_table(eng) + "\n")
+    if eng.get("compact"):
+        s.append("### Compact (packed) device images at 10⁶ buckets "
+                 "(DESIGN.md §8.2)\n")
+        s.append("Memento compares against its dense int32 image; Dx "
+                 "against the int32-per-bucket image its bitmap already "
+                 "avoids.  Lookups are bit-identical on host, jnp, and "
+                 "Pallas planes (gated).\n")
+        s.append(_engine_compact_table(eng) + "\n")
     claims = "PASS" if eng.get("claims_pass") else "MISMATCH"
     s.append(f"Engine claims at capture time: **{claims}** "
              f"(w={eng.get('w')}, devices={eng['mesh']['devices']}).\n")

@@ -1,0 +1,153 @@
+"""CI gate: the engine's HLO byte budget must not regress.
+
+For a fixed set of deterministic engine configurations (algo × op ×
+table layout, seeded churned states), this script lowers + compiles the
+engine's jnp program and extracts bytes/key and flops/key from the HLO
+cost model (``launch/hlo_analysis.analyze_jit`` — the same accounting
+``bench_engine`` reports).  The numbers are compared against the
+checked-in baseline ``benchmarks/results/HLO_baseline.json``:
+
+* bytes/key **growth** beyond ``--tolerance`` (default 10 %) fails the
+  run — an engine change silently inflating per-key memory traffic is
+  exactly the regression this catches;
+* reductions and new configurations are reported and pass — run with
+  ``--update`` to rewrite the baseline (sorted keys, stable formatting)
+  and commit the diff.
+
+Counts come from compiled HLO on the CI backend (CPU), so they are
+deterministic per jax version; the pinned CI leg gates hard, the
+``latest`` leg stays advisory.
+
+Usage:
+    PYTHONPATH=src python scripts/check_hlo_budget.py [--update] [--tolerance 0.1]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+BASELINE = Path(__file__).resolve().parents[1] / "benchmarks" / "results" / "HLO_baseline.json"
+
+W = 1024          # initial buckets
+CAPACITY = 4 * W  # image capacity (a/w = 4)
+REMOVALS = W // 4
+N_KEYS = 8192
+SEED = 32
+
+
+def _state(algo):
+    from repro.core import make_hash
+
+    h = make_hash(algo, W, capacity=CAPACITY, variant="32")
+    rng = np.random.default_rng(SEED)
+    removals = min(REMOVALS, W - 1) if algo == "jump" else REMOVALS
+    for _ in range(removals):
+        if algo == "jump":
+            h.remove(h.size - 1)
+        else:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+    return h
+
+
+def _account(images, op, keys):
+    import jax.numpy as jnp
+
+    from repro.kernels.engine import _engine_jnp, _jnp_operands
+    from repro.launch.hlo_analysis import analyze_jit
+
+    arrays, scalars = _jnp_operands(images)
+    a = analyze_jit(_engine_jnp, (jnp.asarray(keys),), arrays, scalars,
+                    None, None, static={"op": op})
+    return {"bytes_per_key": round(a.traffic_bytes / N_KEYS, 2),
+            "flops_per_key": round(a.flops / N_KEYS, 2)}
+
+
+def measure() -> dict:
+    """One entry per gated engine configuration: ``algo.op.table``."""
+    from repro.core.packing import pack_image
+    from repro.kernels.engine import EngineOp, _op_table
+
+    keys = np.random.default_rng(SEED).integers(0, 2**32, size=N_KEYS,
+                                                dtype=np.uint32)
+    out: dict = {}
+    for algo in ("memento", "anchor", "dx", "jump"):
+        h = _state(algo)
+        dense = h.device_image()
+        layouts = [("dense", dense), ("packed", pack_image(dense))]
+        for tag, img in layouts:
+            table = _op_table(img)
+            out[f"{algo}.lookup.k1.{tag}"] = _account(
+                [img], EngineOp(algo=algo, table=table), keys)
+            out[f"{algo}.lookup.k2.{tag}"] = _account(
+                [img], EngineOp(algo=algo, k=2, table=table), keys)
+            out[f"{algo}.diff.k1.{tag}"] = _account(
+                [img, img], EngineOp(algo=algo, diff=True, table=table), keys)
+    return out
+
+
+def compare(current: dict, baseline: dict, tolerance: float) -> list[str]:
+    failures = []
+    for key in sorted(current):
+        cur = current[key]["bytes_per_key"]
+        base = baseline.get(key, {}).get("bytes_per_key")
+        if base is None:
+            print(f"  NEW   {key}: {cur} bytes/key (no baseline — passes)")
+            continue
+        ratio = cur / base if base else float("inf")
+        status = "OK"
+        if ratio > 1 + tolerance:
+            status = "FAIL"
+            failures.append(f"{key}: {base} → {cur} bytes/key "
+                            f"(+{(ratio - 1) * 100:.1f}% > "
+                            f"{tolerance * 100:.0f}% budget)")
+        elif ratio < 1 - tolerance:
+            status = "BETTER"
+        print(f"  {status:6s}{key}: {base} → {cur} bytes/key "
+              f"({(ratio - 1) * 100:+.1f}%)")
+    for key in sorted(set(baseline) - set(current)):
+        print(f"  GONE  {key}: configuration no longer measured "
+              f"(update the baseline)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from this run")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed bytes/key growth fraction (default 0.10)")
+    ap.add_argument("--baseline", default=str(BASELINE))
+    args = ap.parse_args(argv)
+
+    print(f"# HLO byte budget: engine configs at w={W}, {N_KEYS} keys, "
+          f"seed {SEED}")
+    current = measure()
+    path = Path(args.baseline)
+    if args.update or not path.exists():
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"w": W, "capacity": CAPACITY, "removals": REMOVALS,
+             "n_keys": N_KEYS, "seed": SEED,
+             "entries": {k: current[k] for k in sorted(current)}},
+            indent=2, sort_keys=True) + "\n")
+        print(f"# wrote baseline {path} ({len(current)} entries)")
+        return 0
+    baseline = json.loads(path.read_text()).get("entries", {})
+    failures = compare(current, baseline, args.tolerance)
+    if failures:
+        print(f"# HLO byte budget EXCEEDED ({len(failures)}):")
+        for f in failures:
+            print(f"#   {f}")
+        return 1
+    print(f"# HLO byte budget OK ({len(current)} configs within "
+          f"{args.tolerance * 100:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

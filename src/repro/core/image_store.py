@@ -63,12 +63,15 @@ class DeviceImageStore:
     """Double-buffered device image of a ConsistentHash, updated by deltas."""
 
     def __init__(self, ch: ConsistentHash, *, plane: str = "jnp",
-                 headroom: int = 2, interpret: bool | None = None):
+                 headroom: int = 2, interpret: bool | None = None,
+                 compact: bool = False):
         if plane not in ("jnp", "pallas"):
             raise ValueError(f"unknown plane {plane!r}")
         self._ch = ch
         self.plane = plane
         self.headroom = max(1, headroom)
+        self.compact = compact
+        self._mirror: dict | None = None  # host copy of the packed arrays
         if interpret is None:
             import jax
             interpret = jax.default_backend() != "tpu"
@@ -89,10 +92,19 @@ class DeviceImageStore:
         else:  # fixed overall capacity a: padding beyond a is never read
             cap = None
         img = self._ch.device_image(capacity=cap)
+        if self.compact:
+            from .packing import pack_image
+
+            # slot headroom 2 → ≤ 0.25 load factor at rebuild, so epoch
+            # deltas insert in place; the numpy mirror is the host copy
+            # packed_delta_updates edits to derive device scatters.
+            img = pack_image(img, slot_headroom=2)
+            self._mirror = {k: np.array(v) for k, v in img.arrays.items()}
         self._front = DeviceImage(
             algo=img.algo, n=img.n,
             arrays={k: jnp.asarray(v) for k, v in img.arrays.items()},
-            scalars=dict(img.scalars), epoch=img.epoch)
+            scalars=dict(img.scalars), epoch=img.epoch,
+            packed=img.packed)
 
     def _image_size_hint(self) -> int:
         return self._ch.size
@@ -123,14 +135,17 @@ class DeviceImageStore:
         ``previous_image()`` and the flip is atomic.
         """
         delta = self._drain_delta()
+        applied = None
         if delta is not None and delta.events == 0:
             stats = SyncStats("noop", 0, 0, self.epoch)
-        elif delta is not None and self._fits(delta):
+        elif delta is not None and self._fits(delta) and (
+                applied := (self._apply_packed(delta) if self.compact
+                            else (self._apply(delta), delta.num_words()))
+        ) is not None:
             old = self._front
-            self._front = self._apply(delta)
+            self._front, words = applied
             self._prev = old
-            stats = SyncStats("delta", delta.events, delta.num_words(),
-                              self.epoch)
+            stats = SyncStats("delta", delta.events, words, self.epoch)
             self.totals.delta_applies += 1
         else:
             old = self._front
@@ -154,7 +169,11 @@ class DeviceImageStore:
 
     def _fits(self, delta: ImageDelta) -> bool:
         caps = self.capacity
-        needed = dict(required_lengths(delta.algo, delta.n))
+        if self.compact and delta.algo == "memento":
+            # the bitmap is the bucket-indexed array: 32 buckets per word.
+            needed = {"state": -(-delta.n // 32)}
+        else:
+            needed = dict(required_lengths(delta.algo, delta.n))
         if "load" in caps:  # bounded-load overlay: load words are bucket-indexed
             needed["load"] = delta.n
         return all(caps.get(name, 0) >= need for name, need in needed.items())
@@ -172,6 +191,31 @@ class DeviceImageStore:
                 arrays[name] = arr  # untouched: shared with the old epoch
         return DeviceImage(algo=delta.algo, n=delta.n, arrays=arrays,
                            scalars=dict(delta.scalars), epoch=delta.epoch)
+
+    def _apply_packed(self, delta: ImageDelta) -> tuple[DeviceImage, int] | None:
+        """Translate a dense-layout delta into packed-layout scatters and
+        apply them, or return ``None`` (→ snapshot rebuild) when the packed
+        buffers cannot absorb it (bitmap outgrown, slots saturated, or a
+        value overflows a narrowed dtype)."""
+        from .packing import packed_delta_updates
+        from repro.kernels.delta_apply import scatter_update
+
+        updates = packed_delta_updates(self._mirror, delta)
+        if updates is None:
+            return None
+        arrays = dict(self._front.arrays)
+        words = 0
+        for name, (idx, vals) in updates.items():
+            if not len(idx):
+                continue
+            arrays[name] = scatter_update(arrays[name], idx, vals,
+                                          plane=self.plane,
+                                          interpret=self._interpret)
+            words += 2 * len(idx)
+        img = DeviceImage(algo=delta.algo, n=delta.n, arrays=arrays,
+                          scalars=dict(delta.scalars), epoch=delta.epoch,
+                          packed=True)
+        return img, words
 
     # -- data plane ------------------------------------------------------------
     def lookup(self, keys, *, plane: str | None = None, k: int = 1,

@@ -157,7 +157,12 @@ class DeviceImage:
     * ``arrays``  — named flat int32/uint32 arrays, lengths 128-padded,
     * ``scalars`` — extra dynamic int scalars (e.g. Dx probe bound),
     * ``epoch``   — membership epoch this image snapshots (one per
-      remove/add event since construction of the host state).
+      remove/add event since construction of the host state),
+    * ``packed``  — True when ``arrays`` hold the compact layout of
+      :mod:`repro.core.packing` (bit-packed bucket state + narrowed
+      words, DESIGN.md §8.2) instead of the full-width dense layout.
+      The engine dispatches on this flag, so packed and dense images
+      share every public lookup entry point.
     """
 
     algo: str
@@ -165,6 +170,7 @@ class DeviceImage:
     arrays: dict[str, np.ndarray] = field(default_factory=dict)
     scalars: dict[str, int] = field(default_factory=dict)
     epoch: int = 0
+    packed: bool = False
 
 
 @dataclass

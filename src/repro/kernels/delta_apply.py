@@ -115,6 +115,11 @@ def scatter_update(table, idx, vals, *, plane: str = "jnp",
         raise ValueError(f"unknown plane {plane!r}")
     import numpy as np
 
+    if table.dtype.itemsize != 4:
+        # dtype-narrowed packed tables (int16/int8) cannot bit-cast through
+        # the int32 apply kernel (widths differ); their scatter payloads are
+        # O(1) words, so the functional path serves them on every backend.
+        return scatter_update(table, idx, vals, plane="jnp")
     pidx, pval, k = _pad_updates(np.asarray(idx), np.asarray(vals), sentinel=-1)
     meta = jnp.asarray(np.concatenate([[k], pidx, pval]).astype(np.int32))
     tab_i32 = lax.bitcast_convert_type(table, jnp.int32)

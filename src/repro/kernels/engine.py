@@ -49,8 +49,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.bounded import accept_in_index_order, walk_probe_bound
-from repro.core.hashing import GOLDEN32, np_fmix32
+from repro.core.hashing import GOLDEN32
 from repro.core.jax_lookup import lookup_dispatch
+from repro.core.packing import PACKED_LAYOUT, build_slots
 from repro.core.protocol import (IMAGE_LAYOUT, REPLICA_SALT_CAP,
                                  image_scalar_vec)
 from .primitives import fmix32, gather1d, hash2, jump32, table_shape2d
@@ -62,6 +63,18 @@ DEFAULT_BLOCK_ROWS = 8  # (8, 128) keys per program = 1024 lookups
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _resolve_block_rows(op, n_keys: int, table_n: int,
+                        block_rows: int | None) -> int:
+    """Tile-height dispatch rule: an explicit ``block_rows=`` always wins;
+    otherwise consult the autotuner's persisted cache (a pure dict lookup
+    on the bucketed grid key — cache hits can never retrace), falling back
+    to :data:`DEFAULT_BLOCK_ROWS`."""
+    if block_rows is not None:
+        return block_rows
+    from . import autotune  # lazy: autotune ↔ engine would cycle at import
+    return autotune.resolve_block_rows(op, n_keys, table_n)
 
 
 # ---------------------------------------------------------------------------
@@ -81,8 +94,10 @@ class EngineOp:
       above the prefetched load cap (fused k-replica × bounded-load),
     * ``diff``    — lookup mode: run under two epoch images in the same
       launch and emit the moved mask (k>1 diffs whole replica sets),
-    * ``table``   — memento only: "dense" (Θ(n) int32) or "compact"
-      (Θ(r) open addressing; lookup mode).
+    * ``table``   — "dense" (full-width layout), "packed" (the compact
+      :mod:`repro.core.packing` layout of a ``packed=True`` image; any
+      algorithm, any mode), or — memento only — "compact" (the legacy
+      per-call Θ(r) open addressing; lookup mode).
     """
 
     algo: str
@@ -101,7 +116,7 @@ class EngineOp:
             raise ValueError("k must be ≥ 1")
         if self.mode == "walk" and (self.k != 1 or self.diff or self.bounded):
             raise ValueError("walk mode is k=1, no diff, cap-implicit")
-        if self.table not in ("dense", "compact"):
+        if self.table not in ("dense", "compact", "packed"):
             raise ValueError(f"unknown table kind {self.table!r}")
         if self.table == "compact" and self.algo != "memento":
             raise ValueError("compact tables are Memento-only")
@@ -113,6 +128,8 @@ class EngineOp:
     def table_names(self) -> tuple[str, ...]:
         if self.table == "compact":
             return ("slot_b", "slot_c")
+        if self.table == "packed":
+            return PACKED_LAYOUT[self.algo][1]
         return IMAGE_LAYOUT[self.algo][1]
 
     @property
@@ -209,6 +226,44 @@ def compact_reader(slot_b, slot_c):
     return read
 
 
+def packed_reader(state, slot_b, slot_c):
+    """``read(idx)`` over the packed Memento image (DESIGN.md §8.2): the
+    uint32 ``state`` bitmap short-circuits working buckets (bit = 1 → −1,
+    no probe at all — the overwhelmingly common case), removed buckets
+    probe the open-addressing slots with the ``compact_reader`` sequence
+    but stop only on EMPTY (−1): TOMBSTONE (−2) slots left by epoch-delta
+    restores keep the chain alive.  Slot words may be dtype-narrowed;
+    values widen to int32 at the gather."""
+    nslots = slot_b.shape[0]  # power of two
+    mask = _U(nslots - 1)
+
+    def read(idx):
+        w = gather1d(state, idx >> 5).astype(_U)
+        working = ((w >> (idx & 31).astype(_U)) & _U(1)) == _U(1)
+        h0 = (fmix32(idx.astype(_U) * _U(GOLDEN32) + _U(5)) & mask).astype(jnp.int32)
+
+        def cond(state_):
+            _, done, _ = state_
+            return jnp.any(~done)
+
+        def body(state_):
+            pos, done, val = state_
+            sb = gather1d(slot_b, pos).astype(jnp.int32)
+            hit = sb == idx
+            empty = sb == -1  # tombstones (−2) keep probing
+            val = jnp.where(~done & hit,
+                            gather1d(slot_c, pos).astype(jnp.int32), val)
+            done = done | hit | empty
+            pos = jnp.where(done, pos, (pos + 1) % nslots)
+            return pos, done, val
+
+        val0 = jnp.full(idx.shape, -1, jnp.int32)
+        _, _, val = jax.lax.while_loop(cond, body, (h0, working, val0))
+        return val
+
+    return read
+
+
 def anchor_body(keys, A, K, a):
     """AnchorHash body: A (removal stamps) / K (wrap successors) in VMEM."""
     b = (fmix32(keys) % a.astype(_U)).astype(jnp.int32)
@@ -264,9 +319,16 @@ def algo_body(op: EngineOp, keys, tables, scalars):
         if op.table == "compact":
             return memento_body(keys, compact_reader(tables[0], tables[1]),
                                 scalars[0])
+        if op.table == "packed":
+            return memento_body(
+                keys, packed_reader(tables[0], tables[1], tables[2]),
+                scalars[0])
         return dense_body(keys, tables[0], scalars[0])
     if op.algo == "anchor":
-        return anchor_body(keys, tables[0], tables[1], scalars[0])
+        # packed tables may be dtype-narrowed; widen at the boundary (a
+        # no-op trace-wise for the dense int32 layout)
+        return anchor_body(keys, tables[0].astype(jnp.int32),
+                           tables[1].astype(jnp.int32), scalars[0])
     if op.algo == "dx":
         return dx_body(keys, tables[0], scalars[0], scalars[1], scalars[2])
     if op.algo == "jump":
@@ -464,23 +526,27 @@ def _engine_pallas(scalars, blocks2d, tables2d, *, op: EngineOp,
 
 @functools.partial(jax.jit, static_argnames=("op",))
 def _engine_jnp(blocks, arrays, scalars, load, cap, *, op: EngineOp):
-    def dispatch(tabs_arrays, scals):
-        return lambda kk: lookup_dispatch(op.algo, kk, tabs_arrays, scals)
+    def dispatch(tabs, scals):
+        if op.table == "packed":
+            # the packed layout has no jax_lookup oracle — its one body
+            # lives in algo_body, shared with the Pallas plane
+            return lambda kk: algo_body(op, kk, list(tabs), list(scals))
+        arrs = dict(zip(names, tabs))
+        return lambda kk: lookup_dispatch(op.algo, kk, arrs, scals)
 
     nt = op.num_tables
     tables = list(arrays)
     names = op.table_names  # rebuild named dicts for lookup_dispatch per epoch
     if op.mode == "walk":
         chain, probe, pending = blocks
-        arrs = dict(zip(names, tables[:nt]))
         b, chain, probe = chain_walk_body(
-            chain, probe, pending, load, cap, dispatch(arrs, scalars[:op.num_scalars]))
+            chain, probe, pending, load, cap,
+            dispatch(tables[:nt], scalars[:op.num_scalars]))
         return b, chain, probe
     keys = blocks[0]
 
     def epoch_outs(tabs, scals):
-        arrs = dict(zip(names, tabs))
-        return replica_body(keys, op.k, dispatch(arrs, scals),
+        return replica_body(keys, op.k, dispatch(tabs, scals),
                             load=load if op.bounded else None, cap=cap)
 
     outs = epoch_outs(tables[:nt], scalars[:op.num_scalars])
@@ -498,11 +564,24 @@ def _engine_jnp(blocks, arrays, scalars, load, cap, *, op: EngineOp):
 # Operand marshalling
 # ---------------------------------------------------------------------------
 
+def _op_table(image, table: str = "dense") -> str:
+    """The table kind an image serves: a ``packed=True`` image always runs
+    the packed configuration (callers never have to spell it)."""
+    if getattr(image, "packed", False):
+        if table not in ("dense", "packed"):
+            raise ValueError(f"packed image cannot serve table={table!r}")
+        return "packed"
+    return table
+
+
 def _image_tables(op: EngineOp, image):
     if op.table == "compact":
         slot_b, slot_c = build_compact_table(
             jnp.asarray(image.arrays["repl"], jnp.int32))
         return [slot_b, slot_c]
+    if (op.table == "packed") != bool(getattr(image, "packed", False)):
+        raise ValueError(f"table={op.table!r} op cannot read a "
+                         f"{'packed' if image.packed else 'dense'} image")
     return [jnp.asarray(image.arrays[name]) for name in op.table_names]
 
 
@@ -522,7 +601,8 @@ def _scalar_vec(op: EngineOp, images, cap):
 def _jnp_operands(images):
     arrays, scalars = [], []
     for img in images:
-        names = IMAGE_LAYOUT[img.algo][1]
+        layout = PACKED_LAYOUT if getattr(img, "packed", False) else IMAGE_LAYOUT
+        names = layout[img.algo][1]
         arrays += [jnp.asarray(img.arrays[n]) for n in names]
         scalars += [jnp.asarray(s, jnp.int32) for s in image_scalar_vec(img)]
     return tuple(arrays), tuple(scalars)
@@ -546,10 +626,11 @@ def engine_lookup(keys, image, *, k: int = 1, load=None, cap: int | None = None,
     bounded = load is not None
     if bounded and cap is None:
         raise ValueError("bounded lookup needs a cap")
+    table = _op_table(image, table)
     op = EngineOp(algo=image.algo, k=k, bounded=bounded, table=table)
     keys = jnp.asarray(keys, dtype=_U)
     if plane == "jnp":
-        if table != "dense":
+        if table == "compact":
             raise ValueError("jnp plane serves the dense layout")
         arrays, scalars = _jnp_operands([image])
         outs = _engine_jnp((keys,), arrays, scalars,
@@ -568,7 +649,8 @@ def engine_lookup(keys, image, *, k: int = 1, load=None, cap: int | None = None,
         keys2d, nk = _pad_rows(keys)
         outs = _engine_pallas(_scalar_vec(op, [image], cap), (keys2d,),
                               tuple(_tables2d(tables)), op=op,
-                              block_rows=block_rows or DEFAULT_BLOCK_ROWS,
+                              block_rows=_resolve_block_rows(
+                                  op, nk, int(image.n), block_rows),
                               interpret=interpret)
         flat = [o.reshape(-1)[:nk] for o in outs]
         out = flat[0] if k == 1 else jnp.stack(flat).T
@@ -635,8 +717,10 @@ def engine_diff(keys, old_image, new_image, *, k: int = 1,
     if plane == "jnp":
         if old_image.algo != new_image.algo:
             # cross-algorithm migration: two dispatches, still one program
-            op_old = EngineOp(algo=old_image.algo, k=k)
-            op_new = EngineOp(algo=new_image.algo, k=k)
+            op_old = EngineOp(algo=old_image.algo, k=k,
+                              table=_op_table(old_image))
+            op_new = EngineOp(algo=new_image.algo, k=k,
+                              table=_op_table(new_image))
             ao, so = _jnp_operands([old_image])
             an, sn = _jnp_operands([new_image])
             old = _engine_jnp((keys,), ao, so, None, None, op=op_old)
@@ -646,7 +730,11 @@ def engine_diff(keys, old_image, new_image, *, k: int = 1,
             moved = (old_np != new_np) if k == 1 else \
                 (old_np != new_np).any(axis=1)
             return EngineDiff(old_np, new_np, np.asarray(moved))
-        op = EngineOp(algo=old_image.algo, k=k, diff=True)
+        if bool(getattr(old_image, "packed", False)) != \
+                bool(getattr(new_image, "packed", False)):
+            raise ValueError("epoch diff needs both images in one layout")
+        op = EngineOp(algo=old_image.algo, k=k, diff=True,
+                      table=_op_table(old_image))
         arrays, scalars = _jnp_operands([old_image, new_image])
         old, new, moved = _engine_jnp((keys,), arrays, scalars, None, None,
                                       op=op)
@@ -657,14 +745,19 @@ def engine_diff(keys, old_image, new_image, *, k: int = 1,
     if old_image.algo != new_image.algo:
         raise ValueError("pallas epoch diff requires one algorithm "
                          f"({old_image.algo!r} != {new_image.algo!r})")
-    op = EngineOp(algo=old_image.algo, k=k, diff=True)
+    if bool(getattr(old_image, "packed", False)) != \
+            bool(getattr(new_image, "packed", False)):
+        raise ValueError("epoch diff needs both images in one layout")
+    op = EngineOp(algo=old_image.algo, k=k, diff=True,
+                  table=_op_table(old_image))
     if interpret is None:
         interpret = _default_interpret()
     tables = _image_tables(op, old_image) + _image_tables(op, new_image)
     keys2d, nk = _pad_rows(keys)
     outs = _engine_pallas(_scalar_vec(op, [old_image, new_image], None),
                           (keys2d,), tuple(_tables2d(tables)), op=op,
-                          block_rows=block_rows or DEFAULT_BLOCK_ROWS,
+                          block_rows=_resolve_block_rows(
+                              op, nk, int(new_image.n), block_rows),
                           interpret=interpret)
     flat = [np.asarray(o.reshape(-1)[:nk]) for o in outs]
     old = flat[0] if k == 1 else np.stack(flat[:k]).T
@@ -684,7 +777,7 @@ def engine_chain_walk(chain, probe, pending, image, load, cap, *,
     :func:`bounded_assign`): advance every pending lane to the first bucket
     of its rehash chain with ``load[b] < cap``.  Returns numpy
     ``(b, chain, probe)``; non-pending lanes come back unchanged."""
-    op = EngineOp(algo=image.algo, mode="walk")
+    op = EngineOp(algo=image.algo, mode="walk", table=_op_table(image))
     chain = jnp.asarray(chain, dtype=_U)
     probe = jnp.asarray(probe, dtype=jnp.int32)
     pending = jnp.asarray(pending, dtype=jnp.bool_)
@@ -707,7 +800,8 @@ def engine_chain_walk(chain, probe, pending, image, load, cap, *,
     b, ch, pr = _engine_pallas(
         _scalar_vec(op, [image], cap), (chain2d, probe2d, pending2d),
         tuple(_tables2d(tables)), op=op,
-        block_rows=block_rows or DEFAULT_BLOCK_ROWS, interpret=interpret)
+        block_rows=_resolve_block_rows(op, nk, int(image.n), block_rows),
+        interpret=interpret)
     take = lambda x: np.asarray(x.reshape(-1)[:nk])  # noqa: E731
     return take(b), take(ch).astype(np.uint32), take(pr)
 
@@ -755,6 +849,8 @@ def bounded_load_len(image) -> int:
     if image.algo == "anchor":
         return int(image.arrays["A"].shape[0])
     if image.algo == "memento":
+        if getattr(image, "packed", False):  # bitmap covers 32 ids per word
+            return 32 * int(image.arrays["state"].shape[0])
         return int(image.arrays["repl"].shape[0])
     return round_up(image.n)
 
@@ -832,36 +928,9 @@ def build_compact_table(repl) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Host-side: dense repl image → open-addressing (slot_b, slot_c) arrays.
 
     Slots = next power of two ≥ max(2r, 128) → load factor ≤ 0.5, so the
-    expected probe chain is ~1.5 and the VMEM working set is Θ(r).
-
-    Insertion is vectorized: each round, every still-unplaced key whose
-    current slot is free claims it (first pending key per slot wins); the
-    rest advance one slot.  Slots only ever fill, so every slot a key
-    skipped is occupied in the final table — the probe loop in
-    :func:`compact_reader` (scan from h0 until hit or empty) finds every
-    key.
+    expected probe chain is ~1.5 and the VMEM working set is Θ(r).  The
+    insertion algorithm (and the packed-image variant with headroom and
+    dtype narrowing) lives in :func:`repro.core.packing.build_slots`.
     """
-    repl = np.asarray(repl)
-    removed = np.nonzero(repl >= 0)[0].astype(np.int64)
-    r = int(removed.size)
-    nslots = 128
-    while nslots < 2 * max(r, 1):
-        nslots *= 2
-    slot_b = np.full((nslots,), -1, np.int32)
-    slot_c = np.full((nslots,), -1, np.int32)
-    mask = nslots - 1
-    with np.errstate(over="ignore"):
-        pos = np_fmix32(removed.astype(np.uint32) * np.uint32(GOLDEN32)
-                        + np.uint32(5)).astype(np.int64) & mask
-    pending = np.arange(r)
-    while pending.size:
-        p = pos[pending]
-        free = slot_b[p] < 0
-        cand = pending[free]
-        _, first = np.unique(p[free], return_index=True)
-        win = cand[first]
-        slot_b[pos[win]] = removed[win].astype(np.int32)
-        slot_c[pos[win]] = repl[removed[win]].astype(np.int32)
-        pending = np.setdiff1d(pending, win, assume_unique=True)
-        pos[pending] = (pos[pending] + 1) & mask
+    slot_b, slot_c = build_slots(np.asarray(repl))
     return jnp.asarray(slot_b), jnp.asarray(slot_c)

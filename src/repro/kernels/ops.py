@@ -15,12 +15,17 @@ Execution planes:
   * ``plane='jnp'``    — the engine's pure-jnp program (no Pallas; any
     backend; also the per-shard body of the mesh-sharded
     :class:`~repro.serve.plane.ShardedLookupPlane`).
+  * ``plane='auto'``   — the autotuner's winner for this (op, batch,
+    table-size) cell (``kernels/autotune.py``), falling back to Pallas on
+    TPU and jnp elsewhere when no tuning entry exists.
 
-Memento additionally picks its table layout via ``table``:
+Table layouts (``table``):
 
   * ``'dense'``   — Θ(n) int32 VMEM image (default; n ≤ ~3M fits VMEM),
-  * ``'compact'`` — Θ(r) open-addressing VMEM image (beyond-paper, for
-    huge b-arrays with few removals).
+  * ``'compact'`` — Θ(r) open-addressing VMEM image (Memento only;
+    beyond-paper, for huge b-arrays with few removals),
+  * ``'packed'``  — auto-selected for packed DeviceImages (bitmap + slots
+    for Memento, narrowed dtypes for Anchor; ``repro.core.packing``).
 """
 from __future__ import annotations
 
@@ -43,11 +48,18 @@ def device_lookup(keys, image, *, plane: str = "pallas", table: str = "dense",
     returned bucket is additionally below the load cap — the fused
     bounded-replica configuration, still one launch)."""
     keys = jnp.asarray(keys, dtype=jnp.uint32)
-    if plane == "jnp" and k == 1 and load is None:
+    packed = getattr(image, "packed", False)
+    if plane == "auto":
+        from . import autotune
+        op = _engine.EngineOp(algo=image.algo, k=k,
+                              bounded=load is not None,
+                              table="packed" if packed else table)
+        plane = autotune.resolve_plane(op, int(keys.shape[0]), int(image.n))
+    if plane == "jnp" and k == 1 and load is None and not packed:
         return _jnp.lookup_image(keys, image)
     if plane not in ("jnp", "pallas"):
         raise ValueError(f"unknown plane {plane!r}")
-    if table != "dense" and image.algo != "memento":
+    if table not in ("dense", "packed") and image.algo != "memento":
         raise ValueError(f"unknown table kind {table!r} for {image.algo!r}")
     return _engine.engine_lookup(keys, image, k=k, load=load, cap=cap,
                                  plane=plane, table=table,

@@ -340,6 +340,22 @@ def analyze(hlo_text: str) -> "HloAnalysis":
     return HloAnalysis(hlo_text)
 
 
+def analyze_jit(fn, *args, static: dict | None = None, **kwargs) -> "HloAnalysis":
+    """Lower + compile a jitted callable on example arguments and analyze
+    the optimized (post-fusion) HLO — the cost model behind the engine's
+    bytes/key accounting and the CI byte-budget gate.
+
+    ``fn`` must be a ``jax.jit`` product (anything with ``.lower``);
+    ``static`` merges extra keyword arguments (e.g. the engine's static
+    ``op=``) into the lowering call.
+    """
+    kw = dict(kwargs)
+    if static:
+        kw.update(static)
+    compiled = fn.lower(*args, **kw).compile()
+    return HloAnalysis(compiled.as_text())
+
+
 def parse_collectives(hlo_text: str) -> list[Collective]:
     return HloAnalysis(hlo_text).collectives
 

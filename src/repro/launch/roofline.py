@@ -1,18 +1,92 @@
-"""Roofline terms from a dry-run record (TPU v5e targets).
+"""Roofline terms from a dry-run record, against a per-backend hardware table.
 
-    t_compute    = HLO_FLOPs_per_dev / 197e12        (bf16 MXU peak)
-    t_memory     = HLO_bytes_per_dev / 819e9         (HBM bandwidth)
-    t_collective = collective_bytes_per_dev / 50e9   (per-link ICI)
+    t_compute    = HLO_FLOPs_per_dev / peak_flops      (bf16 MXU / FMA peak)
+    t_memory     = HLO_bytes_per_dev / mem_bw          (HBM / DRAM bandwidth)
+    t_collective = collective_bytes_per_dev / link_bw  (per-link ICI / NVLink)
 
 `MODEL_FLOPS` = 6·N_active·D for training (N = active params, D = tokens) or
 2·N_active·D for serving; the ratio against total HLO FLOPs exposes
 remat/padding/dispatch waste (brief §Roofline).
+
+The constants live in :data:`HARDWARE`, keyed by a spec name; the process
+default comes from :func:`detect_hardware` (the jax backend + device kind)
+and can be forced with ``REPRO_ROOFLINE_HW=<spec name>`` — numbers computed
+against the wrong machine's roofline are silently wrong, so every consumer
+reports the spec name it used alongside its utilizations.
 """
 from __future__ import annotations
 
-PEAK_FLOPS = 197e12     # bf16 per chip
-HBM_BW = 819e9          # bytes/s per chip
-ICI_BW = 50e9           # bytes/s per link
+import os
+from dataclasses import dataclass
+
+HARDWARE_ENV = "REPRO_ROOFLINE_HW"
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Peak rates of one accelerator (per chip / per link)."""
+
+    name: str
+    peak_flops: float    # FLOP/s per chip (bf16 where the chip has an MXU)
+    mem_bw: float        # bytes/s per chip (HBM / DRAM)
+    link_bw: float       # bytes/s per inter-chip link (ICI / NVLink / PCIe)
+
+
+#: spec name → peaks.  TPU numbers are per-chip bf16 + HBM + per-link ICI;
+#: GPU numbers are per-GPU bf16 tensor-core + HBM + per-direction NVLink;
+#: ``cpu-host`` is a deliberately round server-class placeholder (FMA peak,
+#: DDR bandwidth, PCIe link) so off-TPU runs label utilizations against an
+#: honest denominator instead of a v5e they are not running on.
+HARDWARE: dict[str, HardwareSpec] = {
+    "tpu-v5e":  HardwareSpec("tpu-v5e",  197e12, 819e9, 50e9),
+    "tpu-v4":   HardwareSpec("tpu-v4",   275e12, 1228e9, 50e9),
+    "tpu-v5p":  HardwareSpec("tpu-v5p",  459e12, 2765e9, 100e9),
+    "gpu-a100": HardwareSpec("gpu-a100", 312e12, 2039e9, 300e9),
+    "gpu-h100": HardwareSpec("gpu-h100", 989e12, 3350e9, 450e9),
+    "cpu-host": HardwareSpec("cpu-host", 1e12,   100e9,  32e9),
+}
+
+# legacy module constants (v5e): kept for the dry-run launch path, which
+# models v5e pods regardless of where the dry run itself executes.
+PEAK_FLOPS = HARDWARE["tpu-v5e"].peak_flops
+HBM_BW = HARDWARE["tpu-v5e"].mem_bw
+ICI_BW = HARDWARE["tpu-v5e"].link_bw
+
+
+def detect_hardware() -> str:
+    """Map the live jax backend to a :data:`HARDWARE` spec name.
+
+    ``REPRO_ROOFLINE_HW`` overrides detection (it must name a known spec);
+    unknown device kinds fall back to the family default (v5e for TPU,
+    a100 for GPU) — the spec *name* travels with every record, so a
+    fallback is visible, never silent.
+    """
+    forced = os.environ.get(HARDWARE_ENV)
+    if forced:
+        if forced not in HARDWARE:
+            raise ValueError(f"{HARDWARE_ENV}={forced!r} is not one of "
+                             f"{sorted(HARDWARE)}")
+        return forced
+    import jax
+
+    backend = jax.default_backend()
+    if backend == "cpu":
+        return "cpu-host"
+    kind = jax.devices()[0].device_kind.lower()
+    if backend == "tpu":
+        for name in ("tpu-v5p", "tpu-v5e", "tpu-v4"):
+            if name.split("-")[1] in kind:
+                return name
+        return "tpu-v5e"
+    if backend == "gpu":
+        return "gpu-h100" if "h100" in kind else "gpu-a100"
+    return "cpu-host"
+
+
+def hardware_spec(name: str | None = None) -> HardwareSpec:
+    """The spec to compute rooflines against: ``name``, the env override,
+    or the detected backend's."""
+    return HARDWARE[name or detect_hardware()]
 
 
 def model_flops(cfg, shp) -> float:
@@ -26,6 +100,38 @@ def model_flops(cfg, shp) -> float:
         return 2.0 * n_active * tokens
     tokens = shp.global_batch * 1  # decode: one new token per sequence
     return 2.0 * n_active * tokens
+
+
+def lookup_roofline(traffic_bytes: float, flops: float, n_keys: int,
+                    measured_s: float | None = None,
+                    hw: HardwareSpec | str | None = None) -> dict:
+    """Roofline accounting for one engine lookup program.
+
+    ``traffic_bytes``/``flops`` come from the HLO cost analysis
+    (:func:`repro.launch.hlo_analysis.analyze_jit`); ``measured_s`` is an
+    optional wall-clock for the same batch, turning the bound into a
+    utilization.  Returns bytes/key, the memory- and compute-bound floor
+    times, the bottleneck, and — when measured — the fraction of the
+    bound actually achieved (1.0 = running at the roofline).
+    """
+    if not isinstance(hw, HardwareSpec):
+        hw = hardware_spec(hw)
+    t_memory = traffic_bytes / hw.mem_bw
+    t_compute = flops / hw.peak_flops
+    t_bound = max(t_memory, t_compute)
+    out = {
+        "hardware": hw.name,
+        "bytes_per_key": traffic_bytes / n_keys if n_keys else 0.0,
+        "flops_per_key": flops / n_keys if n_keys else 0.0,
+        "t_memory_s": t_memory,
+        "t_compute_s": t_compute,
+        "bottleneck": "memory" if t_memory >= t_compute else "compute",
+    }
+    if measured_s is not None:
+        out["measured_s"] = measured_s
+        out["roofline_utilization"] = (t_bound / measured_s
+                                       if measured_s > 0 else 0.0)
+    return out
 
 
 def roofline_record(cfg, shp, record: dict) -> dict:

@@ -33,7 +33,8 @@ import functools
 
 import numpy as np
 
-from repro.core.protocol import IMAGE_LAYOUT, image_scalar_vec
+from repro.core.packing import image_table_names
+from repro.core.protocol import image_scalar_vec
 
 
 def _is_store(source) -> bool:
@@ -57,7 +58,7 @@ class ShardedLookupPlane:
                  block_rows: int | None = None):
         import jax
 
-        if plane not in ("jnp", "pallas"):
+        if plane not in ("jnp", "pallas", "auto"):
             raise ValueError(f"unknown plane {plane!r}")
         if k < 1:
             raise ValueError("k must be ≥ 1")
@@ -119,7 +120,7 @@ class ShardedLookupPlane:
         if self._dev is not None and img is self._image:
             return
         rep = NamedSharding(self.mesh, P())
-        names = IMAGE_LAYOUT[img.algo][1]
+        names = image_table_names(img)
         arrays = {}
         for n in names:
             src = img.arrays[n]
@@ -139,7 +140,8 @@ class ShardedLookupPlane:
         key count) — epoch flips at stable shapes reuse the compiled
         program (the store pads capacities exactly so this holds)."""
         arrays, _ = self._dev
-        key = (self._image.algo,
+        packed = getattr(self._image, "packed", False)
+        key = (self._image.algo, packed,
                tuple(sorted((n, a.shape) for n, a in arrays.items())),
                padded)
         fn = self._fns.get(key)
@@ -150,13 +152,24 @@ class ShardedLookupPlane:
         from jax.sharding import PartitionSpec as P
 
         from repro.core.jax_lookup import lookup_dispatch
-        from repro.kernels.engine import (DEFAULT_BLOCK_ROWS, EngineOp,
-                                          _engine_pallas, _pad_rows,
-                                          _tables2d, replica_body)
+        from repro.kernels import autotune
+        from repro.kernels.engine import (EngineOp, _engine_pallas, _pad_rows,
+                                          _tables2d, algo_body, replica_body)
         from repro.sharding.rules import shard_map
 
-        op = EngineOp(algo=self._image.algo, k=self.k)
+        op = EngineOp(algo=self._image.algo, k=self.k,
+                      table="packed" if packed else "dense")
         names = op.table_names
+        # tuned parameters resolve once, at program-build time, against the
+        # per-shard batch this program will always see (padded is part of
+        # the fn cache key, so the resolution is as static as the jit key).
+        shard_keys = padded // self.num_shards
+        table_n = int(self._image.n)
+        plane = self.plane
+        if plane == "auto":
+            plane = autotune.resolve_plane(op, shard_keys, table_n)
+        block_rows = (self._block_rows if self._block_rows is not None
+                      else autotune.resolve_block_rows(op, shard_keys, table_n))
         shard_dim = self.axes if len(self.axes) > 1 else self.axes[0]
         key_spec = P(shard_dim)
 
@@ -164,10 +177,15 @@ class ShardedLookupPlane:
             # keys travel as an int32 buffer so the k=1 result (int32, same
             # shape) can alias the donated input; bitcast restores uint32.
             keys = jax.lax.bitcast_convert_type(keys, jnp.uint32)
-            if self.plane == "jnp":
-                outs = replica_body(
-                    keys, op.k,
-                    lambda kk: lookup_dispatch(op.algo, kk, arrays, scalars))
+            if plane == "jnp":
+                if packed:
+                    body = lambda kk: algo_body(op, kk,
+                                                [arrays[n] for n in names],
+                                                list(scalars))
+                else:
+                    body = lambda kk: lookup_dispatch(op.algo, kk, arrays,
+                                                      scalars)
+                outs = replica_body(keys, op.k, body)
             else:  # one Pallas launch per shard, tables in VMEM
                 keys2d, nk = _pad_rows(keys)
                 tabs = tuple(_tables2d([arrays[n] for n in names]))
@@ -175,7 +193,7 @@ class ShardedLookupPlane:
                         else jnp.zeros((0,), jnp.int32))
                 raw = _engine_pallas(
                     scal, (keys2d,), tabs, op=op,
-                    block_rows=self._block_rows or DEFAULT_BLOCK_ROWS,
+                    block_rows=block_rows,
                     interpret=self._interpret)
                 outs = [o.reshape(-1)[:nk] for o in raw]
             return outs[0] if op.k == 1 else jnp.stack(outs)  # [K'] | [k, K']

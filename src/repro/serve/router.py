@@ -54,7 +54,9 @@ class SessionRouter:
     def __init__(self, num_replicas: int, *, algo: str | ConsistentHash = "memento",
                  capacity: int | None = None, use_device_plane: bool = False,
                  max_sessions: int = 1_000_000, replicas_k: int = 1,
-                 store: DeviceImageStore | None = None):
+                 store: DeviceImageStore | None = None,
+                 compact_images: bool = False,
+                 block_rows: int | None = None):
         if isinstance(algo, str):
             # variant="32": host lookups bit-identical to the device plane.
             self.ch = make_hash(algo, num_replicas, capacity=capacity, variant="32")
@@ -64,6 +66,10 @@ class SessionRouter:
             raise ValueError("replicas_k must be ≥ 1")
         self.replicas_k = replicas_k
         self.use_device_plane = use_device_plane
+        # device-plane tuning knobs: compact (packed) device images and an
+        # explicit Pallas tile height (None → the autotuner's winner)
+        self.compact_images = compact_images
+        self.block_rows = block_rows
         self.stats = RouterStats()
         self.max_sessions = max_sessions
         # session id → last replica (metrics), LRU-bounded: million-session
@@ -116,7 +122,8 @@ class SessionRouter:
     def image_store(self) -> DeviceImageStore:
         if self._store is None:
             plane = "pallas" if self.use_device_plane else "jnp"
-            self._store = DeviceImageStore(self.ch, plane=plane)
+            self._store = DeviceImageStore(self.ch, plane=plane,
+                                           compact=self.compact_images)
         return self._store
 
     def device_image(self):
@@ -143,7 +150,8 @@ class SessionRouter:
         if self.replicas_k > 1 and self._failed:
             # k-replica sets in one device pass; same rule as route()
             return self._failover_pick(self.replica_set_batch(session_ids))
-        return self.image_store().lookup(keys, plane=plane)
+        return self.image_store().lookup(keys, plane=plane,
+                                         block_rows=self.block_rows)
 
     def replica_set_batch(self, session_ids: np.ndarray) -> np.ndarray:
         """k-replica sets for a session batch in one engine launch:
@@ -152,7 +160,8 @@ class SessionRouter:
         keys = np_key_to_u32(np.asarray(session_ids))
         plane = "pallas" if self.use_device_plane else "jnp"
         k = min(self.replicas_k, self.ch.working)
-        out = self.image_store().lookup(keys, plane=plane, k=k)
+        out = self.image_store().lookup(keys, plane=plane, k=k,
+                                        block_rows=self.block_rows)
         return out.reshape(-1, 1) if k == 1 else out
 
     # -- streaming path (mesh-sharded plane) ----------------------------------
@@ -164,7 +173,7 @@ class SessionRouter:
         from repro.serve.plane import ShardedLookupPlane
         if self._plane is None or mesh is not None or axes is not None:
             plane = ShardedLookupPlane(self.image_store(), mesh=mesh,
-                                       axes=axes)
+                                       axes=axes, block_rows=self.block_rows)
             if mesh is None and axes is None:
                 self._plane = plane
             return plane
@@ -205,7 +214,8 @@ class SessionRouter:
         from repro.serve.plane import ShardedLookupPlane
         k = min(self.replicas_k, self.ch.working)
         if self._plane_k is None or self._plane_k.k != k or mesh is not None:
-            plane = ShardedLookupPlane(self.image_store(), mesh=mesh, k=k)
+            plane = ShardedLookupPlane(self.image_store(), mesh=mesh, k=k,
+                                       block_rows=self.block_rows)
             if mesh is None:
                 self._plane_k = plane
             return plane

@@ -1,0 +1,162 @@
+"""Autotuner (DESIGN.md §8.1): deterministic JSON cache, dispatch-time
+resolution that never retraces, explicit-override precedence, and the
+tuned-equals-default bit-identity the tuner itself enforces."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import make_hash
+from repro.kernels import autotune, engine
+from repro.kernels.autotune import (TuneCache, TunedConfig, grid_key,
+                                    size_bucket)
+
+KEYS = np.random.default_rng(5).integers(0, 2**32, size=700, dtype=np.uint32)
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    """Point the process cache at a tmpdir and drop any loaded state."""
+    path = tmp_path / "TUNE_engine.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    autotune.set_active_cache(None)
+    yield path
+    autotune.set_active_cache(None)
+
+
+def _image(n=96, removals=20, seed=3):
+    h = make_hash("memento", n, capacity=4 * n, variant="32")
+    rng = np.random.default_rng(seed)
+    for _ in range(removals):
+        ws = sorted(h.working_set())
+        h.remove(ws[int(rng.integers(len(ws)))])
+    return h.device_image()
+
+
+# ---------------------------------------------------------------------------
+# Cache determinism + JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_size_bucket_powers_of_two():
+    assert size_bucket(1) == 1
+    assert size_bucket(1000) == 1024
+    assert size_bucket(1024) == 1024
+    assert size_bucket(1025) == 2048
+
+
+def test_grid_key_shares_size_band():
+    op = engine.EngineOp(algo="memento")
+    a = grid_key(op, 1000, 500, backend="cpu")
+    b = grid_key(op, 1024, 512, backend="cpu")
+    c = grid_key(op, 2048, 512, backend="cpu")
+    assert a == b != c
+    assert a == "cpu/memento.lookup.k1.dense/keys1024/n512"
+
+
+def test_cache_json_roundtrip_and_determinism(tmp_cache):
+    cache = TuneCache()
+    cache.put("cpu/memento.lookup.k1.dense/keys1024/n512",
+              TunedConfig(block_rows=16, plane="jnp", us_per_key=0.12))
+    cache.put("cpu/dx.lookup.k2.dense/keys2048/n512",
+              TunedConfig(block_rows=4, plane="pallas", us_per_key=1.5))
+    p = cache.save(tmp_cache)
+    first = p.read_text()
+    loaded = TuneCache.load(p)
+    assert loaded.entries == cache.entries
+    # same entries inserted in the other order ⇒ byte-identical file
+    other = TuneCache()
+    for k in reversed(list(cache.entries)):
+        other.put(k, cache.entries[k])
+    assert other.save(tmp_cache).read_text() == first
+    payload = json.loads(first)
+    assert payload["version"] == autotune.CACHE_VERSION
+    assert list(payload["entries"]) == sorted(payload["entries"])
+
+
+def test_env_empty_disables_cache(monkeypatch):
+    monkeypatch.setenv(autotune.CACHE_ENV, "")
+    autotune.set_active_cache(None)
+    assert autotune.cache_path() is None
+    assert len(autotune.active_cache()) == 0
+    autotune.set_active_cache(None)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-time resolution
+# ---------------------------------------------------------------------------
+
+def test_resolution_fallback_and_tuned(tmp_cache):
+    op = engine.EngineOp(algo="memento")
+    assert autotune.resolve_block_rows(op, 700, 96) == engine.DEFAULT_BLOCK_ROWS
+    cache = autotune.active_cache()
+    cache.put(grid_key(op, 700, 96), TunedConfig(block_rows=32, plane="jnp"))
+    assert autotune.resolve_block_rows(op, 700, 96) == 32
+    assert autotune.resolve_plane(op, 700, 96) == "jnp"
+    # off the tuned cell: defaults again (jnp on the CPU backend)
+    assert autotune.resolve_block_rows(op, 70_000, 96) == engine.DEFAULT_BLOCK_ROWS
+    assert autotune.resolve_plane(op, 70_000, 96) in ("jnp", "pallas")
+
+
+def test_explicit_block_rows_overrides_tuned(tmp_cache):
+    img = _image()
+    op = engine.EngineOp(algo="memento")
+    cache = autotune.active_cache()
+    cache.put(grid_key(op, len(KEYS), int(img.n)), TunedConfig(block_rows=32))
+    assert engine._resolve_block_rows(op, len(KEYS), int(img.n), 16) == 16
+    assert engine._resolve_block_rows(op, len(KEYS), int(img.n), None) == 32
+
+
+def test_cache_hit_never_retraces(tmp_cache, monkeypatch):
+    img = _image()
+    op = engine.EngineOp(algo="memento")
+    cache = autotune.active_cache()
+    cache.put(grid_key(op, len(KEYS), int(img.n)), TunedConfig(block_rows=4))
+
+    calls = {"n": 0}
+    real = engine._engine_kernel_factory
+
+    def counting(op_):
+        calls["n"] += 1
+        return real(op_)
+
+    monkeypatch.setattr(engine, "_engine_kernel_factory", counting)
+    out1 = np.asarray(engine.engine_lookup(KEYS, img, plane="pallas"))
+    traced = calls["n"]
+    assert traced >= 1  # first call traces with the tuned tile
+    out2 = np.asarray(engine.engine_lookup(KEYS, img, plane="pallas"))
+    assert calls["n"] == traced  # cache hit: same static key, no retrace
+    np.testing.assert_array_equal(out1, out2)
+
+
+# ---------------------------------------------------------------------------
+# The tuner itself
+# ---------------------------------------------------------------------------
+
+def test_autotune_lookup_records_bit_identical_winner(tmp_cache):
+    img = _image()
+    key, cfg = autotune.autotune_lookup(img, len(KEYS), seed=5, repeats=1,
+                                        candidates=(4, 8))
+    assert cfg.block_rows in (4, 8) or cfg.plane == "jnp"
+    assert cfg.us_per_key > 0
+    assert autotune.active_cache().get(key) == cfg
+    # the tuned configuration serves bit-identically to the default
+    default = np.asarray(engine.engine_lookup(
+        KEYS, img, plane="pallas", block_rows=engine.DEFAULT_BLOCK_ROWS))
+    tuned = np.asarray(engine.engine_lookup(KEYS, img, plane=cfg.plane,
+                                            block_rows=cfg.block_rows))
+    np.testing.assert_array_equal(tuned, default)
+
+
+def test_autotune_lookup_packed_image(tmp_cache):
+    from repro.core.packing import pack_image
+
+    img = pack_image(_image())
+    key, cfg = autotune.autotune_lookup(img, len(KEYS), seed=5, repeats=1,
+                                        candidates=(8,))
+    assert ".packed/" in key
+    tuned = np.asarray(engine.engine_lookup(KEYS, img, plane=cfg.plane,
+                                            block_rows=cfg.block_rows))
+    dense = np.asarray(engine.engine_lookup(KEYS, _image(), plane="jnp"))
+    np.testing.assert_array_equal(tuned, dense)

@@ -1,0 +1,239 @@
+"""Packed (compact) device images (DESIGN.md §8.2): bit-identical lookups
+across host / jnp / Pallas for all four algorithms, dtype narrowing and
+exact unpack round-trips, epoch-delta application on packed tables through
+the compact DeviceImageStore, and the snapshot fallbacks when the packed
+buffers cannot absorb a delta."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import DeviceImageStore, make_hash
+from repro.core.packing import (EMPTY, TOMBSTONE, build_slots,
+                                image_table_bytes, narrow_dtype, pack_image,
+                                packed_delta_updates, unpack_image)
+from repro.kernels import engine, ref
+
+ALGOS = ["memento", "anchor", "dx", "jump"]
+PLANES = ["jnp", "pallas"]
+
+KEYS = np.random.default_rng(99).integers(0, 2**32, size=700, dtype=np.uint32)
+
+
+def _state(algo, n0, removals, seed):
+    h = make_hash(algo, n0, capacity=4 * n0, variant="32")
+    rng = np.random.default_rng(seed)
+    removals = min(removals, n0 - 1) if algo == "jump" else removals
+    for _ in range(removals):
+        if algo == "jump":
+            h.remove(h.size - 1)
+        else:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+    return h
+
+
+def _churn(h, events, seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(events):
+        if h.name != "jump" and h.working > 2 and rng.random() < 0.7:
+            ws = sorted(h.working_set())
+            h.remove(ws[int(rng.integers(len(ws)))])
+        elif h.name == "jump" and h.size > 2 and rng.random() < 0.7:
+            h.remove(h.size - 1)
+        else:
+            h.add()
+
+
+# ---------------------------------------------------------------------------
+# Packing primitives
+# ---------------------------------------------------------------------------
+
+def test_narrow_dtype_thresholds():
+    assert narrow_dtype(100) == np.int8
+    assert narrow_dtype(127) == np.int8
+    assert narrow_dtype(128) == np.int16
+    assert narrow_dtype(32767) == np.int16
+    assert narrow_dtype(32768) == np.int32
+
+
+def test_build_slots_roundtrip_and_sentinels():
+    repl = np.full(512, -1, np.int32)
+    removed = {3: 17, 100: 450, 511: 0}
+    for b, c in removed.items():
+        repl[b] = c
+    slot_b, slot_c = build_slots(repl)
+    assert slot_b.shape[0] >= 128 and (slot_b.shape[0] & (slot_b.shape[0] - 1)) == 0
+    stored = {int(b): int(c) for b, c in zip(slot_b, slot_c) if b != EMPTY}
+    assert stored == removed
+
+
+def test_pack_unpack_roundtrip_all_algos():
+    for algo in ALGOS:
+        h = _state(algo, 96, 30, seed=1)
+        img = h.device_image()
+        back = unpack_image(pack_image(img))
+        assert not back.packed
+        for name, arr in img.arrays.items():
+            a, b = np.asarray(arr), np.asarray(back.arrays[name])
+            m = min(len(a), len(b))
+            np.testing.assert_array_equal(a[:m], b[:m], err_msg=f"{algo}.{name}")
+        assert back.n == img.n and back.epoch == img.epoch
+
+
+def test_anchor_packing_narrows_dtype():
+    h = _state("anchor", 96, 20, seed=2)
+    p = pack_image(h.device_image())
+    assert p.arrays["A"].dtype == np.int16
+    assert p.arrays["K"].dtype == np.int16
+    assert image_table_bytes(p) < image_table_bytes(h.device_image())
+
+
+def test_memento_packed_layout_is_bitmap_plus_slots():
+    h = _state("memento", 256, 40, seed=3)
+    img = h.device_image()
+    p = pack_image(img)
+    assert p.packed and set(p.arrays) == {"state", "slot_b", "slot_c"}
+    assert p.arrays["state"].dtype == np.uint32
+    repl = np.asarray(img.arrays["repl"])
+    state = np.asarray(p.arrays["state"])
+    bits = (state[np.arange(len(repl)) >> 5]
+            >> (np.arange(len(repl)) & 31)) & 1
+    np.testing.assert_array_equal(bits == 1, repl < 0)
+
+
+# ---------------------------------------------------------------------------
+# Engine equality on packed images, all planes and op modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("plane", PLANES)
+def test_packed_lookup_matches_host(algo, plane):
+    h = _state(algo, 96, 30, seed=4)
+    p = pack_image(h.device_image())
+    out = np.asarray(engine.engine_lookup(KEYS, p, plane=plane))
+    np.testing.assert_array_equal(out, ref.lookup_host(KEYS, h))
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("plane", PLANES)
+def test_packed_replica_sets_match_dense(algo, plane):
+    h = _state(algo, 64, 16, seed=5)
+    dense, packed = h.device_image(), pack_image(h.device_image())
+    want = np.asarray(engine.engine_lookup(KEYS, dense, k=3, plane="jnp"))
+    got = np.asarray(engine.engine_lookup(KEYS, packed, k=3, plane=plane))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("plane", PLANES)
+def test_packed_bounded_replica_matches_dense(plane):
+    h = _state("memento", 96, 20, seed=6)
+    dense, packed = h.device_image(), pack_image(h.device_image())
+    cap = max(2, -(-len(KEYS) * 5 // (4 * h.working)))
+    load = np.zeros(engine.bounded_load_len(dense), np.int32)
+    full = sorted(h.working_set())[: h.working // 4]
+    load[full] = cap
+    want = np.asarray(engine.engine_lookup(KEYS, dense, k=2, load=load,
+                                           cap=cap, plane="jnp"))
+    plen = engine.bounded_load_len(packed)
+    pload = np.zeros(plen, np.int32)
+    pload[:len(load)] = load
+    got = np.asarray(engine.engine_lookup(KEYS, packed, k=2, load=pload,
+                                          cap=cap, plane=plane))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("plane", PLANES)
+def test_packed_epoch_diff_matches_dense(plane):
+    h = _state("memento", 96, 10, seed=7)
+    old_d = h.device_image(capacity=512)
+    old_p = pack_image(old_d)
+    _churn(h, 15, seed=8)
+    new_d = h.device_image(capacity=512)
+    new_p = pack_image(new_d)
+    want = engine.engine_diff(KEYS, old_d, new_d, plane="jnp")
+    got = engine.engine_diff(KEYS, old_p, new_p, plane=plane)
+    np.testing.assert_array_equal(got.old, want.old)
+    np.testing.assert_array_equal(got.new, want.new)
+    np.testing.assert_array_equal(got.moved, want.moved)
+
+
+def test_packed_diff_rejects_mixed_layouts_same_algo():
+    h = _state("memento", 64, 8, seed=9)
+    dense = h.device_image()
+    packed = pack_image(dense)
+    with pytest.raises(ValueError, match="one layout"):
+        engine.engine_diff(KEYS, dense, packed, plane="pallas")
+
+
+# ---------------------------------------------------------------------------
+# Compact DeviceImageStore: packed epoch deltas
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_compact_store_churn_stays_bit_identical(algo):
+    h = make_hash(algo, 64, capacity=256, variant="32")
+    st = DeviceImageStore(h, compact=True)
+    assert st.image().packed
+    for round_ in range(5):
+        _churn(h, 4, seed=20 + round_)
+        st.sync()
+        host = ref.lookup_host(KEYS, h)
+        np.testing.assert_array_equal(st.lookup(KEYS), host)
+        np.testing.assert_array_equal(st.lookup(KEYS, plane="pallas"), host)
+    assert st.totals.delta_applies > 0  # churn rode the packed delta path
+
+
+def test_compact_store_remove_then_restore_uses_tombstones():
+    h = make_hash("memento", 128, capacity=512, variant="32")
+    st = DeviceImageStore(h, compact=True)
+    ws = sorted(h.working_set())
+    for b in ws[:6]:
+        h.remove(b)
+    st.sync()
+    for _ in range(6):  # add back: restores clear bitmap bits via tombstones
+        h.add()
+    st.sync()
+    assert st.totals.delta_applies == 2
+    assert st.totals.snapshot_rebuilds == 0
+    np.testing.assert_array_equal(st.lookup(KEYS), ref.lookup_host(KEYS, h))
+    mirror = st._mirror
+    assert (mirror["slot_b"] == TOMBSTONE).sum() > 0  # restores left tombstones
+
+
+def test_compact_store_slot_overflow_falls_back_to_snapshot():
+    h = make_hash("memento", 512, capacity=512, variant="32")
+    st = DeviceImageStore(h, compact=True)
+    # remove far more buckets than the rebuilt slot table can absorb
+    rng = np.random.default_rng(0)
+    for _ in range(400):
+        ws = sorted(h.working_set())
+        h.remove(ws[int(rng.integers(len(ws)))])
+    st.sync()
+    assert st.totals.snapshot_rebuilds >= 1
+    np.testing.assert_array_equal(st.lookup(KEYS), ref.lookup_host(KEYS, h))
+
+
+def test_compact_store_migration_diff():
+    h = make_hash("memento", 96, capacity=384, variant="32")
+    st = DeviceImageStore(h, compact=True)
+    _churn(h, 10, seed=30)
+    st.sync()
+    d = st.migration_diff(KEYS)
+    host_new = ref.lookup_host(KEYS, h)
+    np.testing.assert_array_equal(d.new, host_new)
+    assert d.moved.any() or (d.old == d.new).all()
+
+
+def test_packed_delta_updates_overflow_returns_none():
+    h = _state("memento", 96, 5, seed=31)
+    img = pack_image(h.device_image())
+    mirror = {k: np.array(v) for k, v in img.arrays.items()}
+    # a bucket index beyond the bitmap capacity cannot be scattered in place
+    from repro.core.protocol import ImageDelta
+    beyond = 32 * len(mirror["state"])
+    delta = ImageDelta(algo="memento", base_epoch=img.epoch,
+                       epoch=img.epoch + 1, n=beyond + 1,
+                       updates={"repl": (np.array([beyond]),
+                                         np.array([0]))})
+    assert packed_delta_updates(mirror, delta) is None
