@@ -35,13 +35,9 @@ from pathlib import Path
 
 import numpy as np
 
+from benchmarks.timing import block_image as _block
+
 ALGOS = ("memento", "jump", "anchor", "dx")
-
-
-def _block(image) -> None:
-    for arr in image.arrays.values():
-        if hasattr(arr, "block_until_ready"):
-            arr.block_until_ready()
 
 
 def _churn_victim(h, rng):

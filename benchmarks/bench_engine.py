@@ -80,12 +80,7 @@ def _scenario_state(algo, scenario, w, a_over_w, frac, rng):
     return h
 
 
-def _time(fn, repeats=3):
-    fn()  # warm/compile
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        fn()
-    return (time.perf_counter() - t0) / repeats
+from benchmarks.timing import time_fn as _time  # warm-up + block_until_ready
 
 
 def _lookup_accounting(images, op, keys, n_keys, measured_s):

@@ -33,6 +33,8 @@ from pathlib import Path
 
 import numpy as np
 
+from benchmarks.timing import time_fn
+
 ALGOS = ("memento", "jump", "anchor", "dx")
 K_VALUES = (1, 2, 3)
 C_VALUES = (1.05, 1.25, float("inf"))
@@ -99,11 +101,9 @@ def bench_replicas(emit, w=1024, a_over_w=4, n_keys=8192, pallas_keys=2048,
                 host = replica_sets(h, keys[:64], k)
                 np.testing.assert_array_equal(out[:64], host)
                 distinct = all(len(set(row)) == k for row in out.tolist())
-                t0 = time.perf_counter()
-                for _ in range(5):
-                    replica_lookup(jkeys, image, k,
-                                   plane="jnp").block_until_ready()
-                us = (time.perf_counter() - t0) / (5 * n_keys) * 1e6
+                us = time_fn(lambda: replica_lookup(jkeys, image, k,
+                                                    plane="jnp"),
+                             repeats=5) / n_keys * 1e6
                 emit(f"replicas_{scenario}_lookup", algo, x,
                      f"k{k}_jnp_us_per_key", us)
                 entry[f"k{k}_jnp_us_per_key"] = us
@@ -112,10 +112,9 @@ def bench_replicas(emit, w=1024, a_over_w=4, n_keys=8192, pallas_keys=2048,
                 pout = np.asarray(replica_lookup(pkeys, image, k,
                                                  plane="pallas"))
                 np.testing.assert_array_equal(pout, out[:pallas_keys])
-                t0 = time.perf_counter()
-                replica_lookup(pkeys, image, k,
-                               plane="pallas").block_until_ready()
-                pus = (time.perf_counter() - t0) / pallas_keys * 1e6
+                pus = time_fn(lambda: replica_lookup(pkeys, image, k,
+                                                     plane="pallas"),
+                              repeats=1) / pallas_keys * 1e6
                 emit(f"replicas_{scenario}_lookup", algo, x,
                      f"k{k}_pallas_us_per_key", pus)
                 entry[f"k{k}_pallas_us_per_key"] = pus
@@ -133,11 +132,14 @@ def bench_replicas(emit, w=1024, a_over_w=4, n_keys=8192, pallas_keys=2048,
                     t_us = float("nan")
                 else:
                     cap = max(1, math.ceil(c * n_keys / working))
-                    t0 = time.perf_counter()
                     assigned, load = bounded_assign_device(
                         keys, image, np.zeros(load_len, np.int32), cap,
                         plane="jnp")
-                    t_us = (time.perf_counter() - t0) / n_keys * 1e6
+                    t_us = time_fn(
+                        lambda: bounded_assign_device(
+                            keys, image, np.zeros(load_len, np.int32), cap,
+                            plane="jnp"),
+                        repeats=1, warmup=0) / n_keys * 1e6  # warmed above
                     peak = int(load.max())
                     assert peak <= cap, (algo, scenario, c, peak, cap)
                     assert (assigned >= 0).all()

@@ -41,6 +41,9 @@ def main(argv=None) -> int:
                     help="also run the unified-engine / sharded-plane benchmark")
     ap.add_argument("--scenarios", action="store_true",
                     help="also replay the scenario-engine lifecycle suite")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="also run the overlapped-sync / follower-"
+                         "replication storm benchmark")
     ap.add_argument("--out-dir", default=None,
                     help="write bench.csv here (default: a run-scoped dir "
                          "under benchmarks/results/runs/)")
@@ -125,6 +128,11 @@ def main(argv=None) -> int:
                             deg_w=128, deg_keys=256)
         else:
             bench_scenarios(emit)
+    if args.async_:
+        # overlapped epoch pipeline: async dispatch vs blocking flip,
+        # storm availability, follower convergence (DESIGN.md §9)
+        from .bench_async import CELLS, bench_async
+        bench_async(emit, cells=CELLS["quick" if args.quick else "default"])
 
     if args.update_golden:
         out_dir = GOLDEN

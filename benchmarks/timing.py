@@ -1,0 +1,45 @@
+"""Shared benchmark timing helpers.
+
+Every advisory timing in this repo follows the same discipline: an
+explicit warm-up call first (so first-call jit compilation can never
+pollute the measurement) and ``jax.block_until_ready`` on each result (so
+async dispatch can't end the clock before the device finishes).  This
+module is the ONE implementation — ``bench_engine``/``bench_churn``/
+``bench_replicas``/``bench_async`` all import it instead of growing
+per-module ``_time()`` clones.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _settle(out):
+    """Block until ``out`` (any pytree of jax arrays / numpy / scalars) is
+    materialized on device."""
+    import jax
+
+    if out is not None:
+        jax.block_until_ready(out)
+    return out
+
+
+def time_fn(fn, repeats: int = 3, *, warmup: int = 1) -> float:
+    """Mean wall-clock seconds per call of ``fn()``.
+
+    Runs ``warmup`` untimed calls (compile + caches), then ``repeats``
+    timed ones; every call's result is blocked on before its clock stops.
+    """
+    for _ in range(max(warmup, 0)):
+        _settle(fn())
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        _settle(fn())
+    return (time.perf_counter() - t0) / max(repeats, 1)
+
+
+def block_image(image) -> None:
+    """``block_until_ready`` every array of a DeviceImage (sync-latency
+    clocks must include the device materialization, not just dispatch)."""
+    for arr in image.arrays.values():
+        if hasattr(arr, "block_until_ready"):
+            arr.block_until_ready()

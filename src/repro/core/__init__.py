@@ -22,12 +22,12 @@ Device control plane (epochs & deltas, DESIGN.md §3.5):
 from .anchor import AnchorHash
 from .bounded import BoundedLoad, BoundedLoadMemento
 from .dx import DxHash
-from .image_store import DeviceImageStore, SyncStats
+from .image_store import DeviceImageStore, SyncHandle, SyncStats
 from .jump import JumpHash, jump32, jump64, np_jump32
 from .memento import MementoHash, random_state
 from .protocol import (REPLICA_SALT_CAP, ConsistentHash, DeviceImage,
-                       ImageDelta, ReplicatedLookup, apply_delta, make_hash,
-                       replica_sets)
+                       ImageDelta, ReplicatedLookup, apply_delta,
+                       image_fingerprint, make_hash, replica_sets)
 from .tables import MementoTables, tables_from_state
 
 __all__ = [
@@ -44,8 +44,10 @@ __all__ = [
     "MementoTables",
     "REPLICA_SALT_CAP",
     "ReplicatedLookup",
+    "SyncHandle",
     "SyncStats",
     "apply_delta",
+    "image_fingerprint",
     "jump32",
     "jump64",
     "make_hash",

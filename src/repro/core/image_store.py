@@ -26,6 +26,17 @@ amortized cost stays O(1) per event).  ``last_sync``/``totals`` expose
 which path ran and how many 32-bit words crossed host→device — the numbers
 the churn benchmark reports.
 
+Epoch advancement comes in two flavours (DESIGN.md §9.1):
+
+  * ``sync()``        — prepare + flip in one call (the classic path);
+  * ``sync_async()``  — dispatch the delta-apply scatter and return a
+    :class:`SyncHandle` WITHOUT flipping.  The front image keeps serving
+    epoch N the whole time the device materializes N+1; ``handle.commit()``
+    (or the store's ``poll()``/``flush()``) performs the deferred atomic
+    flip, so delta-apply latency hides behind lookup work instead of
+    adding to it.  One handle may be in flight at a time; starting another
+    sync first commits the pending one, so epochs stay linear.
+
 The store is overlay-agnostic: a bounded-load state (DESIGN.md §4.2)
 simply adds a bucket-indexed ``load`` word array to its image, and load
 changes ride the same delta path (``_fits`` sizes it to the bucket-id
@@ -33,6 +44,7 @@ space).
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -59,6 +71,73 @@ class SyncTotals:
     words: int = 0
 
 
+class SyncHandle:
+    """One in-flight ``sync_async()``: epoch N+1 materializing off the hot path.
+
+    The handle owns the not-yet-front image whose scatter (or snapshot
+    transfer) has been *dispatched* but whose epoch flip is deferred.  The
+    store keeps serving the old front the whole time; nothing observable
+    changes until ``commit()`` (blocking) or ``poll()`` (non-blocking,
+    flips only if the device result is ready) lands the flip.  Handles are
+    idempotent — ``commit()`` after the flip just returns the stats — and
+    the flip itself happens under the store's lock, so concurrent lookup
+    threads always observe either the complete old epoch or the complete
+    new one, never a torn mix.
+    """
+
+    def __init__(self, store: "DeviceImageStore", stats: SyncStats,
+                 new_front: DeviceImage | None,
+                 new_mirror: dict | None = None):
+        self._store = store
+        self._stats = stats
+        self._new = new_front           # None → noop: nothing to flip
+        self._new_mirror = new_mirror
+        self._done = new_front is None
+        if self._done:
+            store._account(stats)
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    @property
+    def stats(self) -> SyncStats:
+        """Target-epoch stats (valid before and after the flip)."""
+        return self._stats
+
+    def ready(self) -> bool:
+        """True iff every dispatched device buffer has materialized.
+
+        Non-blocking: uses ``jax.Array.is_ready()``.  Arrays without the
+        probe (plain numpy in interpret paths) count as ready.
+        """
+        if self._done:
+            return True
+        return all(v.is_ready() for v in self._new.arrays.values()
+                   if hasattr(v, "is_ready"))
+
+    def poll(self) -> bool:
+        """Flip iff the device result is ready; never blocks.  Returns
+        whether the handle is done (flipped or was a noop)."""
+        if not self._done and self.ready():
+            self.commit()
+        return self._done
+
+    def commit(self) -> SyncStats:
+        """Block until epoch N+1 is materialized, then flip atomically."""
+        with self._store._lock:
+            if self._done:
+                return self._stats
+            for v in self._new.arrays.values():
+                if hasattr(v, "block_until_ready"):
+                    v.block_until_ready()
+            self._store._flip(self._new, self._new_mirror, self._stats)
+            self._done = True
+            if self._store._pending is self:
+                self._store._pending = None
+        return self._stats
+
+
 class DeviceImageStore:
     """Double-buffered device image of a ConsistentHash, updated by deltas."""
 
@@ -79,11 +158,13 @@ class DeviceImageStore:
         self.totals = SyncTotals()
         self.last_sync: SyncStats | None = None
         self._prev: DeviceImage | None = None
+        self._lock = threading.RLock()
+        self._pending: SyncHandle | None = None
         self._rebuild()
 
     # -- buffers ---------------------------------------------------------------
-    def _rebuild(self) -> None:
-        """Full snapshot upload (init, log overflow, or capacity growth)."""
+    def _snapshot(self) -> tuple[DeviceImage, dict | None]:
+        """Build (dispatch, don't install) a full snapshot image + mirror."""
         import jax.numpy as jnp
 
         algo = getattr(self._ch, "image_algo", self._ch.name)
@@ -92,6 +173,7 @@ class DeviceImageStore:
         else:  # fixed overall capacity a: padding beyond a is never read
             cap = None
         img = self._ch.device_image(capacity=cap)
+        mirror = None
         if self.compact:
             from .packing import pack_image
 
@@ -99,12 +181,17 @@ class DeviceImageStore:
             # deltas insert in place; the numpy mirror is the host copy
             # packed_delta_updates edits to derive device scatters.
             img = pack_image(img, slot_headroom=2)
-            self._mirror = {k: np.array(v) for k, v in img.arrays.items()}
-        self._front = DeviceImage(
+            mirror = {k: np.array(v) for k, v in img.arrays.items()}
+        front = DeviceImage(
             algo=img.algo, n=img.n,
             arrays={k: jnp.asarray(v) for k, v in img.arrays.items()},
             scalars=dict(img.scalars), epoch=img.epoch,
             packed=img.packed)
+        return front, mirror
+
+    def _rebuild(self) -> None:
+        """Full snapshot upload (init, log overflow, or capacity growth)."""
+        self._front, self._mirror = self._snapshot()
 
     def _image_size_hint(self) -> int:
         return self._ch.size
@@ -132,34 +219,90 @@ class DeviceImageStore:
         Applies an O(changed-words) delta when the host log covers our
         epoch and capacity suffices; falls back to a full snapshot rebuild
         otherwise.  Either way the old front buffer is retained as
-        ``previous_image()`` and the flip is atomic.
+        ``previous_image()`` and the flip is atomic.  Any pending async
+        epoch is committed first, so epochs stay linear.
         """
+        self.flush()
+        new, mirror, stats = self._prepare()
+        with self._lock:
+            if new is not None:
+                self._flip(new, mirror, stats)
+            else:
+                self._account(stats)
+        return stats
+
+    def sync_async(self) -> SyncHandle:
+        """Dispatch epoch N+1 (delta scatter or snapshot transfer) without
+        flipping and without blocking on the device result.
+
+        The front image keeps serving epoch N until the returned
+        :class:`SyncHandle` is committed — by ``handle.commit()``, the
+        store's ``poll()``/``flush()``, or implicitly by the next
+        ``sync``/``sync_async`` call (one handle in flight at a time, so
+        epochs remain linear).  Lookups issued meanwhile are epoch-N
+        consistent; lookups after the commit are epoch-N+1 consistent.
+        """
+        self.flush()
+        new, mirror, stats = self._prepare()
+        handle = SyncHandle(self, stats, new, mirror)
+        if not handle.done:
+            self._pending = handle
+        return handle
+
+    def poll(self) -> bool:
+        """Commit the pending async epoch iff its device result is ready
+        (never blocks).  True when no flip remains outstanding."""
+        h = self._pending
+        return h.poll() if h is not None else True
+
+    def flush(self) -> SyncStats | None:
+        """Commit the pending async epoch, blocking if needed."""
+        h = self._pending
+        return h.commit() if h is not None else None
+
+    @property
+    def pending(self) -> SyncHandle | None:
+        """The in-flight ``sync_async`` handle, if any."""
+        return self._pending
+
+    def _prepare(self) -> tuple[DeviceImage | None, dict | None, SyncStats]:
+        """Drain the host delta and dispatch (but do not install) the
+        next-epoch image.  Returns ``(new_front, new_mirror, stats)``;
+        ``new_front is None`` means nothing to flip (noop)."""
         delta = self._drain_delta()
         applied = None
         if delta is not None and delta.events == 0:
-            stats = SyncStats("noop", 0, 0, self.epoch)
-        elif delta is not None and self._fits(delta) and (
+            return None, None, SyncStats("noop", 0, 0, self.epoch)
+        if delta is not None and self._fits(delta) and (
                 applied := (self._apply_packed(delta) if self.compact
                             else (self._apply(delta), delta.num_words()))
         ) is not None:
-            old = self._front
-            self._front, words = applied
-            self._prev = old
-            stats = SyncStats("delta", delta.events, words, self.epoch)
+            new, words = applied
+            return new, self._mirror, SyncStats("delta", delta.events, words,
+                                                new.epoch)
+        events = getattr(self._ch, "epoch", self._front.epoch) - self._front.epoch
+        new, mirror = self._snapshot()
+        words = sum(int(v.size) for v in new.arrays.values()) + 1
+        return new, mirror, SyncStats("snapshot", events, words, new.epoch)
+
+    def _flip(self, new: DeviceImage, mirror: dict | None,
+              stats: SyncStats) -> None:
+        """Atomically install epoch N+1 (caller holds ``_lock``)."""
+        old = self._front
+        self._front = new
+        self._mirror = mirror
+        self._prev = old
+        self._account(stats)
+
+    def _account(self, stats: SyncStats) -> None:
+        if stats.mode == "delta":
             self.totals.delta_applies += 1
-        else:
-            old = self._front
-            events = getattr(self._ch, "epoch", old.epoch) - old.epoch
-            self._rebuild()
-            self._prev = old
-            words = sum(int(v.size) for v in self._front.arrays.values()) + 1
-            stats = SyncStats("snapshot", events, words, self.epoch)
+        elif stats.mode == "snapshot":
             self.totals.snapshot_rebuilds += 1
         self.totals.syncs += 1
         self.totals.events += stats.events
         self.totals.words += stats.words
         self.last_sync = stats
-        return stats
 
     def _drain_delta(self) -> ImageDelta | None:
         ch = self._ch
@@ -179,16 +322,10 @@ class DeviceImageStore:
         return all(caps.get(name, 0) >= need for name, need in needed.items())
 
     def _apply(self, delta: ImageDelta) -> DeviceImage:
-        from repro.kernels.delta_apply import scatter_update
+        from repro.kernels.delta_apply import apply_updates
 
-        arrays = {}
-        for name, arr in self._front.arrays.items():
-            if name in delta.updates and len(delta.updates[name][0]):
-                idx, vals = delta.updates[name]
-                arrays[name] = scatter_update(arr, idx, vals, plane=self.plane,
-                                              interpret=self._interpret)
-            else:
-                arrays[name] = arr  # untouched: shared with the old epoch
+        arrays = apply_updates(self._front.arrays, delta.updates,
+                               plane=self.plane, interpret=self._interpret)
         return DeviceImage(algo=delta.algo, n=delta.n, arrays=arrays,
                            scalars=dict(delta.scalars), epoch=delta.epoch)
 

@@ -237,6 +237,36 @@ def required_lengths(algo: str, n: int) -> dict[str, int]:
     raise ValueError(f"unknown algo {algo!r}")
 
 
+def image_fingerprint(image: DeviceImage) -> str:
+    """CRC32 hex digest of every word a lookup can observe.
+
+    Hashes ``n``, ``epoch``, the layout scalars, and each array trimmed to
+    its :func:`required_lengths` prefix (plus the bucket-indexed ``load``
+    overlay words, if present) — capacity padding is excluded, so two
+    stores that reached the same epoch through different snapshot/delta
+    histories (hence different padded capacities) fingerprint equal iff
+    their lookups are bit-identical.  This is the convergence instrument
+    for cross-process replication (``launch/replicate.py``) and the sim's
+    follower-convergence checker.  Packed images hash their full arrays
+    (their layout has no unread padding words beyond the slot area).
+    """
+    import zlib
+
+    crc = zlib.crc32(np.asarray([image.n, image.epoch], np.int64).tobytes())
+    trim = {} if image.packed else required_lengths(image.algo, image.n)
+    if "load" in image.arrays:
+        trim = dict(trim, load=image.n)
+    for name in sorted(image.arrays):
+        arr = np.ascontiguousarray(np.asarray(image.arrays[name]))
+        if name in trim:
+            arr = arr[: trim[name]]
+        crc = zlib.crc32(name.encode(), crc)
+        crc = zlib.crc32(arr.tobytes(), crc)
+    for name in sorted(image.scalars):
+        crc = zlib.crc32(f"{name}={int(image.scalars[name])}".encode(), crc)
+    return f"{crc & 0xFFFFFFFF:08x}"
+
+
 def apply_delta(image: DeviceImage, delta: ImageDelta) -> DeviceImage:
     """Host-side (numpy) reference apply: returns a NEW image at
     ``delta.epoch``; ``image`` is left untouched (double-buffer semantics).

@@ -93,6 +93,28 @@ def _scatter_jnp(table, meta):
     return table.at[idx].set(vals.astype(table.dtype), mode="drop")
 
 
+def apply_updates(arrays: dict, updates: dict, *, plane: str = "jnp",
+                  interpret: bool = True) -> dict:
+    """Apply per-array ``{name: (idx, vals)}`` scatters to an image's
+    ``arrays`` dict, out of place.
+
+    Untouched arrays (and empty update lists) pass through by reference —
+    they stay shared with the previous epoch's image, which is what makes
+    double buffering O(changed-words) instead of O(n).  Shared by the
+    leader store's delta apply and the follower replica's wire-frame apply,
+    so both sides run bit-identical scatter code.
+    """
+    out = {}
+    for name, arr in arrays.items():
+        upd = updates.get(name)
+        if upd is not None and len(upd[0]):
+            out[name] = scatter_update(arr, upd[0], upd[1], plane=plane,
+                                       interpret=interpret)
+        else:
+            out[name] = arr
+    return out
+
+
 def scatter_update(table, idx, vals, *, plane: str = "jnp",
                    interpret: bool = True):
     """Out-of-place scatter ``table[idx] = vals`` → new device array.

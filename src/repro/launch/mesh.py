@@ -31,6 +31,27 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     return _mesh(shape, axes)
 
 
+def init_distributed(coordinator_address: str, num_processes: int,
+                     process_id: int) -> None:
+    """Join the multi-process mesh for cross-process delta replication
+    (DESIGN.md §9.3): process 0 owns membership, followers receive the
+    broadcast delta frames of :mod:`repro.launch.replicate`.
+
+    On the CPU backend, cross-process collectives need the gloo
+    implementation — the default CPU client rejects multi-process
+    computations — so it is selected *before* ``jax.distributed``
+    initializes the backend (a no-op on TPU, where ICI collectives are
+    native).
+    """
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:
+        pass  # older/newer jax without the option: TPU paths don't need it
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
 def make_lookup_mesh(num_devices: int | None = None, axis: str = "data"):
     """1-D serving mesh for the sharded lookup plane (DESIGN.md §6): key
     batches shard over ``axis`` across every available device (or the

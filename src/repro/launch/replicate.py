@@ -1,0 +1,376 @@
+"""Cross-process delta replication: one membership owner, N converging
+followers (DESIGN.md §9.3).
+
+MementoHash's control plane is a bounded per-event delta log
+(:class:`~repro.core.protocol.DeltaEmitter`).  This module ships that log
+across process boundaries: the **leader** process owns the host
+``ConsistentHash`` state and publishes each epoch advance as a flat int32
+**frame**; **followers** hold no host state at all — just a
+:class:`FollowerImageStore` replaying frames into an on-device
+:class:`~repro.core.protocol.DeviceImage` with the same out-of-place
+scatter code (:func:`repro.kernels.delta_apply.apply_updates`) the leader's
+own :class:`~repro.core.DeviceImageStore` runs.  Because both sides apply
+identical words in identical epoch order, followers converge to
+**bit-identical** images (every word a lookup can gather —
+:func:`~repro.core.protocol.image_fingerprint`) and equal epochs.
+
+Frames come in two kinds, mirroring the store's two sync paths:
+
+  * ``DELTA``    — O(changed-words): scatter (index, value) pairs per named
+    array + the new dynamic scalars, epoch-chained onto the follower's
+    current epoch;
+  * ``SNAPSHOT`` — the full padded arrays, sent when the delta log no
+    longer covers the published epoch or when growth outruns the published
+    capacity (the publisher tracks the capacity it last announced, so the
+    leader — not each follower — decides when a snapshot is due and every
+    follower takes the same path).
+
+Transport is pluggable: :class:`LoopbackChannel` replicates in-process
+(the sim driver's follower mode and the unit tests);
+:class:`DistributedBroadcast` rides two
+``multihost_utils.broadcast_one_to_all`` collectives per round over the
+``jax.distributed`` mesh that :func:`repro.launch.mesh.init_distributed`
+joins (gloo on CPU, ICI on TPU).  Frames are plain ``np.int32`` vectors
+either way, so a transport is just "move this vector".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.protocol import (IMAGE_LAYOUT, DeviceImage, ImageDelta,
+                                 image_fingerprint, required_lengths,
+                                 round_up)
+
+#: frame type tags
+KIND_DELTA = 1
+KIND_SNAPSHOT = 2
+
+_MAGIC = 0x4D454D30  # "MEM0", truncated to int32 range
+_ALGO_IDS = {"memento": 0, "anchor": 1, "dx": 2, "jump": 3}
+_ALGO_NAMES = {v: k for k, v in _ALGO_IDS.items()}
+
+
+def _array_names(algo: str) -> list[str]:
+    """Canonical array-name table for the wire: layout tables + the
+    bounded-load overlay word array (name_id = position)."""
+    return list(IMAGE_LAYOUT[algo][1]) + ["load"]
+
+
+def _scalar_names(algo: str) -> tuple[str, ...]:
+    return IMAGE_LAYOUT[algo][0]
+
+
+# -- wire format --------------------------------------------------------------
+# frame = [MAGIC, kind, algo_id, base_epoch, epoch, n, n_extra_scalars,
+#          n_arrays, extra_scalars..., blocks...]          (all int32)
+# DELTA block:    [name_id, count,          idx[count], vals[count]]
+# SNAPSHOT block: [name_id, length, dtype,  words[length]]   dtype: 0=i32 1=u32
+_HDR = 8
+
+
+def encode_delta(delta: ImageDelta) -> np.ndarray:
+    """Delta → one flat int32 frame (O(changed-words))."""
+    scal = [int(delta.scalars[s]) for s in _scalar_names(delta.algo)[1:]]
+    names = _array_names(delta.algo)
+    body: list[np.ndarray] = []
+    blocks = 0
+    for name, (idx, vals) in sorted(delta.updates.items()):
+        if not len(idx):
+            continue
+        blocks += 1
+        head = np.asarray([names.index(name), len(idx)], np.int32)
+        body += [head, np.asarray(idx, np.int32),
+                 np.asarray(vals).astype(np.int64).astype(np.int32)]
+    hdr = np.asarray([_MAGIC, KIND_DELTA, _ALGO_IDS[delta.algo],
+                      delta.base_epoch, delta.epoch, delta.n,
+                      len(scal), blocks] + scal, np.int32)
+    return np.concatenate([hdr] + body) if body else hdr
+
+
+def encode_snapshot(image: DeviceImage) -> np.ndarray:
+    """Full (padded) image → one flat int32 frame.  Dense layouts only:
+    packed images keep their compaction process-local."""
+    if image.packed:
+        raise ValueError("packed images do not replicate; ship dense frames")
+    scal = [int(image.scalars[s]) for s in _scalar_names(image.algo)[1:]]
+    names = _array_names(image.algo)
+    body: list[np.ndarray] = []
+    for name in sorted(image.arrays):
+        arr = np.ascontiguousarray(np.asarray(image.arrays[name]))
+        dtype = 1 if arr.dtype == np.uint32 else 0
+        head = np.asarray([names.index(name), arr.shape[0], dtype], np.int32)
+        body += [head, arr.view(np.int32)]
+    hdr = np.asarray([_MAGIC, KIND_SNAPSHOT, _ALGO_IDS[image.algo],
+                      0, image.epoch, image.n,
+                      len(scal), len(body) // 2] + scal, np.int32)
+    return np.concatenate([hdr] + body)
+
+
+@dataclass
+class Frame:
+    """A decoded replication frame."""
+
+    kind: int
+    algo: str
+    base_epoch: int
+    epoch: int
+    n: int
+    scalars: dict[str, int]
+    # DELTA: name → (idx, vals); SNAPSHOT: name → (np array, dtype)
+    updates: dict
+    arrays: dict
+
+
+def decode_frame(buf: np.ndarray) -> Frame:
+    buf = np.asarray(buf, np.int32)
+    if len(buf) < _HDR or buf[0] != _MAGIC:
+        raise ValueError("not a replication frame")
+    kind, algo_id = int(buf[1]), int(buf[2])
+    algo = _ALGO_NAMES[algo_id]
+    base_epoch, epoch, n = int(buf[3]), int(buf[4]), int(buf[5])
+    n_scal, n_blocks = int(buf[6]), int(buf[7])
+    scal_names = _scalar_names(algo)[1:]
+    scalars = {scal_names[i]: int(buf[_HDR + i]) for i in range(n_scal)}
+    names = _array_names(algo)
+    pos = _HDR + n_scal
+    updates: dict = {}
+    arrays: dict = {}
+    for _ in range(n_blocks):
+        if kind == KIND_DELTA:
+            name, count = names[int(buf[pos])], int(buf[pos + 1])
+            pos += 2
+            idx = np.array(buf[pos: pos + count], np.int32)
+            vals = np.array(buf[pos + count: pos + 2 * count], np.int32)
+            pos += 2 * count
+            updates[name] = (idx, vals)
+        else:
+            name, length, dt = (names[int(buf[pos])], int(buf[pos + 1]),
+                                int(buf[pos + 2]))
+            pos += 3
+            arr = np.array(buf[pos: pos + length], np.int32)
+            pos += length
+            arrays[name] = (arr.view(np.uint32) if dt else arr)
+    if pos != len(buf):
+        raise ValueError(f"trailing bytes in frame ({pos} != {len(buf)})")
+    return Frame(kind=kind, algo=algo, base_epoch=base_epoch, epoch=epoch,
+                 n=n, scalars=scalars, updates=updates, arrays=arrays)
+
+
+# -- leader side --------------------------------------------------------------
+class DeltaPublisher:
+    """Leader-side cursor over the host state's bounded delta log.
+
+    ``frames()`` returns the frames that advance followers from the last
+    published epoch to the host's current one — usually one O(changed-words)
+    DELTA frame; a SNAPSHOT frame on first publish, on log overflow, or
+    when growth outruns the capacity the last snapshot announced.  The
+    publisher (not each follower) makes the snapshot-vs-delta decision, so
+    every subscriber replays the identical frame sequence — the invariant
+    behind bit-identical convergence.
+    """
+
+    def __init__(self, ch, *, headroom: int = 2):
+        self._ch = ch
+        self.headroom = max(1, headroom)
+        self._epoch: int | None = None  # nothing published yet
+        self._caps: dict[str, int] = {}  # capacities the last snapshot shipped
+
+    @property
+    def published_epoch(self) -> int | None:
+        return self._epoch
+
+    def _snapshot_frame(self) -> np.ndarray:
+        algo = getattr(self._ch, "image_algo", self._ch.name)
+        if algo in ("memento", "jump"):  # growable: same headroom rule as
+            cap = round_up(max(self.headroom * self._ch.size, 128))  # the store
+        else:
+            cap = None
+        img = self._ch.device_image(capacity=cap)
+        self._caps = {k: int(v.shape[0]) for k, v in img.arrays.items()}
+        self._epoch = img.epoch
+        return encode_snapshot(img)
+
+    def _fits(self, delta: ImageDelta) -> bool:
+        needed = dict(required_lengths(delta.algo, delta.n))
+        if "load" in self._caps:
+            needed["load"] = delta.n
+        return all(self._caps.get(k, 0) >= v for k, v in needed.items())
+
+    def frames(self) -> list[np.ndarray]:
+        """Frames advancing subscribers to the current host epoch
+        (empty when already published)."""
+        cur = getattr(self._ch, "epoch", None)
+        if self._epoch is None:
+            return [self._snapshot_frame()]
+        if cur is None or cur == self._epoch:
+            return []
+        delta = self._ch.device_delta(self._epoch)
+        if delta is None or not self._fits(delta):
+            return [self._snapshot_frame()]
+        self._epoch = delta.epoch
+        return [encode_delta(delta)]
+
+
+# -- follower side ------------------------------------------------------------
+class FollowerImageStore:
+    """Device image replica driven purely by replication frames.
+
+    Holds no host ``ConsistentHash`` state: SNAPSHOT frames install a fresh
+    device image, DELTA frames scatter onto the current one through the
+    same :func:`~repro.kernels.delta_apply.apply_updates` the leader store
+    uses — out of place, with an atomic flip, so in-flight lookups stay
+    epoch-consistent here too.  ``fingerprint()`` must equal the leader's
+    once the follower has replayed every frame (the convergence gate).
+    """
+
+    def __init__(self, *, plane: str = "jnp", interpret: bool | None = None):
+        if plane not in ("jnp", "pallas"):
+            raise ValueError(f"unknown plane {plane!r}")
+        self.plane = plane
+        if interpret is None:
+            import jax
+            interpret = jax.default_backend() != "tpu"
+        self._interpret = interpret
+        self._front: DeviceImage | None = None
+        self.frames_applied = 0
+        self.snapshots = 0
+        self.deltas = 0
+
+    @property
+    def epoch(self) -> int:
+        return -1 if self._front is None else self._front.epoch
+
+    def image(self) -> DeviceImage:
+        if self._front is None:
+            raise ValueError("no snapshot received yet")
+        return self._front
+
+    def fingerprint(self) -> str:
+        return image_fingerprint(self.image())
+
+    def apply_frame(self, buf: np.ndarray) -> None:
+        import jax.numpy as jnp
+
+        f = decode_frame(buf)
+        if f.kind == KIND_SNAPSHOT:
+            self._front = DeviceImage(
+                algo=f.algo, n=f.n,
+                arrays={k: jnp.asarray(v) for k, v in f.arrays.items()},
+                scalars=f.scalars, epoch=f.epoch)
+            self.snapshots += 1
+        else:
+            if self._front is None:
+                raise ValueError("DELTA frame before any SNAPSHOT")
+            if f.algo != self._front.algo:
+                raise ValueError(f"frame algo {f.algo!r} != "
+                                 f"{self._front.algo!r}")
+            if f.base_epoch != self._front.epoch:
+                raise ValueError(f"frame base epoch {f.base_epoch} != "
+                                 f"follower epoch {self._front.epoch}")
+            from repro.kernels.delta_apply import apply_updates
+
+            arrays = apply_updates(self._front.arrays, f.updates,
+                                   plane=self.plane,
+                                   interpret=self._interpret)
+            self._front = DeviceImage(algo=f.algo, n=f.n, arrays=arrays,
+                                      scalars=f.scalars, epoch=f.epoch)
+            self.deltas += 1
+        self.frames_applied += 1
+
+    def lookup(self, keys, *, k: int = 1, **kw) -> np.ndarray:
+        """Bulk lookup against the replicated image (unified engine)."""
+        from repro.kernels.engine import engine_lookup
+
+        return np.asarray(engine_lookup(keys, self.image(), k=k,
+                                        plane=self.plane, **kw))
+
+
+# -- transports ---------------------------------------------------------------
+class LoopbackChannel:
+    """In-process frame queue: the sim driver's follower mode and the unit
+    tests replicate leader → followers without a second process."""
+
+    def __init__(self):
+        self._q: list[np.ndarray] = []
+
+    def publish(self, frames: list[np.ndarray]) -> None:
+        self._q.extend(np.array(f, np.int32) for f in frames)
+
+    def drain(self) -> list[np.ndarray]:
+        out, self._q = self._q, []
+        return out
+
+
+class DistributedBroadcast:
+    """Leader → all-processes frame transport over the ``jax.distributed``
+    mesh (:func:`repro.launch.mesh.init_distributed` first; gloo on CPU).
+
+    ``exchange`` is a *collective*: every process calls it each round.  The
+    leader passes its frames; followers pass nothing and receive the
+    leader's.  Two ``broadcast_one_to_all`` hops per round — a fixed-shape
+    header (frame count + total words) then the exactly-sized concatenated
+    payload with per-frame length prefixes — because collectives need
+    identical shapes on every process before the payload size is known.
+    """
+
+    def __init__(self, *, leader: int = 0):
+        self.leader = leader
+
+    def exchange(self, frames: list[np.ndarray] | None = None) -> list[np.ndarray]:
+        import jax
+        from jax.experimental import multihost_utils
+
+        is_leader = jax.process_index() == self.leader
+        frames = [np.asarray(f, np.int32) for f in (frames or [])]
+        if frames:
+            payload = np.concatenate(
+                [np.concatenate([np.asarray([len(f)], np.int32), f])
+                 for f in frames])
+        else:
+            payload = np.zeros((0,), np.int32)
+        hdr = np.asarray([len(frames), len(payload)], np.int32)
+        hdr = np.asarray(multihost_utils.broadcast_one_to_all(
+            hdr, is_source=is_leader))
+        n_frames, total = int(hdr[0]), int(hdr[1])
+        if n_frames == 0:
+            return []
+        if not is_leader:
+            payload = np.zeros((total,), np.int32)
+        payload = np.asarray(multihost_utils.broadcast_one_to_all(
+            payload, is_source=is_leader))
+        out, pos = [], 0
+        for _ in range(n_frames):
+            ln = int(payload[pos])
+            out.append(np.array(payload[pos + 1: pos + 1 + ln]))
+            pos += 1 + ln
+        return out
+
+
+class ReplicationGroup:
+    """Leader + in-process followers in one handle (the sim driver's
+    ``followers=`` mode): every ``publish()`` ships the pending epochs to
+    each follower and returns the per-follower convergence lag (epochs a
+    follower was behind *before* this round's frames were applied)."""
+
+    def __init__(self, ch, num_followers: int = 1, *, plane: str = "jnp",
+                 headroom: int = 2):
+        self.publisher = DeltaPublisher(ch, headroom=headroom)
+        self.followers = [FollowerImageStore(plane=plane)
+                          for _ in range(num_followers)]
+        self._ch = ch
+
+    def publish(self) -> list[int]:
+        frames = self.publisher.frames()
+        target = getattr(self._ch, "epoch", 0)
+        lags = [max(0, target - max(f.epoch, 0)) for f in self.followers]
+        for frame in frames:
+            for f in self.followers:
+                f.apply_frame(frame)
+        return lags
+
+    def converged(self, leader_image: DeviceImage) -> bool:
+        want = image_fingerprint(leader_image)
+        return all(f.epoch == leader_image.epoch and f.fingerprint() == want
+                   for f in self.followers)

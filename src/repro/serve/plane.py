@@ -55,13 +55,16 @@ class ShardedLookupPlane:
 
     def __init__(self, source, *, mesh=None, axes: tuple[str, ...] | None = None,
                  k: int = 1, plane: str = "jnp", interpret: bool | None = None,
-                 block_rows: int | None = None):
+                 block_rows: int | None = None, sync_mode: str = "block"):
         import jax
 
         if plane not in ("jnp", "pallas", "auto"):
             raise ValueError(f"unknown plane {plane!r}")
         if k < 1:
             raise ValueError("k must be ≥ 1")
+        if sync_mode not in ("block", "overlap"):
+            raise ValueError(f"unknown sync_mode {sync_mode!r}")
+        self.sync_mode = sync_mode
         if mesh is None:
             from repro.launch.mesh import make_lookup_mesh
             mesh = make_lookup_mesh()
@@ -93,6 +96,15 @@ class ShardedLookupPlane:
         return self.num_shards * 128
 
     # -- image replication ---------------------------------------------------
+    def _poll_source(self) -> None:
+        """``sync_mode='overlap'``: land the store's pending async epoch iff
+        its device result is ready (non-blocking), so the flip + re-pin
+        pipeline between ``route_stream`` batches instead of stalling one."""
+        if self.sync_mode == "overlap" and _is_store(self._source):
+            poll = getattr(self._source, "poll", None)
+            if poll is not None:
+                poll()
+
     def _current_image(self):
         if _is_store(self._source):
             return self._source.image()
@@ -226,6 +238,7 @@ class ShardedLookupPlane:
     # -- public data plane ---------------------------------------------------
     def lookup(self, keys) -> np.ndarray:
         """Sharded batched lookup: keys [K] → np int32 [K] (k=1) or [K, k]."""
+        self._poll_source()
         self._ensure()
         dev, n, padded = self._stage(keys)
         arrays, scalars = self._dev
@@ -241,6 +254,7 @@ class ShardedLookupPlane:
         """
         pending = None  # (device out, n)
         for batch in batches:
+            self._poll_source()  # overlap: commit a ready async epoch
             self._ensure()  # pick up any epoch flip between batches
             arrays, scalars = self._dev
             dev, n, padded = self._stage(batch)

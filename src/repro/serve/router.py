@@ -56,7 +56,8 @@ class SessionRouter:
                  max_sessions: int = 1_000_000, replicas_k: int = 1,
                  store: DeviceImageStore | None = None,
                  compact_images: bool = False,
-                 block_rows: int | None = None):
+                 block_rows: int | None = None,
+                 sync_mode: str = "block"):
         if isinstance(algo, str):
             # variant="32": host lookups bit-identical to the device plane.
             self.ch = make_hash(algo, num_replicas, capacity=capacity, variant="32")
@@ -64,7 +65,13 @@ class SessionRouter:
             self.ch = algo
         if replicas_k < 1:
             raise ValueError("replicas_k must be ≥ 1")
+        if sync_mode not in ("block", "overlap"):
+            raise ValueError(f"unknown sync_mode {sync_mode!r}")
         self.replicas_k = replicas_k
+        # "overlap": membership deltas ride sync_async() — the flip lands at
+        # the next batch boundary (bounded staleness) instead of stalling
+        # the event path for the full delta-apply latency (DESIGN.md §9.2).
+        self.sync_mode = sync_mode
         self.use_device_plane = use_device_plane
         # device-plane tuning knobs: compact (packed) device images and an
         # explicit Pallas tile height (None → the autotuner's winner)
@@ -85,6 +92,11 @@ class SessionRouter:
         # replicas marked failed but whose removal delta has not landed yet:
         # route()/route_batch() fail over around them immediately.
         self._failed: set[int] = set()
+        # overlap mode: replica → host epoch whose device landing clears the
+        # mark.  While the async removal is in flight, device lookups still
+        # serve the pre-removal epoch, so the failover mask must outlive
+        # fail_replica() until the flip actually happens.
+        self._unmark_at: dict[int, int] = {}
 
     @property
     def memento(self) -> ConsistentHash:
@@ -100,6 +112,7 @@ class SessionRouter:
         return self.ch.lookup_k(key_to_u32(session_id), k)
 
     def route(self, session_id) -> int:
+        self._poll_store()
         if self.replicas_k > 1 and self._failed:
             reps = self.replica_set(session_id)
             # fail over to replica r+1 while the primary is marked failed;
@@ -145,6 +158,7 @@ class SessionRouter:
 
     def route_batch(self, session_ids: np.ndarray) -> np.ndarray:
         from repro.core.hashing import np_key_to_u32
+        self._poll_store()
         keys = np_key_to_u32(np.asarray(session_ids))
         plane = "pallas" if self.use_device_plane else "jnp"
         if self.replicas_k > 1 and self._failed:
@@ -173,7 +187,8 @@ class SessionRouter:
         from repro.serve.plane import ShardedLookupPlane
         if self._plane is None or mesh is not None or axes is not None:
             plane = ShardedLookupPlane(self.image_store(), mesh=mesh,
-                                       axes=axes, block_rows=self.block_rows)
+                                       axes=axes, block_rows=self.block_rows,
+                                       sync_mode=self.sync_mode)
             if mesh is None and axes is None:
                 self._plane = plane
             return plane
@@ -202,6 +217,7 @@ class SessionRouter:
         kplane = self._replica_plane(mesh)  # built once per stream, not per batch
         for ids in session_id_batches:
             ids = np.asarray(ids)
+            self._poll_store()  # overlap: land a ready flip, retire marks
             self.stats.routed += len(ids)
             keys = np_key_to_u32(ids)
             if not self._failed:
@@ -215,7 +231,8 @@ class SessionRouter:
         k = min(self.replicas_k, self.ch.working)
         if self._plane_k is None or self._plane_k.k != k or mesh is not None:
             plane = ShardedLookupPlane(self.image_store(), mesh=mesh, k=k,
-                                       block_rows=self.block_rows)
+                                       block_rows=self.block_rows,
+                                       sync_mode=self.sync_mode)
             if mesh is None:
                 self._plane_k = plane
             return plane
@@ -223,9 +240,29 @@ class SessionRouter:
 
     # -- membership ----------------------------------------------------------
     def _push_delta(self) -> None:
-        """Mirror the membership event to the device as an epoch delta."""
+        """Mirror the membership event to the device as an epoch delta.
+
+        ``sync_mode='block'`` flips synchronously; ``'overlap'`` dispatches
+        the delta apply and defers the flip to the next poll point (a batch
+        boundary, or the next membership event)."""
         if self._store is not None:
-            self._store.sync()
+            if self.sync_mode == "overlap":
+                self._store.sync_async()
+            else:
+                self._store.sync()
+
+    def _poll_store(self) -> None:
+        """Overlap-mode poll point: land a ready async epoch (never blocks)
+        and retire failover marks whose removal epoch has reached the
+        device."""
+        if self.sync_mode == "overlap" and self._store is not None:
+            self._store.poll()
+        if self._unmark_at and self._store is not None:
+            ep = self._store.epoch
+            for r, until in list(self._unmark_at.items()):
+                if ep >= until:
+                    del self._unmark_at[r]
+                    self._failed.discard(r)
 
     def mark_failed(self, replica: int) -> None:
         """Health-checker hook: route around ``replica`` NOW, before any
@@ -235,20 +272,35 @@ class SessionRouter:
     def fail_replica(self, replica: int) -> dict:
         before = dict(self._last)
         self.mark_failed(replica)  # failover active while the delta lands
+        removed = False
         try:
             self.ch.remove(replica)
+            removed = True
             self._push_delta()
         finally:
-            # membership reflects the failure (or the removal was invalid):
-            # either way the mark must not outlive this call
-            self._failed.discard(replica)
+            host_ep = getattr(self.ch, "epoch", None)
+            if (removed and self.sync_mode == "overlap"
+                    and self._store is not None and host_ep is not None
+                    and self._store.epoch < host_ep):
+                # async removal still in flight: the device plane serves
+                # the pre-removal epoch, so keep failing over until the
+                # flip lands (_poll_store retires the mark by epoch).
+                self._unmark_at[replica] = host_ep
+            else:
+                # membership reflects the failure (or the removal was
+                # invalid): either way the mark must not outlive this call
+                self._failed.discard(replica)
         moved = {s for s, r in before.items() if r == replica}
         self.stats.moved_on_failure += len(moved)
         info = {"replica": replica, "sessions_moved": len(moved)}
-        if self._store is not None and self._store.last_sync is not None:
-            st = self._store.last_sync
-            info["control_plane"] = {"mode": st.mode, "words": st.words,
-                                     "epoch": st.epoch}
+        if self._store is not None:
+            # overlap: the delta is dispatched but not flipped — report the
+            # in-flight handle's target-epoch stats, not the stale last_sync
+            pend = self._store.pending
+            st = pend.stats if pend is not None else self._store.last_sync
+            if st is not None:
+                info["control_plane"] = {"mode": st.mode, "words": st.words,
+                                         "epoch": st.epoch}
         return info
 
     def restore_replica(self) -> int:

@@ -156,6 +156,35 @@ def check_replica_stability(event: int, moved: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# follower convergence (cross-process replication, DESIGN.md §9.3)
+# ---------------------------------------------------------------------------
+
+def check_follower_convergence(event: int, leader_image,
+                               followers) -> list[Violation]:
+    """Eventual-epoch convergence: after a publish round, every follower's
+    replicated image must sit at the leader's epoch with a bit-identical
+    fingerprint (:func:`repro.core.protocol.image_fingerprint` — every word
+    a lookup can gather, capacity padding excluded).  Followers behind on
+    epoch get an ``epoch lag`` violation; followers AT the epoch with
+    different words get the (far worse) ``diverged`` one — a replication
+    bug, not a lag."""
+    from repro.core.protocol import image_fingerprint
+
+    want = image_fingerprint(leader_image)
+    out: list[Violation] = []
+    for idx, f in enumerate(followers):
+        if f.epoch != leader_image.epoch:
+            out.append(Violation(event, "follower_convergence",
+                                 f"follower {idx} at epoch {f.epoch} != "
+                                 f"leader {leader_image.epoch} (lag)"))
+        elif f.fingerprint() != want:
+            out.append(Violation(event, "follower_convergence",
+                                 f"follower {idx} DIVERGED at epoch "
+                                 f"{f.epoch}: {f.fingerprint()} != {want}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # bounded-load cap invariant
 # ---------------------------------------------------------------------------
 

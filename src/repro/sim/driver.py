@@ -45,8 +45,8 @@ from repro.core.hashing import np_fmix32
 from repro.core.protocol import replica_sets
 
 from .checkers import (Violation, candidate_hits, check_balance,
-                       check_cap_invariant, check_minimal_disruption,
-                       check_replica_stability)
+                       check_cap_invariant, check_follower_convergence,
+                       check_minimal_disruption, check_replica_stability)
 from .metrics import EventRecord, ScenarioMetrics
 from .traces import Trace, TraceEvent
 
@@ -141,15 +141,23 @@ class ScenarioDriver:
                  plane: str = "jnp", probe_keys: int = 2048,
                  replica_k: int = 1, check: bool = True,
                  sharded: bool = False, step_sample: int = 256,
-                 balance_tol: float = 6.0):
+                 balance_tol: float = 6.0, sync_mode: str = "block",
+                 followers: int = 0):
         if plane not in PLANES:
             raise ValueError(f"unknown plane {plane!r} (have {PLANES})")
+        if sync_mode not in ("block", "overlap"):
+            raise ValueError(f"unknown sync_mode {sync_mode!r}")
         self.trace = trace
         self.algo = algo
         self.plane = plane
         self.check = check
         self.replica_k = replica_k
         self.balance_tol = balance_tol
+        # "overlap": membership syncs dispatch via sync_async() and the
+        # driver commits at the checker boundary — records both dispatch_us
+        # (the hot path's cost) and sync_us (the full flip latency), with
+        # checker semantics and replay fingerprints unchanged vs "block".
+        self.sync_mode = sync_mode
         self.h = make_hash(algo, trace.initial_nodes,
                            capacity=trace.capacity_factor * trace.initial_nodes,
                            variant="32")
@@ -176,6 +184,17 @@ class ScenarioDriver:
         self._pending_hits: np.ndarray | None = None
         self._resolved_events: list[TraceEvent] = []
         self._route_prev: np.ndarray | None = None
+        # in-process follower replicas (launch/replicate.py): every synced
+        # membership event publishes the pending epochs and the convergence
+        # checker compares fingerprints leader-vs-follower.
+        self._repl = None
+        if followers:
+            from repro.launch.replicate import ReplicationGroup
+            self._repl = ReplicationGroup(
+                self.h, followers,
+                plane="jnp" if plane == "host" else plane)
+            self._repl.publish()  # initial snapshot frame
+            self.metrics.followers = followers
 
     # -- consumers ----------------------------------------------------------
     @property
@@ -187,7 +206,8 @@ class ScenarioDriver:
             self._router = SessionRouter(
                 0, algo=self.h, store=self.store,
                 use_device_plane=(self.plane == "pallas"),
-                replicas_k=self.trace.meta.get("replicas_k", 1))
+                replicas_k=self.trace.meta.get("replicas_k", 1),
+                sync_mode=self.sync_mode)
         return self._router
 
     # -- traffic ------------------------------------------------------------
@@ -319,7 +339,18 @@ class ScenarioDriver:
             if t0 is None:
                 t0 = time.perf_counter()
             if not synced:
-                self.store.sync()
+                if self.sync_mode == "overlap":
+                    # dispatch without flipping: dispatch_us is all the hot
+                    # path would pay; the commit below closes the epoch at
+                    # the checker boundary so semantics match "block".
+                    self.store.sync_async()
+                    rec.dispatch_us = (time.perf_counter() - t0) * 1e6
+                else:
+                    self.store.sync()
+            # router-driven events in overlap mode also leave a pending
+            # handle (the router's _push_delta is async): land it before
+            # the checkers interrogate the flipped image.
+            self.store.flush()
             for arr in self.store.image().arrays.values():
                 if hasattr(arr, "block_until_ready"):
                     arr.block_until_ready()
@@ -327,7 +358,14 @@ class ScenarioDriver:
             st = self.store.last_sync
             if st is not None:
                 rec.sync_mode, rec.sync_words = st.mode, st.words
-            rec.violations = len(self._run_checkers(i, rec))
+            conv: list[Violation] = []
+            if self._repl is not None:
+                rec.follower_lag = max(self._repl.publish(), default=0)
+                if self.check:
+                    conv = check_follower_convergence(
+                        i, self.store.image(), self._repl.followers)
+                    self.violations.extend(conv)
+            rec.violations = len(self._run_checkers(i, rec)) + len(conv)
             self._degradation_point()
             self._pending_removed.clear()
             self._pending_added.clear()

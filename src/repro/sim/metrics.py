@@ -39,6 +39,13 @@ class EventRecord:
     keys: int = 0             # traffic batch size (lookup/assign/route)
     us_per_key: float = 0.0
     violations: int = 0
+    # overlapped sync (DESIGN.md §9): time to DISPATCH the async delta
+    # apply (the only part the hot path pays) vs sync_us (the full
+    # dispatch→flip→materialize latency); their gap is what overlap hides.
+    dispatch_us: float = 0.0
+    # cross-process replication: epochs the slowest follower was behind
+    # when this event's publish round shipped (0 = already converged).
+    follower_lag: int = 0
 
 
 class ScenarioMetrics:
@@ -47,6 +54,7 @@ class ScenarioMetrics:
     def __init__(self) -> None:
         self.records: list[EventRecord] = []
         self.degradation: list[tuple[float, float]] = []
+        self.followers = 0  # in-process replication followers attached
         self._crc = 0
         # per-op traffic accumulators: lookup, assign, and route timings
         # are different code paths and must not blend into one number
@@ -95,6 +103,15 @@ class ScenarioMetrics:
             "violations": sum(r.violations for r in recs),
             "fingerprint": self.fingerprint,
         }
+        overlapped = [r for r in syncs if r.dispatch_us]
+        if overlapped:
+            out["sync_dispatch_us_mean"] = float(
+                np.mean([r.dispatch_us for r in overlapped]))
+        if self.followers:
+            lags = [r.follower_lag for r in member]
+            out["followers"] = self.followers
+            out["follower_lag_max"] = int(max(lags, default=0))
+            out["follower_lag_mean"] = float(np.mean(lags)) if lags else 0.0
         for op, keys in self._keys.items():
             out[f"{op}_keys_total"] = keys
             out[f"{op}_us_per_key"] = self._secs[op] / keys * 1e6

@@ -212,6 +212,33 @@ def churn_storm_trace(seed: int = 0, *, w: int = 96, storms: int = 4,
                                                    "burst": burst})
 
 
+def churn_storm_xl_trace(seed: int = 0, *, w: int = 100_000, storms: int = 3,
+                         burst: int = 2_000, n_keys: int = 4096,
+                         select: str = "lifo") -> Trace:
+    """Churn storms at fleet scale (10⁵–10⁶ nodes): the trace behind the
+    async-overlap and follower-replication measurements (DESIGN.md §9.4).
+
+    Same storm grammar as :func:`churn_storm_trace` but the fleet is
+    100k–1M buckets and each storm removes thousands of nodes as ONE
+    composed delta, so the delta-apply scatter is big enough that hiding
+    it behind lookup traffic (``sync_mode="overlap"``) is measurable, and
+    the replicated frame stream carries real storm-sized payloads.
+    ``select`` defaults to ``lifo`` — victim resolution stays O(burst)
+    instead of O(w) rng draws, which matters at 10⁶ nodes — and Jump
+    degrades to LIFO anyway, so cross-algorithm cells stay comparable."""
+    if not 10_000 <= w <= 1_000_000:
+        raise ValueError("churn_storm_xl is the 1e4–1e6-node storm; use "
+                         "churn_storm below 1e4")
+    ev: list[TraceEvent] = [TraceEvent("lookup", n_keys=n_keys)]
+    for _ in range(storms):
+        ev.append(TraceEvent("remove", count=burst, select=select))
+        ev.append(TraceEvent("lookup", n_keys=n_keys))
+        ev.append(TraceEvent("add", count=max(1, burst // 2)))
+        ev.append(TraceEvent("lookup", n_keys=n_keys))
+    return Trace("churn_storm_xl", seed, w, ev,
+                 meta={"storms": storms, "burst": burst, "select": select})
+
+
 def domain_outage_trace(seed: int = 0, *, w: int = 64, num_domains: int = 8,
                         outages: int = 2, n_keys: int = 2048) -> Trace:
     """Correlated failure-domain outages: a whole rack/power-feed domain
@@ -303,6 +330,7 @@ SCENARIOS = {
     "incremental": incremental_trace,
     "flapping": flapping_trace,
     "churn_storm": churn_storm_trace,
+    "churn_storm_xl": churn_storm_xl_trace,
     "domain_outage": domain_outage_trace,
     "staged_scaling": staged_scaling_trace,
     "zipf_traffic": zipf_trace,

@@ -187,6 +187,109 @@ def test_store_log_overflow_falls_back_to_snapshot():
 
 
 # ---------------------------------------------------------------------------
+# async (deferred-flip) sync — DESIGN.md §9.1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_sync_async_defers_flip_until_commit(algo):
+    h = _mk(algo)
+    store = DeviceImageStore(h)
+    e0 = store.epoch
+    old_host = np.asarray([h.lookup(int(k)) for k in KEYS], np.int32)
+
+    if algo == "jump":
+        h.remove(h.size - 1)
+    else:
+        h.remove(sorted(h.working_set())[5])
+    handle = store.sync_async()
+    assert store.pending is handle and not handle.done
+    # the dispatch changed NOTHING observable: old epoch keeps serving
+    assert store.epoch == e0
+    np.testing.assert_array_equal(store.lookup(KEYS), old_host)
+
+    st = handle.commit()
+    assert handle.done and store.pending is None
+    assert st.mode == "delta" and store.epoch == h.epoch == st.epoch
+    _assert_matches_fresh(store, h)
+    assert handle.commit() is st  # idempotent after the flip
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_sync_async_poll_and_flush_paths(algo):
+    rng = np.random.default_rng(17)
+    h = _mk(algo)
+    store = DeviceImageStore(h)
+    for _ in range(10):
+        _churn_once(h, rng)
+        handle = store.sync_async()
+        while not store.poll():  # non-blocking path eventually lands it
+            pass
+        assert handle.done
+    _churn_once(h, rng)
+    store.sync_async()
+    st = store.flush()  # blocking path lands the pending handle
+    assert st is not None and store.pending is None
+    _assert_matches_fresh(store, h)
+    # a new sync() linearizes after any pending async epoch
+    _churn_once(h, rng)
+    store.sync_async()
+    _churn_once(h, rng)
+    store.sync()
+    assert store.pending is None and store.epoch == h.epoch
+    _assert_matches_fresh(store, h)
+    assert store.sync_async().done  # up-to-date → noop handle
+
+
+@pytest.mark.parametrize("plane", ["jnp", "pallas"])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_async_sync_concurrent_lookups_never_torn(algo, plane):
+    """The §9.1 atomicity law under real threads: lookups racing an
+    in-flight ``sync_async()`` observe a complete epoch — the full old
+    vector or the full new one, never a mix of the two."""
+    import threading
+
+    rng = np.random.default_rng(23)
+    h = _mk(algo)
+    store = DeviceImageStore(h, plane=plane)
+    keys = KEYS[:96] if plane == "pallas" else KEYS[:200]
+
+    def oracle():
+        return np.asarray([h.lookup(int(k)) for k in keys],
+                          np.int32).tobytes()
+
+    valid = {oracle()}
+    stop = threading.Event()
+    seen: list[bytes] = []
+    errors: list[Exception] = []
+
+    def hammer():
+        try:
+            while not stop.is_set():
+                seen.append(np.asarray(store.lookup(keys)).tobytes())
+        except Exception as e:  # surfaced in the main thread
+            errors.append(e)
+
+    t = threading.Thread(target=hammer)
+    t.start()
+    try:
+        for _ in range(6 if plane == "pallas" else 12):
+            _churn_once(h, rng)
+            valid.add(oracle())
+            handle = store.sync_async()
+            while not handle.poll():
+                pass
+    finally:
+        stop.set()
+        t.join()
+    assert not errors, errors
+    assert seen  # the hammer thread actually raced the flips
+    torn = [s for s in set(seen) if s not in valid]
+    assert not torn, f"{len(torn)} torn lookup result(s)"
+    store.flush()
+    _assert_matches_fresh(store, h)
+
+
+# ---------------------------------------------------------------------------
 # migration diff
 # ---------------------------------------------------------------------------
 

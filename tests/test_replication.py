@@ -1,0 +1,255 @@
+"""Cross-process delta replication (DESIGN.md §9.3): wire frames,
+follower image stores, and bit-identical leader/follower convergence.
+
+The in-process tests drive :class:`~repro.launch.replicate.ReplicationGroup`
+through real churn; the capstone forces a REAL 2-process
+``jax.distributed`` mesh (gloo CPU collectives) in subprocesses and
+asserts the follower converges to the leader's epoch and fingerprint.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import DeviceImageStore, image_fingerprint, make_hash
+from repro.launch.replicate import (KIND_DELTA, KIND_SNAPSHOT, DeltaPublisher,
+                                    FollowerImageStore, LoopbackChannel,
+                                    ReplicationGroup, decode_frame,
+                                    encode_delta, encode_snapshot)
+
+ALGOS = ("memento", "anchor", "dx", "jump")
+KEYS = np.random.default_rng(5).integers(0, 2**32, size=256, dtype=np.uint32)
+
+
+def _mk(algo, n0=64):
+    return make_hash(algo, n0, capacity=4 * n0, variant="32")
+
+
+def _churn_once(h, rng):
+    if h.working > 1 and rng.random() < 0.55:
+        if h.name == "jump":
+            h.remove(h.size - 1)
+        else:
+            h.remove(h.lookup(int(rng.integers(1 << 30))))
+    else:
+        try:
+            h.add()
+        except ValueError:
+            h.remove(h.lookup(int(rng.integers(1 << 30))))
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_snapshot_frame_roundtrip(algo):
+    h = _mk(algo)
+    img = h.device_image()
+    f = decode_frame(encode_snapshot(img))
+    assert f.kind == KIND_SNAPSHOT and f.algo == algo
+    assert f.epoch == img.epoch and f.n == img.n
+    assert set(f.arrays) == set(img.arrays)
+    for name, arr in img.arrays.items():
+        got = f.arrays[name]
+        assert got.dtype == np.asarray(arr).dtype
+        np.testing.assert_array_equal(got, np.asarray(arr))
+    assert all(f.scalars[k] == v for k, v in img.scalars.items()
+               if k in f.scalars)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_delta_frame_roundtrip(algo):
+    h = _mk(algo)
+    e0 = h.epoch
+    if algo == "jump":
+        h.remove(h.size - 1)
+    else:
+        h.remove(h.lookup(12345))
+    d = h.device_delta(e0)
+    f = decode_frame(encode_delta(d))
+    assert f.kind == KIND_DELTA and f.algo == algo
+    assert f.base_epoch == e0 and f.epoch == d.epoch and f.n == d.n
+    for name, (idx, vals) in d.updates.items():
+        if not len(idx):
+            continue
+        gi, gv = f.updates[name]
+        np.testing.assert_array_equal(gi, np.asarray(idx, np.int32))
+        np.testing.assert_array_equal(
+            gv, np.asarray(vals).astype(np.int64).astype(np.int32))
+
+
+def test_decode_rejects_garbage():
+    with pytest.raises(ValueError):
+        decode_frame(np.zeros(16, np.int32))
+    h = _mk("memento")
+    frame = encode_snapshot(h.device_image())
+    with pytest.raises(ValueError):  # trailing words
+        decode_frame(np.concatenate([frame, np.zeros(3, np.int32)]))
+
+
+# ---------------------------------------------------------------------------
+# follower convergence (in-process)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_loopback_follower_converges_bit_identical(algo):
+    rng = np.random.default_rng(9)
+    h = _mk(algo)
+    store = DeviceImageStore(h)
+    group = ReplicationGroup(h, num_followers=2)
+    group.publish()  # initial snapshot
+    for step in range(40):
+        _churn_once(h, rng)
+        store.sync()
+        lags = group.publish()
+        assert all(lag >= 1 for lag in lags)  # was behind before frames
+        assert group.converged(store.image())
+    fol = group.followers[0]
+    assert fol.epoch == store.epoch == h.epoch
+    assert fol.fingerprint() == image_fingerprint(store.image())
+    np.testing.assert_array_equal(fol.lookup(KEYS), store.lookup(KEYS))
+    assert fol.deltas > 0  # steady state rode the O(changed-words) path
+
+
+def test_growth_forces_snapshot_and_still_converges():
+    h = _mk("memento", n0=64)
+    store = DeviceImageStore(h)
+    group = ReplicationGroup(h, num_followers=1)
+    group.publish()
+    for _ in range(200):  # outgrow the published capacity
+        h.add()
+    store.sync()
+    group.publish()
+    fol = group.followers[0]
+    assert fol.snapshots >= 2  # init + capacity fallback
+    assert group.converged(store.image())
+    np.testing.assert_array_equal(fol.lookup(KEYS), store.lookup(KEYS))
+
+
+def test_log_overflow_forces_snapshot_and_still_converges():
+    h = _mk("anchor")
+    h._DELTA_LOG_CAP = 8
+    store = DeviceImageStore(h)
+    group = ReplicationGroup(h, num_followers=1)
+    group.publish()
+    rng = np.random.default_rng(3)
+    for _ in range(30):  # >> log cap between publishes
+        _churn_once(h, rng)
+    store.sync()
+    group.publish()
+    fol = group.followers[0]
+    assert fol.snapshots >= 2  # delta fell out of the bounded log
+    assert group.converged(store.image())
+
+
+def test_follower_rejects_mischained_delta():
+    h = _mk("dx")
+    pub = DeltaPublisher(h)
+    fol = FollowerImageStore()
+    with pytest.raises(ValueError):  # DELTA before any SNAPSHOT
+        e0 = h.epoch
+        h.remove(h.lookup(7))
+        fol.apply_frame(encode_delta(h.device_delta(e0)))
+    for f in pub.frames():
+        fol.apply_frame(f)
+    e1 = h.epoch
+    h.remove(h.lookup(99))
+    h.remove(h.lookup(100))
+    late = h.device_delta(h.epoch - 1)  # skips the first event
+    with pytest.raises(ValueError):
+        fol.apply_frame(encode_delta(late))
+    fol.apply_frame(encode_delta(h.device_delta(e1)))  # correct chain lands
+    assert fol.epoch == h.epoch
+
+
+def test_loopback_channel_drains_in_order():
+    ch = LoopbackChannel()
+    ch.publish([np.ones(4, np.int32), np.full(2, 7, np.int32)])
+    got = ch.drain()
+    assert [g.tolist() for g in got] == [[1, 1, 1, 1], [7, 7]]
+    assert ch.drain() == []
+
+
+def test_driver_replays_storm_with_followers():
+    from repro.sim import make_trace, replay
+
+    trace = make_trace("churn_storm", seed=1, w=64, storms=2, burst=8,
+                       n_keys=256)
+    r = replay(trace, algo="memento", plane="jnp", sync_mode="overlap",
+               followers=2)
+    assert r.ok, [str(v) for v in r.violations]
+    s = r.summary()
+    assert s["followers"] == 2 and s["follower_lag_max"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# the real thing: 2 OS processes over jax.distributed (gloo CPU mesh)
+# ---------------------------------------------------------------------------
+
+_WORKER = textwrap.dedent("""
+    import os, sys
+    import numpy as np
+    from repro.launch.mesh import init_distributed
+    pid = int(os.environ["REPL_PID"])
+    init_distributed("127.0.0.1:" + os.environ["REPL_PORT"], 2, pid)
+    from repro.core import DeviceImageStore, image_fingerprint, make_hash
+    from repro.launch.replicate import DistributedBroadcast, DeltaPublisher, \\
+        FollowerImageStore
+    chan = DistributedBroadcast()
+    rng = np.random.default_rng(0)
+    steps = 20
+    if pid == 0:
+        h = make_hash("memento", 64, variant="32")
+        store = DeviceImageStore(h)
+        pub = DeltaPublisher(h)
+        chan.exchange(pub.frames())
+        for _ in range(steps):
+            if rng.random() < 0.4 and h.size > 8:
+                h.remove(h.lookup(int(rng.integers(1 << 30))))
+            else:
+                h.add()
+            store.sync()
+            chan.exchange(pub.frames())
+        print("RESULT", store.epoch, image_fingerprint(store.image()),
+              flush=True)
+    else:
+        fol = FollowerImageStore()
+        for _ in range(steps + 1):
+            for f in chan.exchange():
+                fol.apply_frame(f)
+        print("RESULT", fol.epoch, fol.fingerprint(), flush=True)
+""")
+
+
+def test_two_process_distributed_convergence():
+    """Leader and follower in SEPARATE processes on a real
+    ``jax.distributed`` 2-process CPU mesh converge to the same epoch and
+    bit-identical image fingerprint."""
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    procs = []
+    for pid in range(2):
+        env = dict(os.environ, JAX_PLATFORMS="cpu", REPL_PID=str(pid),
+                   REPL_PORT=str(port),
+                   PYTHONPATH=src + os.pathsep + os.environ.get(
+                       "PYTHONPATH", ""))
+        procs.append(subprocess.Popen([sys.executable, "-c", _WORKER],
+                                      env=env, stdout=subprocess.PIPE,
+                                      stderr=subprocess.PIPE, text=True))
+    results = []
+    for p in procs:
+        out, err = p.communicate(timeout=240)
+        assert p.returncode == 0, f"worker failed:\n{out}\n{err}"
+        line = [ln for ln in out.splitlines() if ln.startswith("RESULT")][-1]
+        results.append(tuple(line.split()[1:]))
+    assert results[0] == results[1], results  # same epoch, same fingerprint
