@@ -40,7 +40,7 @@ import sys
 import time
 from pathlib import Path
 
-ALGOS = ("memento", "jump", "anchor", "dx")
+from repro.core import ALGORITHMS as ALGOS
 
 #: (trace name, trace kwargs) cells; every run includes the 10⁴-node
 #: churn_storm_xl grid the acceptance bar names — quick shrinks the

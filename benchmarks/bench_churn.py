@@ -1,5 +1,5 @@
 """Churn-latency benchmark: per-event control-plane cost under membership
-churn, for all four algorithms (DESIGN.md §3.5).
+churn, for every registry algorithm (DESIGN.md §3.5).
 
 This is the scenario the paper's O(1) update story (Algs. 2/3) implies but
 §VIII never times on hardware: a serving cluster rides out a stream of
@@ -36,12 +36,11 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks.timing import block_image as _block
-
-ALGOS = ("memento", "jump", "anchor", "dx")
+from repro.core import ALGORITHM_REGISTRY, ALGORITHMS as ALGOS
 
 
 def _churn_victim(h, rng):
-    if h.name == "jump":
+    if ALGORITHM_REGISTRY[h.name].lifo_only:
         return h.size - 1
     ws = sorted(h.working_set())
     return ws[int(rng.integers(len(ws)))]
@@ -65,7 +64,7 @@ def bench_churn(emit, sizes=(1024, 10_000), events=200, n_keys=4096,
             # a fleet that has already ridden out failures, not a pristine
             # one — this is where snapshot rebuilds pay Θ(state) per event.
             pre = int(0.3 * w)
-            if algo == "jump":
+            if ALGORITHM_REGISTRY[algo].lifo_only:
                 for _ in range(pre):
                     h.remove(h.size - 1)
             else:
@@ -153,14 +152,15 @@ def check_churn_claims(summary: dict, min_nodes: int = 10_000) -> bool:
     The HARD gate is the deterministic one: the delta's host→device payload
     must be a vanishing fraction of the snapshot's (O(changed-words) vs
     O(n)).  The wall-clock speedup is printed and recorded but advisory
-    only — mean timings on a shared CI runner invert under noise.  Jump is
-    exempt: its image IS a single scalar; there is nothing to beat.
+    only — mean timings on a shared CI runner invert under noise.  The
+    stateless algorithms (Jump, Power) are exempt: their image IS a single
+    scalar; there is nothing to beat.
     """
     ok = True
     for key, stats in summary.items():
         algo, w = key.rsplit("_w", 1)
         w = int(w)
-        if w < min_nodes or algo == "jump":
+        if w < min_nodes or not ALGORITHM_REGISTRY[algo].tables:
             continue
         good = (stats["delta_words_per_event"]
                 < stats["snapshot_words_per_event"])

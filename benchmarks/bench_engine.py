@@ -52,13 +52,14 @@ from pathlib import Path
 
 import numpy as np
 
-ALGOS = ("memento", "jump", "anchor", "dx")
+from repro.core import ALGORITHM_REGISTRY, ALGORITHMS as ALGOS
+
 SCENARIOS = ("stable", "oneshot", "incremental")
 
 
 def _remove(h, count, rng):
     for _ in range(count):
-        if h.name == "jump":
+        if ALGORITHM_REGISTRY[h.name].lifo_only:
             h.remove(h.size - 1)
         else:
             ws = sorted(h.working_set())

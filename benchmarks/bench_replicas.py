@@ -1,7 +1,7 @@
 """Replica-aware serving benchmark: k-replication throughput + bounded-load
 balance on the device data plane (DESIGN.md §4).
 
-For all four algorithms across the paper's §VIII scenario groups (stable /
+For every registry algorithm across the paper's §VIII scenario groups (stable /
 one-shot / incremental removals, ``variant="32"`` states) this measures:
 
   * **k-replica lookup throughput** — µs/key to compute k ∈ {1,2,3}
@@ -35,14 +35,15 @@ import numpy as np
 
 from benchmarks.timing import time_fn
 
-ALGOS = ("memento", "jump", "anchor", "dx")
+from repro.core import ALGORITHM_REGISTRY, ALGORITHMS as ALGOS
+
 K_VALUES = (1, 2, 3)
 C_VALUES = (1.05, 1.25, float("inf"))
 
 
 def _remove(h, count, rng):
     for _ in range(count):
-        if h.name == "jump":
+        if ALGORITHM_REGISTRY[h.name].lifo_only:
             h.remove(h.size - 1)
         else:
             ws = sorted(h.working_set())

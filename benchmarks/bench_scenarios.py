@@ -1,8 +1,9 @@
 """Scenario-engine benchmark: the paper's lifecycle scenarios (and the
 beyond-paper ones) replayed through the whole device stack (DESIGN.md §7).
 
-For every built-in trace in :data:`repro.sim.traces.SCENARIOS` × all four
-algorithms this replays the script through the production path (host
+For every built-in trace in :data:`repro.sim.traces.SCENARIOS` (minus
+the fleet-scale ``churn_storm_xl``, which is bench_async's cell) × every
+registry algorithm this replays the script through the production path (host
 algorithm → epoch deltas → :class:`~repro.core.DeviceImageStore` → unified
 engine / :class:`~repro.serve.router.SessionRouter`) and records moved-key
 counts, delta words transferred, epoch-flip latencies, and per-scenario
@@ -32,7 +33,7 @@ import sys
 import time
 from pathlib import Path
 
-ALGOS = ("memento", "jump", "anchor", "dx")
+from repro.core import ALGORITHMS as ALGOS
 
 #: scenarios replayed additionally on host + Pallas planes, gating
 #: bit-for-bit replay equality across all three (the others run jnp-only
@@ -50,7 +51,11 @@ def bench_scenarios(emit, *, w=64, n_keys=2048, probe_keys=1024,
     fingerprints_ok = True
     crossed: list[str] = []  # cross-plane cells that actually replayed
 
-    for name in (scenarios or SCENARIOS):
+    # churn_storm_xl needs a 1e4+-node fleet (its constructor enforces
+    # it) — that cell belongs to bench_async (DESIGN.md §9.4), not this
+    # sweep's w≈64 grids.
+    default = [s for s in SCENARIOS if s != "churn_storm_xl"]
+    for name in (scenarios or default):
         for algo in algos:
             kw = {}
             if name == "session_affinity":

@@ -1,5 +1,6 @@
-"""Paper-reproduction benchmarks: lookup time + memory for
-Memento / Jump / Anchor / Dx across the paper's scenarios (§VIII).
+"""Paper-reproduction benchmarks: lookup time + memory for every
+registered algorithm (Memento / Anchor / Dx / Jump / Power) across the
+paper's scenarios (§VIII).
 
 Scenarios (one function per paper figure group):
 
@@ -26,13 +27,17 @@ import time
 
 import numpy as np
 
-from repro.core import JumpHash, MementoHash, make_hash
+from repro.core import (ALGORITHM_REGISTRY, ALGORITHMS, JumpHash,
+                        MementoHash, PowerHash, make_hash)
 
 A_OVER_W = 10
 
+#: algorithms whose only legal removal is the highest bucket id
+_LIFO = frozenset(n for n in ALGORITHMS if ALGORITHM_REGISTRY[n].lifo_only)
+
 
 def _mk(algo: str, w: int, a_over_w: int = A_OVER_W, variant: str = "64"):
-    """All four algorithms through the one ConsistentHash factory."""
+    """Every registered algorithm through the one ConsistentHash factory."""
     return make_hash(algo, w, capacity=a_over_w * w, variant=variant)
 
 
@@ -60,13 +65,13 @@ def _remove_random(h, count, seed=1):
 
 def _remove_lifo(h, count):
     for _ in range(count):
-        if isinstance(h, (MementoHash, JumpHash)):
+        if isinstance(h, (MementoHash, JumpHash, PowerHash)):
             h.remove(h.n - 1)
         else:
             h.remove(max(h.working_set()))
 
 
-ALGOS = ("memento", "jump", "anchor", "dx")
+ALGOS = ALGORITHMS
 
 
 def bench_stable(sizes, n_keys, emit):
@@ -86,8 +91,8 @@ def bench_oneshot(sizes, n_keys, emit, frac=0.9):
         for case, remover in (("best", _remove_lifo), ("worst", _remove_random)):
             for algo in ALGOS:
                 h = _mk(algo, w)
-                if algo == "jump":
-                    _remove_lifo(h, removals)  # Jump supports LIFO only (paper)
+                if algo in _LIFO:
+                    _remove_lifo(h, removals)  # Jump/Power support LIFO only
                 else:
                     remover(h, removals)
                 us = _time_lookup(h, keys)
@@ -104,7 +109,7 @@ def bench_incremental(w0, fractions, n_keys, emit):
             for frac in fractions:
                 target = int(frac * w0)
                 step = target - removed
-                if algo == "jump" or case == "best":
+                if algo in _LIFO or case == "best":
                     _remove_lifo(h, step)
                 else:
                     _remove_random(h, step, seed=int(frac * 100))
@@ -141,7 +146,7 @@ def bench_quality(w, n_keys, emit, removals_frac=0.3):
     keys = _keys(n_keys)
     for algo in ALGOS:
         h = _mk(algo, w)
-        if algo != "jump":
+        if algo not in _LIFO:
             _remove_random(h, int(removals_frac * w))
         else:
             _remove_lifo(h, int(removals_frac * w))
@@ -161,7 +166,7 @@ def bench_quality(w, n_keys, emit, removals_frac=0.3):
              float(arr.std() / expected * np.sqrt(expected)))
 
         # minimal disruption: remove one more bucket
-        victim = sorted(h.working_set())[-1] if algo == "jump" else sorted(h.working_set())[len(h.working_set()) // 2]
+        victim = sorted(h.working_set())[-1] if algo in _LIFO else sorted(h.working_set())[len(h.working_set()) // 2]
         h.remove(victim)
         moved_bad = sum(1 for k in keys
                         if before[k] != victim and h.lookup(k) != before[k])
@@ -182,7 +187,7 @@ def bench_resize(w, n_ops, emit):
         victims = [ws[int(rng.integers(len(ws)))] for _ in range(n_ops)]
         t0 = time.perf_counter()
         for v in victims:
-            if algo == "jump":
+            if algo in _LIFO:
                 h.remove(h.n - 1)
             else:
                 h.remove(v)
@@ -196,7 +201,7 @@ def bench_resize(w, n_ops, emit):
 
 
 # ---------------------------------------------------------------------------
-# Device plane: bulk-lookup timings for all four algorithms (§VIII scenarios)
+# Device plane: bulk-lookup timings for every registry algorithm (§VIII scenarios)
 # ---------------------------------------------------------------------------
 
 def bench_device_scenarios(emit, w=1024, a_over_w=4, n_keys=8192,
@@ -253,7 +258,7 @@ def bench_device_scenarios(emit, w=1024, a_over_w=4, n_keys=8192,
         # one-shot removals
         h = _mk(algo, w, a_over_w=a_over_w, variant="32")
         removals = int(oneshot_frac * w)
-        if algo == "jump":
+        if algo in _LIFO:
             _remove_lifo(h, removals)
         else:
             _remove_random(h, removals)
@@ -264,7 +269,7 @@ def bench_device_scenarios(emit, w=1024, a_over_w=4, n_keys=8192,
         removed = 0
         for frac in inc_fractions:
             step = int(frac * w) - removed
-            if algo == "jump":
+            if algo in _LIFO:
                 _remove_lifo(h, step)
             else:
                 _remove_random(h, step, seed=int(frac * 100))

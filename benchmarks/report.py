@@ -30,7 +30,10 @@ RESULTS_DIR = Path(__file__).resolve().parent / "results"
 DRYRUN = RESULTS_DIR / "dryrun"
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
-ALGOS = ("memento", "jump", "anchor", "dx")
+# stdlib-only module (the docs CI job runs it with no numpy/jax installed),
+# so the registry cannot be imported here; tests/test_conformance.py asserts
+# this literal == repro.core.ALGORITHMS.
+ALGOS = ("memento", "anchor", "dx", "jump", "power")  # registry-literal-ok
 
 
 # ---------------------------------------------------------------------------

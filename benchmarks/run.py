@@ -90,7 +90,7 @@ def main(argv=None) -> int:
     if args.device_plane:
         from .bench_device_plane import bench_device_plane
         bench_device_plane(emit)
-        # all four algorithms × stable / one-shot / incremental on the
+        # every registry algorithm × stable / one-shot / incremental on the
         # device plane (jnp jit + Pallas), variant-32 states
         pb.bench_device_scenarios(emit)
     if args.churn:
@@ -103,7 +103,7 @@ def main(argv=None) -> int:
             bench_churn(emit)
     if args.replicas:
         # k-replica lookup throughput + bounded-load balance on the device
-        # planes, all four algorithms × §VIII scenarios (DESIGN.md §4)
+        # planes, every registry algorithm × §VIII scenarios (DESIGN.md §4)
         from .bench_replicas import bench_replicas
         if args.quick:
             bench_replicas(emit, w=256, n_keys=2048, pallas_keys=512,
@@ -219,10 +219,13 @@ def check_paper_claims(rows) -> bool:
         claim("sensitivity: Anchor memory grows with a/w", a_mem_hi > 2 * a_mem_lo)
 
     # quality: balance at multinomial-noise level, zero disruption violations
-    for algo in ("memento", "jump", "anchor", "dx"):
+    from repro.core import ALGORITHMS
+    for algo in ALGORITHMS:
         cvn = _get(rows, "quality_balance", algo, metric="cv_normalized")[0]
         claim(f"balance: {algo} normalized CV ≈ 1 (< 2.5)", cvn < 2.5)
-    for algo in ("memento", "anchor", "dx"):
+    for algo in ALGORITHMS:
+        if algo == "jump":  # LIFO victim: the disruption probe is trivial
+            continue
         claim(f"minimal disruption: {algo} zero bad moves",
               _get(rows, "quality_min_disruption", algo)[0] == 0)
         claim(f"monotonicity: {algo} zero bad moves",

@@ -4,7 +4,8 @@
 """
 import numpy as np
 
-from repro.core import AnchorHash, DxHash, JumpHash, MementoHash, MementoTables
+from repro.core import (AnchorHash, DxHash, JumpHash, MementoHash,
+                        MementoTables, PowerHash)
 from repro.kernels import ops
 
 
@@ -35,16 +36,19 @@ def main():
     print("\nbatched device-plane lookups:", np.asarray(out).tolist())
 
     # 5. baselines for comparison (fixed capacity a = 10·w)
-    for h in (JumpHash(10), AnchorHash(100, 10), DxHash(100, 10)):
+    for h in (JumpHash(10), AnchorHash(100, 10), DxHash(100, 10),
+              PowerHash(10)):
         print(f"{h.name:8s} lookup({keys[0]!r}) → {h.lookup(key_to_u64(keys[0]))}"
               f"   memory={h.memory_bytes()}B")
 
     # 6. every algorithm speaks the same protocol: one device plane for all
-    from repro.core import make_hash
+    from repro.core import ALGORITHM_REGISTRY, ALGORITHMS, make_hash
     print("\nprotocol device plane (host == device, variant='32'):")
-    for algo in ("memento", "anchor", "dx", "jump"):
+    for algo in ALGORITHMS:
         h = make_hash(algo, 10, variant="32")
-        if algo != "jump":
+        if ALGORITHM_REGISTRY[algo].lifo_only:
+            h.remove(h.size - 1)
+        else:
             h.remove(3)
         out = ops.device_lookup(batch, h.device_image())  # Pallas (interpret on CPU)
         assert [h.lookup(int(k)) for k in batch] == np.asarray(out).tolist()

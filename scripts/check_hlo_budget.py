@@ -40,13 +40,14 @@ SEED = 32
 
 
 def _state(algo):
-    from repro.core import make_hash
+    from repro.core import ALGORITHM_REGISTRY, make_hash
 
     h = make_hash(algo, W, capacity=CAPACITY, variant="32")
     rng = np.random.default_rng(SEED)
-    removals = min(REMOVALS, W - 1) if algo == "jump" else REMOVALS
+    lifo = ALGORITHM_REGISTRY[algo].lifo_only
+    removals = min(REMOVALS, W - 1) if lifo else REMOVALS
     for _ in range(removals):
-        if algo == "jump":
+        if lifo:
             h.remove(h.size - 1)
         else:
             ws = sorted(h.working_set())
@@ -69,13 +70,14 @@ def _account(images, op, keys):
 
 def measure() -> dict:
     """One entry per gated engine configuration: ``algo.op.table``."""
+    from repro.core import ALGORITHMS
     from repro.core.packing import pack_image
     from repro.kernels.engine import EngineOp, _op_table
 
     keys = np.random.default_rng(SEED).integers(0, 2**32, size=N_KEYS,
                                                 dtype=np.uint32)
     out: dict = {}
-    for algo in ("memento", "anchor", "dx", "jump"):
+    for algo in ALGORITHMS:
         h = _state(algo)
         dense = h.device_image()
         layouts = [("dense", dense), ("packed", pack_image(dense))]

@@ -5,9 +5,14 @@ Host control plane (paper-faithful):
   * :class:`JumpHash`     — the stateless core engine (LIFO-only)
   * :class:`AnchorHash`   — fixed-capacity baseline (in-place, Θ(a))
   * :class:`DxHash`       — fixed-capacity baseline (bit-array, Θ(a))
+  * :class:`PowerHash`    — O(1)-expected successor baseline (LIFO-only,
+    no fixed capacity; Leu 2023, arXiv 2307.12448)
 
-All four implement the :class:`ConsistentHash` protocol (host ops +
-``device_image()``); :func:`make_hash` is the name → implementation factory.
+All five implement the :class:`ConsistentHash` protocol (host ops +
+``device_image()``) and are registered in :data:`ALGORITHM_REGISTRY` —
+the ONE list every dispatch site (engine ops, wire ids, sim drivers,
+benchmarks, conformance tests) derives from; :func:`make_hash` is the
+name → implementation factory and :data:`ALGORITHMS` the ordered names.
 
 Device data plane:
   * :class:`DeviceImage`   — flat per-algorithm int32/uint32 device arrays
@@ -25,12 +30,17 @@ from .dx import DxHash
 from .image_store import DeviceImageStore, SyncHandle, SyncStats
 from .jump import JumpHash, jump32, jump64, np_jump32
 from .memento import MementoHash, random_state
-from .protocol import (REPLICA_SALT_CAP, ConsistentHash, DeviceImage,
-                       ImageDelta, ReplicatedLookup, apply_delta,
-                       image_fingerprint, make_hash, replica_sets)
+from .power import PowerHash, power32, power64
+from .protocol import (ALGORITHM_REGISTRY, ALGORITHMS, REPLICA_SALT_CAP,
+                       AlgoInfo, ConsistentHash, DeviceImage, ImageDelta,
+                       ReplicatedLookup, apply_delta, image_fingerprint,
+                       make_hash, replica_sets)
 from .tables import MementoTables, tables_from_state
 
 __all__ = [
+    "ALGORITHMS",
+    "ALGORITHM_REGISTRY",
+    "AlgoInfo",
     "AnchorHash",
     "BoundedLoad",
     "BoundedLoadMemento",
@@ -42,6 +52,7 @@ __all__ = [
     "JumpHash",
     "MementoHash",
     "MementoTables",
+    "PowerHash",
     "REPLICA_SALT_CAP",
     "ReplicatedLookup",
     "SyncHandle",
@@ -52,6 +63,8 @@ __all__ = [
     "jump64",
     "make_hash",
     "np_jump32",
+    "power32",
+    "power64",
     "random_state",
     "replica_sets",
     "tables_from_state",

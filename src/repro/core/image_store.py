@@ -49,7 +49,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .protocol import ConsistentHash, DeviceImage, ImageDelta, required_lengths, round_up
+from .protocol import (ALGORITHM_REGISTRY, ConsistentHash, DeviceImage,
+                       ImageDelta, required_lengths, round_up)
 
 
 @dataclass
@@ -168,7 +169,7 @@ class DeviceImageStore:
         import jax.numpy as jnp
 
         algo = getattr(self._ch, "image_algo", self._ch.name)
-        if algo in ("memento", "jump"):  # unbounded growth: headroom
+        if not ALGORITHM_REGISTRY[algo].fixed_capacity:  # growth: headroom
             cap = round_up(max(self.headroom * self._image_size_hint(), 128))
         else:  # fixed overall capacity a: padding beyond a is never read
             cap = None

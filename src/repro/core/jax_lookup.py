@@ -19,7 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.primitives import fmix32, hash2, jump32, step_u24 as _step_u24
+from repro.kernels.primitives import (fmix32, hash2, jump32, power32,
+                                      step_u24 as _step_u24)
 
 _U = jnp.uint32
 
@@ -134,6 +135,8 @@ def lookup_dispatch(algo, keys, arrays, scalars):
                          scalars[2])
     if algo == "jump":
         return jump32(keys, scalars[0])
+    if algo == "power":
+        return power32(keys, scalars[0])
     raise ValueError(f"unknown device image algo {algo!r}")
 
 

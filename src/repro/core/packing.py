@@ -20,7 +20,7 @@ VMEM-resident:
   int16 suffices for every a ≤ 32 767 (the paper's whole experimental
   range) at exactly half the bytes.
 * **dx**      — already a packed bitmap; the words array is shared as-is.
-* **jump**    — stateless: nothing to pack.
+* **jump**, **power** — stateless: nothing to pack.
 
 All planes stay bit-identical to the host oracles: packing changes the
 table *encoding*, never the lookup sequence (tests/test_packed.py).
@@ -30,21 +30,22 @@ from __future__ import annotations
 import numpy as np
 
 from .hashing import GOLDEN32, np_fmix32
-from .protocol import IMAGE_LAYOUT, DeviceImage, ImageDelta, round_up
+from .protocol import (ALGORITHM_REGISTRY, IMAGE_LAYOUT, DeviceImage,
+                       ImageDelta, round_up)
 
 #: slot_b sentinels: EMPTY terminates a probe chain, TOMBSTONE (a deleted
 #: entry) keeps it alive — readers probe past tombstones, writers reuse them.
 EMPTY = -1
 TOMBSTONE = -2
 
-#: per-algorithm packed layout: (scalar names, table array names).  Scalars
-#: are identical to the dense layout (the engine's scalar vector must not
-#: change); only the table arrays differ.
+#: per-algorithm packed layout: (scalar names, table array names), derived
+#: from the registry.  Scalars are identical to the dense layout (the
+#: engine's scalar vector must not change); only the table arrays differ —
+#: algorithms without a dedicated packed encoding share their dense tables.
 PACKED_LAYOUT: dict[str, tuple[tuple[str, ...], tuple[str, ...]]] = {
-    "memento": (("n",), ("state", "slot_b", "slot_c")),
-    "anchor": (("n",), ("A", "K")),
-    "dx": (("n", "max_probes", "fallback"), ("words",)),
-    "jump": (("n",), ()),
+    name: (info.scalars, info.packed_tables
+           if info.packed_tables is not None else info.tables)
+    for name, info in ALGORITHM_REGISTRY.items()
 }
 
 
@@ -199,8 +200,9 @@ def pack_image(image: DeviceImage, *, slot_headroom: int = 1) -> DeviceImage:
         arrays = {"A": A.astype(dtype), "K": K.astype(dtype)}
     elif image.algo == "dx":
         arrays = {"words": np.asarray(image.arrays["words"])}
-    elif image.algo != "jump":
+    elif image.algo not in IMAGE_LAYOUT:
         raise ValueError(f"unknown algo {image.algo!r}")
+    # remaining algos (jump, power) are stateless: nothing to pack
     handled = set(IMAGE_LAYOUT[image.algo][1])
     for name, arr in image.arrays.items():  # overlays (e.g. "load")
         if name not in handled:
@@ -236,8 +238,8 @@ def unpack_image(image: DeviceImage) -> DeviceImage:
                   "K": np.asarray(image.arrays["K"]).astype(np.int32)}
     elif image.algo == "dx":
         arrays = {"words": np.asarray(image.arrays["words"])}
-    elif image.algo == "jump":
-        arrays = {}
+    elif image.algo in PACKED_LAYOUT:
+        arrays = {}  # stateless (jump, power)
     else:
         raise ValueError(f"unknown algo {image.algo!r}")
     handled = set(PACKED_LAYOUT[image.algo][1])

@@ -1,0 +1,168 @@
+"""PowerHash ("Fast Consistent Hashing in Constant Time", Leu 2023,
+arXiv 2307.12448) — O(1) expected lookup with NO fixed cluster capacity.
+
+The algorithm is a power-of-two *level descent*.  Buckets are the prefix
+``[0, n)`` (jump-family semantics: ``add()`` appends bucket ``n``,
+``remove`` is LIFO-only), partitioned into levels: level ``j`` holds
+buckets ``[2^j, 2^(j+1))`` and the top level ``L = ⌊log2(n−1)⌋`` is
+truncated at ``n``.  A lookup draws one uniform variate per level from
+independent salted hashes, starting at the top:
+
+* **top level** — rejection-resample ``v ← hash(key, salt(L, t)) &
+  (2^(L+1)−1)`` for ``t = 0, 1, …`` until ``v < n`` (geometric, success
+  probability ``n/2^(L+1) > 1/2`` ⇒ < 2 expected draws).  Accept ``v``
+  when ``v ≥ 2^L`` (it names a top-level bucket), else descend;
+* **full levels** ``j = L−1 … 0`` — one draw ``v ← hash(key, salt(j, 0))
+  & (2^(j+1)−1)``; accept when ``v ≥ 2^j`` (probability exactly ½), else
+  descend.  Past level 0 the bucket is 0.
+
+Why this is correct (the three consistent-hashing laws):
+
+* **balance** — conditional on reaching level ``j``, the draw is uniform
+  over ``[0, 2^(j+1))``, so P(bucket = b) telescopes to exactly ``1/n``
+  for every ``b < n``;
+* **monotonicity** (minimal disruption) — growing ``n → n+1`` inside a
+  level, the accepted draw becomes the first ``v < n+1``: a key moves iff
+  an earlier rejected draw equals ``n`` — it moves TO the new bucket,
+  probability ``1/(n+1)``.  Crossing a power of two (``n = 2^(L+1)``) the
+  old top level is full and always accepts its ``t = 0`` draw — exactly
+  the draw the full-level rule uses once the level sinks below a new top
+  — so placements are preserved there too.  (The tempting shortcut of
+  collapsing all full levels into one masked hash is uniform but NOT
+  monotone across power-of-two crossings; the per-level independent
+  draws are load-bearing.)
+* **O(1) expected** — < 2 draws at the top, then each level exits with
+  probability ½: ≈ ≤ 4 hashes expected, independent of ``n`` (versus
+  Jump's Θ(ln n) chain); worst case is the ≤ 31-level descent.
+
+The rejection loop carries a deterministic try cap (``POWER_TRY_CAP``,
+miss probability ≤ 2^−64) whose fallback — descend — is identical on the
+host and device planes, the same vanishing-probability device-safety
+pattern as Dx's ``fallback`` bucket.
+
+``variant="32"`` draws from ``hash2_32`` — bit-identical to the jnp /
+Pallas ``power32`` in :mod:`repro.kernels.primitives`; ``variant="64"``
+is the host-only 64-bit flavour.  The device image is just the dynamic
+``n`` (like Jump), so deltas are O(1) words and a million-bucket
+follower replicates in one header frame.
+"""
+from __future__ import annotations
+
+from .hashing import hash2_32, hash2_64
+from .protocol import DeltaEmitter, DeviceImage, ReplicatedLookup
+
+#: salt offset of the level-descent draw stream: ``salt = POWER_SALT +
+#: (level << 6) + try``.  Level < 32 and try < 64 never collide, and the
+#: offset keeps the stream disjoint from the replica-walk salts
+#: (1 … REPLICA_SALT_CAP) and Jump's STEP_SALT stream.
+POWER_SALT = 0x506F5748  # "PoWH"
+
+#: top-level rejection draw budget; exhausting it (probability ≤ 2^-64 —
+#: each draw succeeds w.p. > 1/2) deterministically descends instead.
+POWER_TRY_CAP = 64
+
+
+def power_lookup_with(h2, key: int, n: int) -> tuple[int, int, int]:
+    """One level-descent lookup under hash ``h2(key, salt)``.
+
+    Returns ``(bucket, extra top-level tries, levels descended)`` — the
+    last two are the cost counters ``lookup_trace`` reports (both 0 on
+    the ≈75 % of lookups that settle on the first top-level draw).
+    """
+    if n <= 0:
+        raise ValueError("n must be positive")
+    if n == 1:
+        return 0, 0, 0
+    L = (n - 1).bit_length() - 1          # top level: buckets [2^L, n)
+    hi_mask = (1 << (L + 1)) - 1
+    base = POWER_SALT + (L << 6)
+    tries = 0
+    v = h2(key, base) & hi_mask
+    while v >= n and tries + 1 < POWER_TRY_CAP:
+        tries += 1
+        v = h2(key, base + tries) & hi_mask
+    if n > v >= (1 << L):
+        return v, tries, 0
+    # v landed below 2^L (or the try cap exhausted): descend full levels
+    levels = 0
+    for j in range(L - 1, -1, -1):
+        levels += 1
+        v = h2(key, POWER_SALT + (j << 6)) & ((1 << (j + 1)) - 1)
+        if v >= (1 << j):
+            return v, tries, levels
+    return 0, tries, levels
+
+
+def power64(key: int, num_buckets: int) -> int:
+    """64-bit PowerHash lookup (host-only flavour)."""
+    return power_lookup_with(hash2_64, key, num_buckets)[0]
+
+
+def power32(key: int, num_buckets: int) -> int:
+    """TPU-native PowerHash lookup — bit-identical to the device planes'
+    :func:`repro.kernels.primitives.power32`."""
+    return power_lookup_with(hash2_32, key, num_buckets)[0]
+
+
+class PowerHash(ReplicatedLookup, DeltaEmitter):
+    """Stateful wrapper exposing the uniform engine API (LIFO-only
+    resizes, like Jump — but O(1) expected lookups instead of Θ(ln n))."""
+
+    name = "power"
+
+    def __init__(self, initial_node_count: int, variant: str = "64"):
+        if initial_node_count <= 0:
+            raise ValueError("initial_node_count must be positive")
+        if variant == "64":
+            self._h2 = hash2_64
+        elif variant == "32":
+            self._h2 = hash2_32
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+        self.variant = variant
+        self.n = initial_node_count
+        self._init_delta_log()
+
+    def lookup(self, key: int) -> int:
+        return power_lookup_with(self._h2, key, self.n)[0]
+
+    def lookup_trace(self, key: int) -> tuple[int, int, int]:
+        """(bucket, extra top-level rejection draws, levels descended) —
+        the degradation-profile instrument.  Both counters are O(1) in
+        expectation at ANY size, so Power's profile stays flat where
+        fixed-capacity baselines turn their knee."""
+        return power_lookup_with(self._h2, key, self.n)
+
+    def add(self) -> int:
+        self.n += 1
+        self._record({}, self.n)  # the whole delta is the new n
+        return self.n - 1
+
+    def remove(self, b: int) -> None:
+        if b != self.n - 1:
+            raise ValueError("PowerHash only supports LIFO removals")
+        if self.n == 1:
+            raise ValueError("cannot remove the last bucket")
+        self.n -= 1
+        self._record({}, self.n)
+
+    def _image_n(self) -> int:
+        return self.n
+
+    @property
+    def size(self) -> int:
+        return self.n
+
+    @property
+    def working(self) -> int:
+        return self.n
+
+    def working_set(self) -> set[int]:
+        return set(range(self.n))
+
+    def memory_bytes(self) -> int:
+        return 8  # a single counter
+
+    def device_image(self, capacity: int | None = None) -> DeviceImage:
+        """Stateless: the image is just the dynamic n (lookup = power32)."""
+        return DeviceImage(algo=self.name, n=self.n, epoch=self._epoch)

@@ -151,7 +151,7 @@ def replica_sets(h, keys, k: int) -> np.ndarray:
 class DeviceImage:
     """Flat device image of a consistent-hash state.
 
-    * ``algo``    — "memento" | "anchor" | "dx" | "jump" (dispatch key),
+    * ``algo``    — a name in :data:`ALGORITHMS` (dispatch key),
     * ``n``       — the dynamic size scalar (b-array size for Memento/Jump,
       overall capacity ``a`` for Anchor/Dx),
     * ``arrays``  — named flat int32/uint32 arrays, lengths 128-padded,
@@ -208,13 +208,95 @@ class ImageDelta:
         return sum(2 * len(idx) for idx, _ in self.updates.values())
 
 
+@dataclass(frozen=True)
+class AlgoInfo:
+    """One algorithm's registry entry — THE single description every list
+    in the repo derives from (engine dispatch, wire ids, image layouts,
+    sim churn policy, benchmark grids, the conformance harness).  Adding
+    algorithm #N+1 means adding exactly one entry here plus its host class
+    and engine body; nothing else enumerates algorithms by hand
+    (``tests/test_conformance.py`` scans the sources to enforce that).
+
+    * ``factory``        — ``(initial_nodes, capacity, variant) → instance``
+      (lazy-imports the host class, preserving :func:`make_hash` semantics),
+    * ``scalars``        — dynamic image scalars, ``n`` always first,
+    * ``tables``         — dense-layout table array names,
+    * ``required``       — ``n → {table: min length}`` a lookup may gather,
+    * ``lifo_only``      — removals restricted to the highest bucket (the
+      jump-family contract the sim's victim policies degrade to),
+    * ``fixed_capacity`` — overall capacity ``a`` fixed at construction
+      (Anchor/Dx); growable algorithms get snapshot headroom instead,
+    * ``packed_tables``  — compact-layout table names when the packed
+      encoding differs from the dense one (``None`` → same names).
+    """
+
+    name: str
+    factory: object
+    scalars: tuple[str, ...]
+    tables: tuple[str, ...]
+    required: object
+    lifo_only: bool = False
+    fixed_capacity: bool = False
+    packed_tables: tuple[str, ...] | None = None
+
+
+def _memento_factory(n0: int, capacity, variant: str):
+    from .memento import MementoHash
+
+    return MementoHash(n0, variant=variant)
+
+
+def _anchor_factory(n0: int, capacity, variant: str):
+    from .anchor import AnchorHash
+
+    return AnchorHash(capacity or 10 * n0, n0, variant=variant)
+
+
+def _dx_factory(n0: int, capacity, variant: str):
+    from .dx import DxHash
+
+    return DxHash(capacity or 10 * n0, n0, variant=variant)
+
+
+def _jump_factory(n0: int, capacity, variant: str):
+    from .jump import JumpHash
+
+    return JumpHash(n0, variant=variant)
+
+
+def _power_factory(n0: int, capacity, variant: str):
+    from .power import PowerHash
+
+    return PowerHash(n0, variant=variant)
+
+
+#: Registry order is the replication wire format (``launch/replicate.py``
+#: frame ``algo_id`` = position) — append new algorithms, never reorder.
+ALGORITHM_REGISTRY: dict[str, AlgoInfo] = {
+    info.name: info for info in (
+        AlgoInfo("memento", _memento_factory, ("n",), ("repl",),
+                 lambda n: {"repl": n},
+                 packed_tables=("state", "slot_b", "slot_c")),
+        AlgoInfo("anchor", _anchor_factory, ("n",), ("A", "K"),
+                 lambda n: {"A": n, "K": n}, fixed_capacity=True),
+        AlgoInfo("dx", _dx_factory, ("n", "max_probes", "fallback"),
+                 ("words",), lambda n: {"words": -(-n // 32)},
+                 fixed_capacity=True),
+        AlgoInfo("jump", _jump_factory, ("n",), (), lambda n: {},
+                 lifo_only=True),
+        AlgoInfo("power", _power_factory, ("n",), (), lambda n: {},
+                 lifo_only=True),
+    )
+}
+
+#: algorithm names in wire-id order — the ONE list everything derives from
+ALGORITHMS: tuple[str, ...] = tuple(ALGORITHM_REGISTRY)
+
 #: per-algorithm device image layout: (scalar names, table array names).
 #: ``n`` is always the first scalar; the rest index ``image.scalars``.
 IMAGE_LAYOUT: dict[str, tuple[tuple[str, ...], tuple[str, ...]]] = {
-    "memento": (("n",), ("repl",)),
-    "anchor": (("n",), ("A", "K")),
-    "dx": (("n", "max_probes", "fallback"), ("words",)),
-    "jump": (("n",), ()),
+    name: (info.scalars, info.tables)
+    for name, info in ALGORITHM_REGISTRY.items()
 }
 
 
@@ -226,15 +308,10 @@ def image_scalar_vec(image: DeviceImage) -> list[int]:
 
 def required_lengths(algo: str, n: int) -> dict[str, int]:
     """Minimum array lengths a lookup at size ``n`` may gather from."""
-    if algo == "memento":
-        return {"repl": n}
-    if algo == "anchor":
-        return {"A": n, "K": n}
-    if algo == "dx":
-        return {"words": -(-n // 32)}
-    if algo == "jump":
-        return {}
-    raise ValueError(f"unknown algo {algo!r}")
+    info = ALGORITHM_REGISTRY.get(algo)
+    if info is None:
+        raise ValueError(f"unknown algo {algo!r}")
+    return info.required(n)
 
 
 def image_fingerprint(image: DeviceImage) -> str:
@@ -410,25 +487,14 @@ class ConsistentHash(Protocol):
 
 def make_hash(algo: str, initial_node_count: int, *, capacity: int | None = None,
               variant: str = "64"):
-    """Factory: algorithm name → ConsistentHash implementation.
+    """Factory: algorithm name → ConsistentHash implementation (registry
+    dispatch — see :data:`ALGORITHM_REGISTRY`).
 
     ``capacity`` only applies to the fixed-capacity baselines (Anchor/Dx);
     it defaults to the paper's a/w = 10 compromise.  ``variant="32"`` selects
     the TPU-native arithmetic that the device planes match bit-for-bit.
     """
-    from .anchor import AnchorHash
-    from .dx import DxHash
-    from .jump import JumpHash
-    from .memento import MementoHash
-
-    if algo == "memento":
-        return MementoHash(initial_node_count, variant=variant)
-    if algo == "jump":
-        return JumpHash(initial_node_count, variant=variant)
-    if algo == "anchor":
-        return AnchorHash(capacity or 10 * initial_node_count,
-                          initial_node_count, variant=variant)
-    if algo == "dx":
-        return DxHash(capacity or 10 * initial_node_count,
-                      initial_node_count, variant=variant)
-    raise ValueError(f"unknown algorithm {algo!r}")
+    info = ALGORITHM_REGISTRY.get(algo)
+    if info is None:
+        raise ValueError(f"unknown algorithm {algo!r}")
+    return info.factory(initial_node_count, capacity, variant)

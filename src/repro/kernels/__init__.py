@@ -2,7 +2,7 @@
 # — a single tiled Pallas dispatch (and matching jitted jnp program) whose
 # static EngineOp configuration covers plain lookup, k-replication,
 # bounded-load (incl. the fused k-replica-under-cap op), chain-walk
-# assignment rounds, and one/two-epoch diffs for all four algorithms.
+# assignment rounds, and one/two-epoch diffs for every registry algorithm.
 # ops.device_lookup is the public image-generic entry; primitives.py holds
 # the shared 32-bit hash arithmetic; ref.py the oracles kernel tests
 # compare against; delta_apply.py the epoch-delta scatter (§3.5).

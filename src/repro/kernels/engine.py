@@ -52,9 +52,9 @@ from repro.core.bounded import accept_in_index_order, walk_probe_bound
 from repro.core.hashing import GOLDEN32
 from repro.core.jax_lookup import lookup_dispatch
 from repro.core.packing import PACKED_LAYOUT, build_slots
-from repro.core.protocol import (IMAGE_LAYOUT, REPLICA_SALT_CAP,
+from repro.core.protocol import (ALGORITHMS, IMAGE_LAYOUT, REPLICA_SALT_CAP,
                                  image_scalar_vec)
-from .primitives import fmix32, gather1d, hash2, jump32, table_shape2d
+from .primitives import fmix32, gather1d, hash2, jump32, power32, table_shape2d
 
 _U = jnp.uint32
 
@@ -86,7 +86,7 @@ class EngineOp:
     """Static engine configuration — one value of this dataclass, one
     compiled program (jnp) / one Pallas launch (pallas).
 
-    * ``algo``    — "memento" | "anchor" | "dx" | "jump",
+    * ``algo``    — a name in :data:`repro.core.protocol.ALGORITHMS`,
     * ``mode``    — "lookup" (k replica slots, optionally bounded and/or
       diffed across two epochs) or "walk" (one bounded chain-walk step),
     * ``k``       — replica slots per key (1 = plain lookup),
@@ -108,7 +108,7 @@ class EngineOp:
     table: str = "dense"
 
     def __post_init__(self):
-        if self.algo not in ("memento", "anchor", "dx", "jump"):
+        if self.algo not in ALGORITHMS:
             raise ValueError(f"unknown algo {self.algo!r}")
         if self.mode not in ("lookup", "walk"):
             raise ValueError(f"unknown mode {self.mode!r}")
@@ -333,6 +333,8 @@ def algo_body(op: EngineOp, keys, tables, scalars):
         return dx_body(keys, tables[0], scalars[0], scalars[1], scalars[2])
     if op.algo == "jump":
         return jump32(keys, scalars[0])
+    if op.algo == "power":
+        return power32(keys, scalars[0])
     raise ValueError(f"unknown algo {op.algo!r}")
 
 
@@ -918,6 +920,12 @@ def jump_lookup(keys, n, *, block_rows: int = DEFAULT_BLOCK_ROWS,
                 interpret: bool = True):
     """Batched JumpHash lookup: keys uint32 [K] → bucket ids in [0, n)."""
     return _raw_lookup(EngineOp("jump"), [], [n], keys, block_rows, interpret)
+
+
+def power_lookup(keys, n, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                 interpret: bool = True):
+    """Batched PowerHash lookup: keys uint32 [K] → bucket ids in [0, n)."""
+    return _raw_lookup(EngineOp("power"), [], [n], keys, block_rows, interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -78,6 +78,59 @@ def jump32(keys, n):
     return b
 
 
+def power32(keys, n):
+    """Vectorized TPU-native PowerHash: keys uint32 [...], n a dynamic scalar.
+
+    The level-descent scheme of :mod:`repro.core.power`, lane-synchronous:
+    a scalar shift loop finds the top level ``L = ⌊log2(n−1)⌋`` (integer
+    exact — no float log), the top level rejection-resamples until every
+    lane draws ``v < n`` (geometric, ≥ ½ success per try, capped at
+    ``POWER_TRY_CAP`` with descend as the deterministic fallback), then
+    lanes still below ``2^L`` descend one full level per iteration.
+    Bit-identical to ``core.power.power32`` (``variant="32"``).
+    """
+    from repro.core.power import POWER_SALT, POWER_TRY_CAP
+
+    keys = jnp.asarray(keys).astype(_U)
+    n = jnp.asarray(n).astype(jnp.int32)
+
+    L = jax.lax.while_loop(lambda L: ((n - 1) >> (L + 1)) > 0,
+                           lambda L: L + 1, jnp.int32(0))
+    hi_mask = (_U(1) << (L + 1).astype(_U)) - _U(1)
+    base = _U(POWER_SALT) + (L.astype(_U) << _U(6))
+    v0 = hash2(keys, base) & hi_mask
+    t0 = jnp.ones(keys.shape, jnp.int32)
+
+    def rcond(state):
+        v, t = state
+        return jnp.any((v.astype(jnp.int32) >= n) & (t < POWER_TRY_CAP))
+
+    def rbody(state):
+        v, t = state
+        redo = (v.astype(jnp.int32) >= n) & (t < POWER_TRY_CAP)
+        cand = hash2(keys, base + t.astype(_U)) & hi_mask
+        return jnp.where(redo, cand, v), jnp.where(redo, t + 1, t)
+
+    v, _ = jax.lax.while_loop(rcond, rbody, (v0, t0))
+    vi = v.astype(jnp.int32)
+    out = jnp.where((vi < n) & (vi >= (jnp.int32(1) << L)), vi, jnp.int32(-1))
+
+    def dcond(state):
+        j, out = state
+        return (j >= 0) & jnp.any(out < 0)
+
+    def dbody(state):
+        j, out = state
+        mask_j = (_U(1) << (j + 1).astype(_U)) - _U(1)
+        cand = (hash2(keys, _U(POWER_SALT) + (j.astype(_U) << _U(6)))
+                & mask_j).astype(jnp.int32)
+        take = (out < 0) & (cand >= (jnp.int32(1) << j))
+        return j - 1, jnp.where(take, cand, out)
+
+    _, out = jax.lax.while_loop(dcond, dbody, (L - 1, out))
+    return jnp.where(out < 0, 0, out)
+
+
 def gather1d(table, idx):
     """Row gather of a flat VMEM table by a 2-D (or any-D) index block."""
     return jnp.take(table, idx.reshape(-1), axis=0).reshape(idx.shape)

@@ -39,7 +39,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.protocol import (IMAGE_LAYOUT, DeviceImage, ImageDelta,
+from repro.core.protocol import (ALGORITHM_REGISTRY, ALGORITHMS,
+                                 IMAGE_LAYOUT, DeviceImage, ImageDelta,
                                  image_fingerprint, required_lengths,
                                  round_up)
 
@@ -48,7 +49,9 @@ KIND_DELTA = 1
 KIND_SNAPSHOT = 2
 
 _MAGIC = 0x4D454D30  # "MEM0", truncated to int32 range
-_ALGO_IDS = {"memento": 0, "anchor": 1, "dx": 2, "jump": 3}
+# wire algo ids ARE registry order — the registry is append-only, so ids
+# stay stable across releases (memento=0, anchor=1, dx=2, jump=3, power=4)
+_ALGO_IDS = {name: i for i, name in enumerate(ALGORITHMS)}
 _ALGO_NAMES = {v: k for k, v in _ALGO_IDS.items()}
 
 
@@ -128,6 +131,9 @@ def decode_frame(buf: np.ndarray) -> Frame:
     if len(buf) < _HDR or buf[0] != _MAGIC:
         raise ValueError("not a replication frame")
     kind, algo_id = int(buf[1]), int(buf[2])
+    if algo_id not in _ALGO_NAMES:
+        raise ValueError(f"unknown wire algo id {algo_id} "
+                         f"(this build knows 0..{len(_ALGO_NAMES) - 1})")
     algo = _ALGO_NAMES[algo_id]
     base_epoch, epoch, n = int(buf[3]), int(buf[4]), int(buf[5])
     n_scal, n_blocks = int(buf[6]), int(buf[7])
@@ -183,9 +189,9 @@ class DeltaPublisher:
 
     def _snapshot_frame(self) -> np.ndarray:
         algo = getattr(self._ch, "image_algo", self._ch.name)
-        if algo in ("memento", "jump"):  # growable: same headroom rule as
-            cap = round_up(max(self.headroom * self._ch.size, 128))  # the store
-        else:
+        if not ALGORITHM_REGISTRY[algo].fixed_capacity:  # growable: same
+            cap = round_up(max(self.headroom * self._ch.size, 128))  # headroom
+        else:                                            # rule as the store
             cap = None
         img = self._ch.device_image(capacity=cap)
         self._caps = {k: int(v.shape[0]) for k, v in img.arrays.items()}

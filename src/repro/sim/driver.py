@@ -42,7 +42,7 @@ import numpy as np
 
 from repro.core import DeviceImageStore, make_hash
 from repro.core.hashing import np_fmix32
-from repro.core.protocol import replica_sets
+from repro.core.protocol import ALGORITHM_REGISTRY, replica_sets
 
 from .checkers import (Violation, candidate_hits, check_balance,
                        check_cap_invariant, check_follower_convergence,
@@ -58,12 +58,13 @@ def pick_victim(h, select: str, rng: np.random.Generator,
     """Resolve ONE removal victim against the live working set.
 
     The single churn-victim rule shared by the scenario driver and
-    ``examples/serve_cluster.py``.  Jump degrades every policy to LIFO
-    (its only legal removal); explicit ``bucket`` wins over any policy.
+    ``examples/serve_cluster.py``.  LIFO-only algorithms (Jump, Power)
+    degrade every policy to LIFO (their only legal removal); explicit
+    ``bucket`` wins over any policy.
     """
     if bucket is not None:
         return bucket
-    if h.name == "jump":
+    if ALGORITHM_REGISTRY[h.name].lifo_only:
         return h.size - 1
     ws = sorted(h.working_set())
     if select == "lifo":
@@ -84,14 +85,14 @@ def resolve_victims(h, ev: TraceEvent, rng: np.random.Generator,
     if ev.select == "domain":
         nd = num_domains or 1
         members = [b for b in sorted(h.working_set()) if b % nd == ev.domain]
-        if h.name == "jump":  # no arbitrary victims: a LIFO burst of the
-            # same size, so the lifecycle stays comparable across algos
+        if ALGORITHM_REGISTRY[h.name].lifo_only:  # no arbitrary victims: a
+            # LIFO burst of the same size keeps the lifecycle comparable
             return [h.size - 1 - i for i in range(min(len(members), budget))]
         return members[:budget]
     count = min(ev.count, budget)
     if ev.bucket is not None:
         return [ev.bucket]
-    if h.name == "jump":
+    if ALGORITHM_REGISTRY[h.name].lifo_only:
         return [h.size - 1 - i for i in range(count)]
     ws = np.asarray(sorted(h.working_set()))
     if ev.select == "random":

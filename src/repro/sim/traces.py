@@ -28,8 +28,9 @@ The grammar is deliberately small:
   ===========  ==========================================================
 
 Victim ``select`` policies: ``random`` (trace-rng uniform over working
-buckets), ``lifo`` (highest id — the only legal choice for Jump, which
-every policy degrades to on Jump states), ``first`` (lowest working id,
+buckets), ``lifo`` (highest id — the only legal choice for the LIFO-only
+algorithms Jump and Power, which degrade every policy to it), ``first``
+(lowest working id,
 deterministic without consuming rng), ``domain`` (every working bucket of
 failure domain ``domain``), or an explicit ``bucket``.
 
@@ -224,8 +225,9 @@ def churn_storm_xl_trace(seed: int = 0, *, w: int = 100_000, storms: int = 3,
     it behind lookup traffic (``sync_mode="overlap"``) is measurable, and
     the replicated frame stream carries real storm-sized payloads.
     ``select`` defaults to ``lifo`` — victim resolution stays O(burst)
-    instead of O(w) rng draws, which matters at 10⁶ nodes — and Jump
-    degrades to LIFO anyway, so cross-algorithm cells stay comparable."""
+    instead of O(w) rng draws, which matters at 10⁶ nodes — and the
+    LIFO-only algorithms (Jump, Power) degrade to it anyway, so
+    cross-algorithm cells stay comparable."""
     if not 10_000 <= w <= 1_000_000:
         raise ValueError("churn_storm_xl is the 1e4–1e6-node storm; use "
                          "churn_storm below 1e4")

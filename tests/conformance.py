@@ -1,0 +1,75 @@
+"""Shared algorithm-conformance helpers (imported by the test modules).
+
+THE one place tests get algorithm-generic state builders from: every
+helper derives its behaviour from :data:`repro.core.ALGORITHM_REGISTRY`
+(LIFO-only removal, fixed capacity, packed layout), so adding algorithm
+#6 to the registry automatically enrolls it in the whole conformance
+suite — no per-algorithm copies, no name special-cases.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ALGORITHM_REGISTRY, ALGORITHMS, make_hash
+
+#: the three lookup planes every algorithm must agree on bit-for-bit
+PLANES = ("host", "jnp", "pallas")
+
+#: device planes (arguments to engine_lookup & friends)
+DEVICE_PLANES = ("jnp", "pallas")
+
+
+def make(algo: str, n0: int = 40, variant: str = "32",
+         capacity_factor: int = 4):
+    """A fresh instance via the registry factory (capacity = factor·n0
+    for the fixed-capacity algorithms; ignored by the growable ones)."""
+    return make_hash(algo, n0, capacity=capacity_factor * n0,
+                     variant=variant)
+
+
+def lifo_only(algo: str) -> bool:
+    return ALGORITHM_REGISTRY[algo].lifo_only
+
+
+def pick_victim(h, rng: np.random.Generator) -> int:
+    """A legal removal victim: random working bucket, or the highest id
+    for LIFO-only algorithms."""
+    if lifo_only(h.name):
+        return h.size - 1
+    ws = sorted(h.working_set())
+    return ws[int(rng.integers(len(ws)))]
+
+
+def churn(h, removals: int, seed: int = 0) -> None:
+    """``removals`` legal removals (never below one working bucket)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(removals):
+        if h.working <= 1:
+            break
+        h.remove(pick_victim(h, rng))
+
+
+def churn_mixed(h, events: int, seed: int = 0,
+                p_remove: float = 0.5) -> None:
+    """``events`` random add/remove events (a shrinking-biased walk when
+    ``p_remove`` > 0.5), always keeping at least one working bucket."""
+    rng = np.random.default_rng(seed)
+    for _ in range(events):
+        if h.working > 1 and rng.random() < p_remove:
+            h.remove(pick_victim(h, rng))
+        else:
+            h.add()
+
+
+def state(algo: str, n0: int, removals: int, seed: int):
+    """Churned ``variant="32"`` state — the standard fixture the plane-
+    equivalence and engine-mode tests all build on."""
+    h = make(algo, n0)
+    churn(h, min(removals, n0 - 1) if lifo_only(algo) else removals,
+          seed=seed)
+    return h
+
+
+__all__ = ["ALGORITHMS", "ALGORITHM_REGISTRY", "DEVICE_PLANES", "PLANES",
+           "churn", "churn_mixed", "lifo_only", "make", "pick_victim",
+           "state"]

@@ -1,63 +1,23 @@
-"""Cross-plane equivalence, per algorithm: host ⇄ jnp oracle ⇄ Pallas kernel.
+"""Device-plane edge cases that are NOT algorithm-generic.
 
-For every algorithm the three planes must be BIT-identical on random
-``variant="32"`` states with random removals (LIFO for Jump):
-
-  * host   — per-key python lookup (the paper-methodology control plane),
-  * jnp    — ``core/jax_lookup`` lane-synchronous batched lookup,
-  * Pallas — the VMEM kernels, interpret mode on CPU (Mosaic on TPU).
-
-Memento's dense/compact sweeps stay in ``test_kernels.py``; this module is
-the algorithm-generic matrix the unified data plane (ISSUE 1) promises.
+The algorithm × plane bit-identity matrix (host ⇄ jnp ⇄ Pallas, every
+registry entry) lives in ``tests/test_conformance.py``; this module keeps
+the kernel-specific paths: block-shape independence for the fixed-capacity
+kernels, Dx's probe-bound fallback, and plane-name validation.
 """
 from __future__ import annotations
 
 import numpy as np
 import pytest
 
-from repro.core import make_hash
+from conformance import state
 from repro.kernels import ops, ref
-
-
-def _state(algo, n0, removals, seed):
-    h = make_hash(algo, n0, capacity=4 * n0, variant="32")
-    rng = np.random.default_rng(seed)
-    for _ in range(removals):
-        if algo == "jump":
-            h.remove(h.size - 1)
-        else:
-            ws = sorted(h.working_set())
-            h.remove(ws[int(rng.integers(len(ws)))])
-    return h
-
-
-CASES = [(16, 0), (16, 6), (200, 130), (1024, 512)]
-
-
-@pytest.mark.parametrize("algo", ["memento", "anchor", "dx", "jump"])
-@pytest.mark.parametrize("n0,removals", CASES)
-def test_three_planes_bit_identical(algo, n0, removals):
-    import jax.numpy as jnp
-
-    if algo == "jump":
-        removals = min(removals, n0 - 1)  # LIFO shrink keeps n ≥ 1
-    h = _state(algo, n0, removals, seed=n0 + removals)
-    image = h.device_image()
-    keys = np.random.default_rng(7).integers(0, 2**32, size=777, dtype=np.uint32)
-
-    host = ref.lookup_host(keys, h)
-    jnp_out = np.asarray(ref.lookup_image_ref(jnp.asarray(keys), image))
-    pallas = np.asarray(ops.device_lookup(keys, image, plane="pallas"))
-
-    np.testing.assert_array_equal(jnp_out, host)
-    np.testing.assert_array_equal(pallas, host)
-    assert set(pallas.tolist()) <= h.working_set()
 
 
 @pytest.mark.parametrize("algo", ["anchor", "dx"])
 def test_kernel_block_rows_sweep(algo):
     """Block-shape independence for the new kernels (Memento: test_kernels)."""
-    h = _state(algo, 256, 140, seed=9)
+    h = state(algo, 256, 140, seed=9)
     image = h.device_image()
     keys = np.random.default_rng(8).integers(0, 2**32, size=1500, dtype=np.uint32)
     want = ref.lookup_host(keys, h)
@@ -68,7 +28,7 @@ def test_kernel_block_rows_sweep(algo):
 
 def test_dx_fallback_path():
     """A probe-bound overrun must settle on the host's first-working bucket."""
-    h = _state("dx", 16, 0, seed=0)
+    h = state("dx", 16, 0, seed=0)
     image = h.device_image()
     image.scalars = dict(image.scalars, max_probes=1)  # force overruns
     keys = np.random.default_rng(10).integers(0, 2**32, size=400, dtype=np.uint32)
@@ -78,6 +38,6 @@ def test_dx_fallback_path():
 
 
 def test_device_lookup_rejects_unknown_plane():
-    h = _state("memento", 16, 0, seed=0)
+    h = state("memento", 16, 0, seed=0)
     with pytest.raises(ValueError):
         ops.device_lookup(np.zeros(4, np.uint32), h.device_image(), plane="cuda")

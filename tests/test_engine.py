@@ -1,51 +1,22 @@
-"""The unified lookup engine (DESIGN.md §6): every (algorithm × op-mode ×
-plane) cell bit-identical to the pre-engine kernels and the numpy/host
-oracles on random churned states, plus the mesh-sharded serving plane.
+"""Engine specifics beyond the conformance grid (DESIGN.md §6).
 
-Op modes covered: plain lookup, k-replica lookup, fused bounded-replica
-lookup (k replicas under a load cap, one launch), bounded chain-walk
-assignment, one-epoch→epoch diff, and the fused replica-set diff.  The
-sharded plane is checked on whatever mesh the process has (1 CPU device
-here) and, in ``test_property_engine.py``, on forced multi-device
-subprocesses for arbitrary mesh shapes.
+The (algorithm × op-mode × plane) bit-identity matrix — plain lookup,
+k-replica, fused bounded-replica, bounded assignment, epoch diff — lives
+in ``tests/test_conformance.py`` now, derived from the registry.  This
+module keeps what is NOT a per-algorithm conformance cell: the engine's
+error surfaces, Memento's compact table mode, cross-algorithm diffs, and
+the mesh-sharded serving plane on top of the engine.
 """
 from __future__ import annotations
 
 import numpy as np
 import pytest
 
+from conformance import ALGORITHMS, state
 from repro.core import DeviceImageStore, make_hash
-from repro.core.protocol import replica_sets
 from repro.kernels import engine, ref
 
-ALGOS = ["memento", "anchor", "dx", "jump"]
 PLANES = ["jnp", "pallas"]
-
-
-def _state(algo, n0, removals, seed):
-    h = make_hash(algo, n0, capacity=4 * n0, variant="32")
-    rng = np.random.default_rng(seed)
-    removals = min(removals, n0 - 1) if algo == "jump" else removals
-    for _ in range(removals):
-        if algo == "jump":
-            h.remove(h.size - 1)
-        else:
-            ws = sorted(h.working_set())
-            h.remove(ws[int(rng.integers(len(ws)))])
-    return h
-
-
-def _churn(h, events, seed):
-    rng = np.random.default_rng(seed)
-    for _ in range(events):
-        if h.name != "jump" and h.working > 2 and rng.random() < 0.7:
-            ws = sorted(h.working_set())
-            h.remove(ws[int(rng.integers(len(ws)))])
-        elif h.name == "jump" and h.size > 2 and rng.random() < 0.7:
-            h.remove(h.size - 1)
-        else:
-            h.add()
-
 
 _load_len = engine.bounded_load_len  # the one sizing rule for load words
 
@@ -54,60 +25,13 @@ KEYS = np.random.default_rng(77).integers(0, 2**32, size=700, dtype=np.uint32)
 
 
 # ---------------------------------------------------------------------------
-# Lookup modes vs host oracles, all planes
+# Error surfaces and engine-only modes
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("algo", ALGOS)
 @pytest.mark.parametrize("plane", PLANES)
-def test_lookup_matches_host(algo, plane):
-    h = _state(algo, 96, 40, seed=1)
-    out = np.asarray(engine.engine_lookup(KEYS, h.device_image(), plane=plane))
-    np.testing.assert_array_equal(out, ref.lookup_host(KEYS, h))
-
-
-@pytest.mark.parametrize("algo", ALGOS)
-@pytest.mark.parametrize("plane", PLANES)
-@pytest.mark.parametrize("k", [2, 3])
-def test_lookup_k_matches_host(algo, plane, k):
-    h = _state(algo, 64, 20, seed=2)
-    out = np.asarray(engine.engine_lookup(KEYS[:128], h.device_image(), k=k,
-                                          plane=plane))
-    np.testing.assert_array_equal(out, replica_sets(h, KEYS[:128], k))
-    assert all(len(set(row)) == k for row in out.tolist())
-
-
-@pytest.mark.parametrize("algo", ALGOS)
-@pytest.mark.parametrize("plane", PLANES)
-def test_bounded_replica_lookup_fused(algo, plane):
-    """The fused k-replica-under-cap op: one launch, every slot below the
-    cap, bit-identical to the host salted walk with the load reject rule."""
-    h = _state(algo, 64, 16, seed=3)
-    image = h.device_image()
-    load = np.zeros(_load_len(image), np.int32)
-    cap = 7
-    ws = sorted(h.working_set())
-    load[ws[: len(ws) // 3]] = cap  # a third of the fleet is full
-    want = engine.bounded_replica_sets(h, KEYS[:96], 2, load, cap)
-    got = np.asarray(engine.engine_lookup(KEYS[:96], image, k=2, load=load,
-                                          cap=cap, plane=plane))
-    np.testing.assert_array_equal(got, want)
-    assert (load[got] < cap).all()
-    # bounded slot 0 may legitimately differ from the unbounded primary
-    plain = np.asarray(engine.engine_lookup(KEYS[:96], image, plane=plane))
-    moved = got[:, 0] != plain
-    assert (load[plain[moved]] >= cap).all()
-    # an infeasible cap (< k buckets under cap) must raise, like the host
-    # oracle — never silently return over-cap buckets
-    full_load = np.full_like(load, cap)
-    with pytest.raises(RuntimeError, match="salt budget"):
-        engine.engine_lookup(KEYS[:16], image, k=2, load=full_load, cap=cap,
-                             plane=plane)
-
-
-@pytest.mark.parametrize("plane", PLANES)
-def test_bounded_replica_duplicate_rows_raise(plane):
-    """Fewer than k DISTINCT below-cap buckets (primary itself below cap)
-    must raise too — not return duplicate replica sets."""
+def test_bounded_replica_infeasible_cap_raises(plane):
+    """Fewer than k DISTINCT below-cap buckets must raise, like the host
+    oracle — never silently return duplicate or over-cap replica sets."""
     h = make_hash("memento", 2, variant="32")
     image = h.device_image()
     load = np.zeros(_load_len(image), np.int32)
@@ -115,53 +39,15 @@ def test_bounded_replica_duplicate_rows_raise(plane):
     with pytest.raises(RuntimeError, match="salt budget"):
         engine.engine_lookup(KEYS[:32], image, k=2, load=load, cap=5,
                              plane=plane)
-
-
-@pytest.mark.parametrize("algo", ALGOS)
-@pytest.mark.parametrize("plane", PLANES)
-def test_epoch_diff_and_replica_set_diff(algo, plane):
-    h = _state(algo, 96, 30, seed=4)
-    store = DeviceImageStore(h)
-    _churn(h, 5, seed=5)
-    store.sync()
-    old, new = store.previous_image(), store.image()
-    d = engine.engine_diff(KEYS, old, new, plane=plane)
-    np.testing.assert_array_equal(
-        d.old, np.asarray(engine.engine_lookup(KEYS, old, plane="jnp")))
-    np.testing.assert_array_equal(
-        d.new, np.asarray(engine.engine_lookup(KEYS, new, plane="jnp")))
-    np.testing.assert_array_equal(d.moved, d.old != d.new)
-    # fused replica-set diff == per-epoch replica lookups
-    dk = engine.engine_diff(KEYS[:200], old, new, k=2, plane=plane)
-    np.testing.assert_array_equal(
-        dk.old, np.asarray(engine.engine_lookup(KEYS[:200], old, k=2,
-                                                plane="jnp")))
-    np.testing.assert_array_equal(
-        dk.new, np.asarray(engine.engine_lookup(KEYS[:200], new, k=2,
-                                                plane="jnp")))
-    np.testing.assert_array_equal(dk.moved, (dk.old != dk.new).any(axis=1))
-
-
-@pytest.mark.parametrize("algo", ALGOS)
-@pytest.mark.parametrize("plane", PLANES)
-def test_bounded_assign_matches_reference(algo, plane):
-    from repro.core.bounded import bounded_assign_ref
-
-    h = _state(algo, 48, 12, seed=6)
-    image = h.device_image()
-    keys = KEYS[:300]
-    cap = max(1, int(np.ceil(1.25 * len(keys) / h.working)))
-    load0 = np.zeros(_load_len(image), np.int32)
-    want, want_load = bounded_assign_ref(h, keys, load0, cap)
-    got, got_load = engine.bounded_assign(keys, image, load0, cap,
-                                          plane=plane)
-    np.testing.assert_array_equal(got, want)
-    np.testing.assert_array_equal(got_load, want_load)
-    assert got_load.max() <= cap
+    # the fully-saturated fleet (zero below-cap buckets) raises too
+    full = np.full_like(load, 5)
+    with pytest.raises(RuntimeError, match="salt budget"):
+        engine.engine_lookup(KEYS[:16], image, k=2, load=full, cap=5,
+                             plane=plane)
 
 
 def test_memento_compact_all_modes():
-    h = _state("memento", 200, 130, seed=7)
+    h = state("memento", 200, 130, seed=7)
     image = h.device_image()
     host = ref.lookup_host(KEYS, h)
     out = np.asarray(engine.engine_lookup(KEYS, image, plane="pallas",
@@ -178,7 +64,7 @@ def test_engine_op_validation():
         engine.EngineOp("anchor", table="compact")
     with pytest.raises(ValueError):
         engine.EngineOp("memento", mode="walk", k=2)
-    h = _state("memento", 16, 0, seed=0)
+    h = state("memento", 16, 0, seed=0)
     with pytest.raises(ValueError):
         engine.engine_lookup(KEYS[:4], h.device_image(), plane="cuda")
     with pytest.raises(ValueError):
@@ -196,8 +82,8 @@ def test_shim_modules_are_gone():
 
 def test_cross_algo_diff_jnp():
     """Algorithm migrations diff across table layouts on the jnp plane."""
-    hm = _state("memento", 64, 10, seed=10)
-    ha = _state("anchor", 64, 10, seed=10)
+    hm = state("memento", 64, 10, seed=10)
+    ha = state("anchor", 64, 10, seed=10)
     d = engine.engine_diff(KEYS[:128], hm.device_image(), ha.device_image(),
                            plane="jnp")
     np.testing.assert_array_equal(d.old, ref.lookup_host(KEYS[:128], hm))
@@ -211,11 +97,11 @@ def test_cross_algo_diff_jnp():
 # Sharded serving plane (this process' devices; multi-device: property test)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("algo", ALGORITHMS)
 def test_sharded_plane_matches_single_device(algo):
     from repro.serve.plane import ShardedLookupPlane
 
-    h = _state(algo, 96, 30, seed=11)
+    h = state(algo, 96, 30, seed=11)
     store = DeviceImageStore(h)
     plane = ShardedLookupPlane(store)
     keys = np.random.default_rng(12).integers(0, 2**32, size=4321,
@@ -230,7 +116,7 @@ def test_sharded_plane_matches_single_device(algo):
 def test_sharded_plane_stream_tracks_epochs():
     from repro.serve.plane import ShardedLookupPlane
 
-    h = _state("memento", 64, 10, seed=13)
+    h = state("memento", 64, 10, seed=13)
     store = DeviceImageStore(h)
     plane = ShardedLookupPlane(store)
     keys = np.random.default_rng(14).integers(0, 2**32, size=1000,

@@ -9,9 +9,10 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
+from conformance import (ALGORITHM_REGISTRY, ALGORITHMS as ALGOS, lifo_only,
+                         pick_victim)
 from repro.core import DeviceImageStore, apply_delta, make_hash
 
-ALGOS = ("memento", "anchor", "dx", "jump")
 KEYS = np.random.default_rng(3).integers(0, 2**32, size=400, dtype=np.uint32)
 
 
@@ -21,20 +22,16 @@ def _mk(algo, n0=64):
 
 def _churn_once(h, rng):
     """One random remove-or-add; returns the op performed."""
-    if h.working > 1 and (rng.random() < 0.6 or h.name in ("anchor", "dx")
-                          and not h.R):
-        if h.name == "jump":
-            h.remove(h.size - 1)
-        else:
-            ws = sorted(h.working_set())
-            h.remove(ws[int(rng.integers(len(ws)))])
+    if h.working > 1 and (rng.random() < 0.6
+                          or (ALGORITHM_REGISTRY[h.name].fixed_capacity
+                              and not h.R)):
+        h.remove(pick_victim(h, rng))
         return "remove"
     try:
         h.add()
         return "add"
     except ValueError:  # fixed-capacity algo at full fleet
-        ws = sorted(h.working_set())
-        h.remove(ws[int(rng.integers(len(ws)))])
+        h.remove(pick_victim(h, rng))
         return "remove"
 
 
@@ -59,7 +56,7 @@ def test_deltas_are_o_changed_words(algo):
     """A single event's delta must scatter O(1) words, not O(n)."""
     h = _mk(algo, n0=96)
     e0 = h.epoch
-    if algo == "jump":
+    if lifo_only(algo):
         h.remove(h.size - 1)
     else:
         h.remove(sorted(h.working_set())[10])
@@ -197,7 +194,7 @@ def test_sync_async_defers_flip_until_commit(algo):
     e0 = store.epoch
     old_host = np.asarray([h.lookup(int(k)) for k in KEYS], np.int32)
 
-    if algo == "jump":
+    if lifo_only(algo):
         h.remove(h.size - 1)
     else:
         h.remove(sorted(h.working_set())[5])
@@ -301,7 +298,7 @@ def test_migration_diff_matches_host(algo, plane):
     h = _mk(algo)
     store = DeviceImageStore(h)
     before = np.asarray([h.lookup(int(k)) for k in KEYS], np.int32)
-    victim = (h.size - 1 if algo == "jump"
+    victim = (h.size - 1 if lifo_only(algo)
               else sorted(h.working_set())[len(h.working_set()) // 3])
     h.remove(victim)
     store.sync()
@@ -392,7 +389,7 @@ def test_shard_placement_plans_on_device_plane():
 def test_elastic_cluster_honours_algo_for_ckpt_buckets():
     from repro.runtime.elastic import ElasticCluster
 
-    for algo in ("memento", "anchor", "dx"):
+    for algo in (a for a in ALGOS if not lifo_only(a)):
         c = ElasticCluster(num_hosts=8, num_shards=64, algo=algo)
         assert c.ckpt_ch.name == algo
         st = c.state()

@@ -1,48 +1,27 @@
 """Packed (compact) device images (DESIGN.md §8.2): bit-identical lookups
-across host / jnp / Pallas for all four algorithms, dtype narrowing and
-exact unpack round-trips, epoch-delta application on packed tables through
-the compact DeviceImageStore, and the snapshot fallbacks when the packed
-buffers cannot absorb a delta."""
+across host / jnp / Pallas for every registry algorithm, dtype narrowing
+and exact unpack round-trips, epoch-delta application on packed tables
+through the compact DeviceImageStore, and the snapshot fallbacks when the
+packed buffers cannot absorb a delta."""
 from __future__ import annotations
 
 import numpy as np
 import pytest
 
+from conformance import ALGORITHMS as ALGOS, churn_mixed, state as _state
 from repro.core import DeviceImageStore, make_hash
 from repro.core.packing import (EMPTY, TOMBSTONE, build_slots,
                                 image_table_bytes, narrow_dtype, pack_image,
                                 packed_delta_updates, unpack_image)
 from repro.kernels import engine, ref
 
-ALGOS = ["memento", "anchor", "dx", "jump"]
 PLANES = ["jnp", "pallas"]
 
 KEYS = np.random.default_rng(99).integers(0, 2**32, size=700, dtype=np.uint32)
 
 
-def _state(algo, n0, removals, seed):
-    h = make_hash(algo, n0, capacity=4 * n0, variant="32")
-    rng = np.random.default_rng(seed)
-    removals = min(removals, n0 - 1) if algo == "jump" else removals
-    for _ in range(removals):
-        if algo == "jump":
-            h.remove(h.size - 1)
-        else:
-            ws = sorted(h.working_set())
-            h.remove(ws[int(rng.integers(len(ws)))])
-    return h
-
-
 def _churn(h, events, seed):
-    rng = np.random.default_rng(seed)
-    for _ in range(events):
-        if h.name != "jump" and h.working > 2 and rng.random() < 0.7:
-            ws = sorted(h.working_set())
-            h.remove(ws[int(rng.integers(len(ws)))])
-        elif h.name == "jump" and h.size > 2 and rng.random() < 0.7:
-            h.remove(h.size - 1)
-        else:
-            h.add()
+    churn_mixed(h, events, seed=seed, p_remove=0.7)
 
 
 # ---------------------------------------------------------------------------

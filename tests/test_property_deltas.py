@@ -15,9 +15,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from conformance import (ALGORITHM_REGISTRY, ALGORITHMS as ALGOS,  # noqa: E402
+                         pick_victim)
 from repro.core import DeviceImageStore, make_hash  # noqa: E402
-
-ALGOS = ("memento", "anchor", "dx", "jump")
 
 # events per hypothesis example; with max_examples=5 every (algo, plane)
 # cell sees ≥1000 random events
@@ -27,18 +27,14 @@ SYNC_EVERY = {"jnp": 5, "pallas": 25}  # interpret-mode applies are pricier
 
 def _churn_once(h, rng):
     if h.working > 1 and (rng.random() < 0.6
-                          or (h.name in ("anchor", "dx") and not h.R)):
-        if h.name == "jump":
-            h.remove(h.size - 1)
-        else:
-            ws = sorted(h.working_set())
-            h.remove(ws[int(rng.integers(len(ws)))])
+                          or (ALGORITHM_REGISTRY[h.name].fixed_capacity
+                              and not h.R)):
+        h.remove(pick_victim(h, rng))
     else:
         try:
             h.add()
         except ValueError:
-            ws = sorted(h.working_set())
-            h.remove(ws[int(rng.integers(len(ws)))])
+            h.remove(pick_victim(h, rng))
 
 
 def _assert_bit_identical(store, h):

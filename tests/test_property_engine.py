@@ -30,10 +30,10 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from conformance import ALGORITHMS as ALGOS, lifo_only, pick_victim  # noqa: E402
 from repro.core import make_hash  # noqa: E402
 from repro.kernels import engine, ref  # noqa: E402
 
-ALGOS = ("memento", "anchor", "dx", "jump")
 NDEV = 4  # forced host-platform device count in the subprocess
 MESH_SHAPES = ((1,), (2,), (4,), (2, 2), (1, 4), (2, 1))
 
@@ -42,11 +42,8 @@ def _churned(algo, seed):
     rng = np.random.default_rng(seed)
     h = make_hash(algo, 48, capacity=192, variant="32")
     for _ in range(int(rng.integers(5, 40))):
-        if h.name != "jump" and h.working > 2 and rng.random() < 0.65:
-            ws = sorted(h.working_set())
-            h.remove(ws[int(rng.integers(len(ws)))])
-        elif h.name == "jump" and h.size > 2 and rng.random() < 0.65:
-            h.remove(h.size - 1)
+        if h.working > 2 and rng.random() < 0.65:
+            h.remove(pick_victim(h, rng))
         else:
             h.add()
     return h
@@ -76,11 +73,11 @@ _SUBPROCESS_CHECK = textwrap.dedent("""
     from repro.launch.mesh import _mesh
     from repro.serve.plane import ShardedLookupPlane
 
-    shape, algo, seed = {shape!r}, {algo!r}, {seed}
+    shape, algo, seed, lifo = {shape!r}, {algo!r}, {seed}, {lifo}
     rng = np.random.default_rng(seed)
     h = make_hash(algo, 64, capacity=256, variant="32")
     for _ in range(int(rng.integers(3, 25))):
-        if algo == "jump":
+        if lifo:
             h.remove(h.size - 1) if h.size > 2 else h.add()
         elif h.working > 2 and rng.random() < 0.7:
             ws = sorted(h.working_set())
@@ -110,7 +107,7 @@ def _run_mesh_case(shape: tuple, algo: str, seed: int):
     src = str(Path(__file__).resolve().parent.parent / "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     code = _SUBPROCESS_CHECK.format(ndev=NDEV, shape=tuple(shape), algo=algo,
-                                    seed=seed)
+                                    seed=seed, lifo=lifo_only(algo))
     return subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=600)
 

@@ -21,9 +21,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from conformance import ALGORITHMS as ALGOS, lifo_only, pick_victim  # noqa: E402
 from repro.core import make_hash, replica_sets  # noqa: E402
 
-ALGOS = ("memento", "anchor", "dx", "jump")
 KEYS = np.random.default_rng(11).integers(0, 2**32, size=128, dtype=np.uint32)
 
 
@@ -31,11 +31,7 @@ def _churn(h, rng, events):
     for _ in range(events):
         if h.working > 2 and (rng.random() < 0.6
                               or getattr(h, "R", None) in ([], None)):
-            if h.name == "jump":
-                h.remove(h.size - 1)
-            else:
-                ws = sorted(h.working_set())
-                h.remove(ws[int(rng.integers(len(ws)))])
+            h.remove(pick_victim(h, rng))
         else:
             try:
                 h.add()
@@ -62,7 +58,7 @@ def test_host_jnp_replica_sets_bit_identical_under_churn(algo, n0, events,
 
 
 @settings(max_examples=10, deadline=None)
-@given(algo=st.sampled_from(("memento", "anchor", "dx")),
+@given(algo=st.sampled_from([a for a in ALGOS if not lifo_only(a)]),
        n0=st.integers(min_value=16, max_value=96),
        events=st.integers(min_value=0, max_value=30),
        seed=st.integers(min_value=0, max_value=2**31))

@@ -15,9 +15,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from conformance import ALGORITHMS as ALGOS  # noqa: E402
 from repro.sim import Trace, TraceEvent, replay  # noqa: E402
-
-ALGOS = ("memento", "anchor", "dx", "jump")
 
 
 def _random_script(draw) -> tuple[str, Trace]:

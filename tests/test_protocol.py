@@ -1,115 +1,27 @@
-"""ConsistentHash protocol conformance — one shared suite, four algorithms.
+"""Protocol wire-format pins.
 
-Every implementation (Memento, Anchor, Dx, Jump) must satisfy the same
-contract: structural protocol membership, lookups land on working buckets,
-minimal disruption on remove, monotonicity on add, sane memory accounting,
-and a ``device_image()`` whose jnp lookup matches the host plane
-(``variant="32"`` states).
+The per-algorithm protocol conformance grid (membership, lookup landing,
+disruption/monotonicity, memory accounting, device images) lives in
+``tests/test_conformance.py`` now, derived from
+:data:`repro.core.ALGORITHM_REGISTRY`.  What remains here are the pins
+that must NOT derive from the registry: the wire format is positional,
+so the registry order itself is an append-only contract.
 """
 from __future__ import annotations
 
-import numpy as np
-import pytest
-
-from repro.core import ConsistentHash, DeviceImage, make_hash
-
-ALGOS = ("memento", "anchor", "dx", "jump")
-KEYS = [int(k) for k in np.random.default_rng(0).integers(0, 2**63, size=300)]
+from conformance import ALGORITHMS
 
 
-def _mk(algo, n0=40, variant="64"):
-    return make_hash(algo, n0, capacity=4 * n0, variant=variant)
+def test_wire_order_is_append_only():
+    """Replication frame algo ids are positional (``launch/replicate``),
+    so the registry order is wire format: entries may only be appended.
+    A new algorithm extends this literal; reordering it is a protocol
+    break."""
+    assert ALGORITHMS == (
+        "memento", "anchor", "dx", "jump", "power")  # registry-literal-ok
 
 
-def _churn(h, removals, seed=0):
-    """Random removals (LIFO for Jump, which supports nothing else)."""
-    rng = np.random.default_rng(seed)
-    for _ in range(removals):
-        if h.name == "jump":
-            h.remove(h.size - 1)
-        else:
-            ws = sorted(h.working_set())
-            h.remove(ws[int(rng.integers(len(ws)))])
+def test_replication_algo_ids_match_registry_order():
+    from repro.launch.replicate import _ALGO_IDS
 
-
-@pytest.mark.parametrize("algo", ALGOS)
-def test_protocol_membership(algo):
-    h = _mk(algo)
-    assert isinstance(h, ConsistentHash)
-    assert h.name == algo
-
-
-@pytest.mark.parametrize("algo", ALGOS)
-@pytest.mark.parametrize("variant", ["64", "32"])
-def test_lookup_lands_on_working(algo, variant):
-    h = _mk(algo, variant=variant)
-    _churn(h, 15, seed=1)
-    ws = h.working_set()
-    assert len(ws) == h.working
-    for k in KEYS:
-        assert h.lookup(k) in ws
-
-
-@pytest.mark.parametrize("algo", ALGOS)
-def test_minimal_disruption_and_monotonicity(algo):
-    h = _mk(algo)
-    _churn(h, 8, seed=2)
-    before = {k: h.lookup(k) for k in KEYS}
-    victim = (h.size - 1 if algo == "jump"
-              else sorted(h.working_set())[len(h.working_set()) // 2])
-    h.remove(victim)
-    for k in KEYS:
-        if before[k] != victim:
-            assert h.lookup(k) == before[k], "non-victim key moved"
-        else:
-            assert h.lookup(k) != victim
-    b = h.add()
-    assert b == victim  # all four restore the most recent removal
-    assert {k: h.lookup(k) for k in KEYS} == before
-
-
-@pytest.mark.parametrize("algo", ALGOS)
-def test_memory_accounting(algo):
-    h = _mk(algo)
-    m0 = h.memory_bytes()
-    assert isinstance(m0, int) and m0 > 0
-    _churn(h, 10, seed=3)
-    assert h.memory_bytes() >= m0 - 8  # Jump may shrink; others only grow
-
-
-@pytest.mark.parametrize("algo", ALGOS)
-def test_device_image_matches_host(algo):
-    import jax.numpy as jnp
-    from repro.core.jax_lookup import lookup_image
-
-    h = _mk(algo, n0=64, variant="32")
-    _churn(h, 25, seed=4)
-    image = h.device_image()
-    assert isinstance(image, DeviceImage)
-    assert image.algo == algo
-    for arr in image.arrays.values():
-        assert arr.shape[0] % 128 == 0, "device arrays must be lane-padded"
-        assert arr.dtype in (np.int32, np.uint32)
-    keys = np.asarray(KEYS, dtype=np.uint64).astype(np.uint32)
-    dev = np.asarray(lookup_image(jnp.asarray(keys), image))
-    host = np.asarray([h.lookup(int(k)) for k in keys], dtype=np.int32)
-    np.testing.assert_array_equal(dev, host)
-
-
-@pytest.mark.parametrize("algo", ALGOS)
-def test_image_is_snapshot(algo):
-    """Membership changes must not leak into previously-built images."""
-    import jax.numpy as jnp
-    from repro.core.jax_lookup import lookup_image
-
-    h = _mk(algo, n0=32, variant="32")
-    image = h.device_image()
-    keys = jnp.asarray(np.asarray(KEYS[:64], dtype=np.uint64).astype(np.uint32))
-    before = np.asarray(lookup_image(keys, image))
-    _churn(h, 5, seed=5)
-    np.testing.assert_array_equal(np.asarray(lookup_image(keys, image)), before)
-
-
-def test_make_hash_rejects_unknown():
-    with pytest.raises(ValueError):
-        make_hash("rendezvous", 8)
+    assert _ALGO_IDS == {name: i for i, name in enumerate(ALGORITHMS)}

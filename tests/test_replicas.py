@@ -18,32 +18,18 @@ import math
 import numpy as np
 import pytest
 
+from conformance import ALGORITHMS as ALGOS, churn, lifo_only, make
 from repro.core import (BoundedLoad, BoundedLoadMemento, DeviceImageStore,
                         make_hash, replica_sets)
 from repro.core.bounded import bounded_assign_ref
-from repro.core.protocol import round_up
-
-ALGOS = ("memento", "anchor", "dx", "jump")
+from repro.kernels.engine import bounded_load_len as _load_len
 
 
 def _state(algo, n0, removals, seed, variant="32"):
-    h = make_hash(algo, n0, capacity=4 * n0, variant=variant)
-    rng = np.random.default_rng(seed)
-    for _ in range(removals):
-        if algo == "jump":
-            h.remove(h.size - 1)
-        else:
-            ws = sorted(h.working_set())
-            h.remove(ws[int(rng.integers(len(ws)))])
+    h = make(algo, n0, variant=variant)
+    churn(h, min(removals, n0 - 1) if lifo_only(algo) else removals,
+          seed=seed)
     return h
-
-
-def _load_len(image):
-    if image.algo == "anchor":
-        return image.arrays["A"].shape[0]
-    if image.algo == "memento":
-        return image.arrays["repl"].shape[0]
-    return round_up(image.n)
 
 
 KEYS = np.random.default_rng(3).integers(0, 2**32, size=513, dtype=np.uint32)

@@ -24,7 +24,8 @@ from repro.launch.replicate import (KIND_DELTA, KIND_SNAPSHOT, DeltaPublisher,
                                     ReplicationGroup, decode_frame,
                                     encode_delta, encode_snapshot)
 
-ALGOS = ("memento", "anchor", "dx", "jump")
+from conformance import ALGORITHMS as ALGOS, lifo_only
+
 KEYS = np.random.default_rng(5).integers(0, 2**32, size=256, dtype=np.uint32)
 
 
@@ -32,17 +33,19 @@ def _mk(algo, n0=64):
     return make_hash(algo, n0, capacity=4 * n0, variant="32")
 
 
+def _victim(h, rng):
+    return (h.size - 1 if lifo_only(h.name)
+            else h.lookup(int(rng.integers(1 << 30))))
+
+
 def _churn_once(h, rng):
     if h.working > 1 and rng.random() < 0.55:
-        if h.name == "jump":
-            h.remove(h.size - 1)
-        else:
-            h.remove(h.lookup(int(rng.integers(1 << 30))))
+        h.remove(_victim(h, rng))
     else:
         try:
             h.add()
         except ValueError:
-            h.remove(h.lookup(int(rng.integers(1 << 30))))
+            h.remove(_victim(h, rng))
 
 
 # ---------------------------------------------------------------------------
@@ -69,7 +72,7 @@ def test_snapshot_frame_roundtrip(algo):
 def test_delta_frame_roundtrip(algo):
     h = _mk(algo)
     e0 = h.epoch
-    if algo == "jump":
+    if lifo_only(algo):
         h.remove(h.size - 1)
     else:
         h.remove(h.lookup(12345))
@@ -93,6 +96,10 @@ def test_decode_rejects_garbage():
     frame = encode_snapshot(h.device_image())
     with pytest.raises(ValueError):  # trailing words
         decode_frame(np.concatenate([frame, np.zeros(3, np.int32)]))
+    beyond = np.array(frame)
+    beyond[2] = len(ALGOS)  # first unassigned wire algo id
+    with pytest.raises(ValueError, match="algo id"):  # future-algo frame
+        decode_frame(beyond)
 
 
 # ---------------------------------------------------------------------------
@@ -206,14 +213,18 @@ _WORKER = textwrap.dedent("""
     chan = DistributedBroadcast()
     rng = np.random.default_rng(0)
     steps = 20
+    algo = os.environ["REPL_ALGO"]
     if pid == 0:
-        h = make_hash("memento", 64, variant="32")
+        from repro.core.protocol import ALGORITHM_REGISTRY
+        lifo = ALGORITHM_REGISTRY[algo].lifo_only
+        h = make_hash(algo, 64, variant="32")
         store = DeviceImageStore(h)
         pub = DeltaPublisher(h)
         chan.exchange(pub.frames())
         for _ in range(steps):
             if rng.random() < 0.4 and h.size > 8:
-                h.remove(h.lookup(int(rng.integers(1 << 30))))
+                h.remove(h.size - 1 if lifo
+                         else h.lookup(int(rng.integers(1 << 30))))
             else:
                 h.add()
             store.sync()
@@ -229,10 +240,12 @@ _WORKER = textwrap.dedent("""
 """)
 
 
-def test_two_process_distributed_convergence():
+@pytest.mark.parametrize("algo", ["memento", "power"])
+def test_two_process_distributed_convergence(algo):
     """Leader and follower in SEPARATE processes on a real
     ``jax.distributed`` 2-process CPU mesh converge to the same epoch and
-    bit-identical image fingerprint."""
+    bit-identical image fingerprint — for the paper's algorithm and for
+    the stateless LIFO newcomer (whose frames carry the new wire id)."""
     with socket.socket() as s:
         s.bind(("127.0.0.1", 0))
         port = s.getsockname()[1]
@@ -240,7 +253,7 @@ def test_two_process_distributed_convergence():
     procs = []
     for pid in range(2):
         env = dict(os.environ, JAX_PLATFORMS="cpu", REPL_PID=str(pid),
-                   REPL_PORT=str(port),
+                   REPL_PORT=str(port), REPL_ALGO=algo,
                    PYTHONPATH=src + os.pathsep + os.environ.get(
                        "PYTHONPATH", ""))
         procs.append(subprocess.Popen([sys.executable, "-c", _WORKER],

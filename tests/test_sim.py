@@ -3,22 +3,20 @@
 Covers: generator determinism + JSON round-trip, driver determinism from
 seed (including replaying the RESOLVED trace, which consumes no membership
 randomness), checker correctness on hand-built traces and on synthetic
-broken inputs, and all four algorithms × host/jnp/Pallas planes agreeing
-bit-for-bit under replay.
+broken inputs, and every registry algorithm × host/jnp/Pallas planes
+agreeing bit-for-bit under replay.
 """
 from __future__ import annotations
 
 import numpy as np
 import pytest
 
+from conformance import ALGORITHMS as ALGOS, PLANES
 from repro.sim import (SCENARIOS, ScenarioDriver, Trace, TraceEvent,
                        degradation_knee, make_trace, replay)
 from repro.sim.checkers import (check_balance, check_cap_invariant,
                                 check_minimal_disruption,
                                 check_replica_stability)
-
-ALGOS = ["memento", "anchor", "dx", "jump"]
-PLANES = ["host", "jnp", "pallas"]
 
 SMALL = dict(w=32, n_keys=512)
 
