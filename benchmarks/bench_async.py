@@ -40,6 +40,8 @@ import sys
 import time
 from pathlib import Path
 
+import numpy as np
+
 from repro.core import ALGORITHMS as ALGOS
 
 #: (trace name, trace kwargs) cells; every run includes the 10⁴-node
@@ -64,6 +66,196 @@ CELLS = {
                                 n_keys=4096)),
     ],
 }
+
+
+#: wire-stream configs the storm replication sub-bench compares.  The
+#: per-epoch dense stream (one DELTA frame per epoch, full-width layout)
+#: is the pre-batching baseline; the batched+packed stream is the
+#: headline: one DELTA_BATCH per storm burst over the §8.2 packed layout,
+#: whose announce snapshot is Θ(n/8 + r) instead of the dense Θ(4n).
+WIRE_CONFIGS = [
+    ("per_epoch_dense", dict(batch_epochs=1)),
+    ("batched_dense", dict(batch_epochs=0)),
+    ("batched_packed", dict(batch_epochs=0, packed=True)),
+    ("batched_packed_tree", dict(batch_epochs=0, packed=True,
+                                 topology="tree", arity=2)),
+]
+
+#: (algo, churn_storm_xl kwargs) wire cells; the acceptance gate rides the
+#: largest Memento cell — default and full include the 10⁶-node fleet.
+WIRE_CELLS = {
+    "quick": [
+        ("memento", dict(w=10_000, storms=2, burst=200)),
+    ],
+    "default": [
+        ("memento", dict(w=10_000, storms=3, burst=500)),
+        ("anchor", dict(w=10_000, storms=3, burst=500)),
+        ("memento", dict(w=1_000_000, storms=2, burst=500)),
+    ],
+    "full": [
+        ("memento", dict(w=10_000, storms=3, burst=500)),
+        ("anchor", dict(w=10_000, storms=3, burst=500)),
+        ("memento", dict(w=1_000_000, storms=3, burst=2_000)),
+    ],
+}
+
+
+def _drive_wire(trace, algo, group_kw, followers=3):
+    """Replay a storm trace's MEMBERSHIP events straight through a host
+    state + :class:`~repro.launch.replicate.ReplicationGroup` (no driver,
+    no checkers, no lookup traffic) and return the wire accounting — the
+    replication cost of one storm, isolated from everything else."""
+    from repro.core import image_fingerprint, make_hash
+    from repro.launch.replicate import ReplicationGroup
+    from repro.sim.driver import resolve_victims
+
+    h = make_hash(algo, trace.initial_nodes,
+                  capacity=trace.capacity_factor * trace.initial_nodes,
+                  variant="32")
+    g = ReplicationGroup(h, followers, **group_kw)
+    g.publish()
+    announce_bytes = g.stats.total_bytes  # the initial snapshot fan-out
+    rng = np.random.default_rng([trace.seed, 0])
+    bursts = 0
+    for ev in trace.events:
+        if ev.op == "remove":
+            for b in resolve_victims(h, ev, rng, trace.num_domains):
+                h.remove(b)
+        elif ev.op == "add":
+            for _ in range(ev.count):
+                try:
+                    h.add()
+                except ValueError:
+                    break
+        else:
+            continue  # wire bytes only; lookups don't touch the stream
+        g.publish()
+        bursts += 1
+    img = h.device_image()
+    stream = g.stats.total_bytes - announce_bytes
+    return {
+        "bytes_total": g.stats.total_bytes,
+        "announce_bytes": announce_bytes,
+        "stream_bytes": stream,
+        # the headline normalization: EVERYTHING the stream cost (announce
+        # included — a joining follower pays it) per storm burst event
+        "bytes_per_burst": g.stats.total_bytes / max(bursts, 1),
+        "stream_bytes_per_burst": stream / max(bursts, 1),
+        "frames": g.stats.frames,
+        "leader_sends": g.stats.leader_sends,
+        "leader_bytes": g.stats.leader_bytes,
+        "catchup_frames": g.stats.catchup_frames,
+        "snapshot_fallbacks": max(f.snapshots for f in g.followers) - 1,
+        "epoch": int(h.epoch),
+        "converged": bool(g.converged(img)),
+        "leader_fingerprint": image_fingerprint(img),
+        "follower_fingerprint": g.followers[0].fingerprint(),
+    }
+
+
+def bench_replication(emit, *, mode="default", followers=3, seed=0):
+    """The storm-scale replication sub-bench: wire bytes per storm burst
+    across stream configs, tree-vs-flat leader fan-out cost through the
+    full driver (checkers on), and partitioned-follower targeted catch-up.
+    Returns the ``"replication"`` section of BENCH_async.json."""
+    from repro.sim import make_trace, replay
+
+    out: dict[str, dict] = {"wire": {}, "topology": {}, "catchup": {}}
+
+    # -- wire bytes per storm burst, per stream config ------------------------
+    for algo, kw in WIRE_CELLS[mode]:
+        trace = make_trace("churn_storm_xl", seed=seed, **kw)
+        key = f"{algo}_w{kw['w']}"
+        cell: dict[str, dict] = {}
+        for cfg_name, cfg in WIRE_CONFIGS:
+            r = _drive_wire(trace, algo, cfg, followers=followers)
+            cell[cfg_name] = r
+            for metric in ("bytes_per_burst", "stream_bytes_per_burst",
+                           "announce_bytes", "frames", "leader_sends"):
+                emit("wire", algo, f"w{kw['w']}_{cfg_name}", metric,
+                     r[metric])
+            emit("wire", algo, f"w{kw['w']}_{cfg_name}", "converged",
+                 int(r["converged"]))
+        base = cell["per_epoch_dense"]
+        packed = cell["batched_packed"]
+        fps = {c["leader_fingerprint"] for c in cell.values()}
+        fps |= {c["follower_fingerprint"] for c in cell.values()}
+        cell["_meta"] = {
+            "algo": algo, "w": kw["w"], "storms": kw["storms"],
+            "burst": kw["burst"], "followers": followers,
+            # every config reached the same leader state and every
+            # follower (dense, packed, flat, tree) fingerprints equal to
+            # it — the bit-identical gate across layouts and topologies
+            "fingerprints_equal": len(fps) == 1,
+            "all_converged": all(c["converged"] for c in cell.values()
+                                 if "converged" in c),
+            "wire_ratio_vs_per_epoch":
+                base["bytes_per_burst"] / packed["bytes_per_burst"],
+        }
+        emit("wire", algo, f"w{kw['w']}", "wire_ratio_vs_per_epoch",
+             cell["_meta"]["wire_ratio_vs_per_epoch"])
+        out["wire"][key] = cell
+
+    # -- leader fan-out cost: flat vs tree through the full driver ------------
+    topo_kw = (dict(w=96, storms=2, burst=8, n_keys=256) if mode == "quick"
+               else dict(w=256, storms=2, burst=16, n_keys=512))
+    trace = make_trace("churn_storm", seed=seed, **topo_kw)
+    for name, cfg in [("flat", dict(topology="flat", batch_epochs=0)),
+                      ("tree_a2", dict(topology="tree", arity=2,
+                                       batch_epochs=0)),
+                      ("tree_a4", dict(topology="tree", arity=4,
+                                       batch_epochs=0))]:
+        r = replay(trace, algo="memento", plane="jnp", sync_mode="overlap",
+                   followers=7, repl_config=cfg)
+        s = r.summary()
+        out["topology"][name] = {
+            "violations": s["violations"],
+            "fingerprint": s["fingerprint"],
+            "fanout_depth": s["fanout_depth"],
+            "wire_frames_total": s["wire_frames_total"],
+            "wire_bytes_total": s["wire_bytes_total"],
+            "leader_sends_total": s["leader_sends_total"],
+            "follower_lag_max": s["follower_lag_max"],
+        }
+        for metric in ("leader_sends_total", "wire_bytes_total",
+                       "fanout_depth", "violations"):
+            emit("topology", "memento", name, metric,
+                 out["topology"][name][metric])
+
+    # -- partitioned interior follower: targeted catch-up ---------------------
+    rng = np.random.default_rng(seed)
+    from repro.core import make_hash
+    from repro.launch.replicate import ReplicationGroup
+
+    h = make_hash("memento", 256, variant="32")
+    g = ReplicationGroup(h, 3, topology="tree", arity=2, batch_epochs=0)
+    g.publish()
+
+    def churn(k):
+        for _ in range(k):
+            if rng.random() < 0.5 and h.working > 8:
+                h.remove(sorted(h.working_set())[-1])
+            else:
+                h.add()
+
+    churn(16)
+    g.publish()
+    g.set_online(0, False)  # interior node 1: its subtree starves with it
+    churn(16)
+    g.publish()
+    g.set_online(0, True)
+    churn(16)
+    g.publish()  # gap detected → targeted pulls repair node 1 AND node 3
+    out["catchup"] = {
+        "catchup_frames": g.stats.catchup_frames,
+        "catchup_bytes": g.stats.catchup_bytes,
+        "epoch": int(h.epoch),
+        "converged": bool(g.converged(h.device_image())),
+    }
+    for metric in ("catchup_frames", "catchup_bytes", "converged"):
+        emit("catchup", "memento", "tree_a2", metric,
+             int(out["catchup"][metric]))
+    return out
 
 
 def bench_async(emit, *, cells=None, followers=1, seed=0, algos=ALGOS):
@@ -149,6 +341,55 @@ def check_async_claims(summary: dict, min_hidden: float = 0.5) -> bool:
               f"latency (measured {c['overlap_hidden_frac']:.1%}, "
               f"dispatch {c['dispatch_us_mean_overlap']:.0f}µs vs flip "
               f"{c['flip_us_mean_block']:.0f}µs) [{tag}]: {verdict}")
+    repl = summary.get("replication")
+    if repl:
+        ok &= check_replication_claims(repl, claim)
+    return ok
+
+
+def check_replication_claims(repl: dict, claim, min_ratio: float = 5.0) -> bool:
+    """CI-HARD gates on the replication section: bit-identical follower
+    fingerprints across flat/tree topologies and dense/packed layouts,
+    zero convergence violations, tree leader fan-out strictly below flat,
+    targeted catch-up repairing a partitioned subtree, and ≥``min_ratio``
+    fewer wire bytes per storm burst for the batched packed Memento stream
+    vs the per-epoch dense baseline (the anchor cells report the ratio but
+    only gate convergence — their packed layout cannot dtype-narrow at
+    fleet scale, so the win there is batching alone, advisory)."""
+    ok = True
+
+    def sub(name, cond):
+        nonlocal ok
+        claim(name, cond)
+
+    for key, cell in repl["wire"].items():
+        meta = cell["_meta"]
+        sub(f"wire {key}: every stream config converged",
+            meta["all_converged"])
+        sub(f"wire {key}: follower fingerprints bit-identical across "
+            f"configs (dense/packed × flat/tree)",
+            meta["fingerprints_equal"])
+        ratio = meta["wire_ratio_vs_per_epoch"]
+        if meta["algo"] == "memento":
+            sub(f"wire {key}: batched packed stream ≥{min_ratio:.0f}× "
+                f"fewer bytes/burst than per-epoch dense "
+                f"(measured {ratio:.1f}×)", ratio >= min_ratio)
+        else:
+            print(f"# claim: wire {key}: bytes/burst ratio {ratio:.1f}× "
+                  f"[advisory — batching only, no packed narrowing]")
+    topo = repl["topology"]
+    for name, t in topo.items():
+        sub(f"topology {name}: checkers silent (incl. follower "
+            f"convergence)", t["violations"] == 0)
+    sub("topology: flat and tree replays bit-identical",
+        len({t["fingerprint"] for t in topo.values()}) == 1)
+    sub("topology: tree leader pays fewer sends than flat",
+        topo["tree_a2"]["leader_sends_total"]
+        < topo["flat"]["leader_sends_total"])
+    cu = repl["catchup"]
+    sub("catchup: partitioned interior subtree repaired by targeted "
+        f"pull ({cu['catchup_frames']} frames)",
+        cu["catchup_frames"] > 0 and cu["converged"])
     return ok
 
 
@@ -175,6 +416,8 @@ def main(argv=None) -> int:
     print("table,algo,x,metric,value")
     t0 = time.time()
     summary = bench_async(emit, cells=cells, followers=args.followers)
+    mode = "quick" if args.quick else "full" if args.full else "default"
+    summary["replication"] = bench_replication(emit, mode=mode)
     ok = check_async_claims(summary)
     payload = {
         "bench": "async",
@@ -182,6 +425,7 @@ def main(argv=None) -> int:
         "seed": summary["seed"],
         "cells": summary["cells"],
         "results": summary["results"],
+        "replication": summary["replication"],
         "claims_pass": bool(ok),
         "elapsed_s": round(time.time() - t0, 2),
     }

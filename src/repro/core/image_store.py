@@ -53,6 +53,31 @@ from .protocol import (ALGORITHM_REGISTRY, ConsistentHash, DeviceImage,
                        ImageDelta, required_lengths, round_up)
 
 
+def delta_fits(caps: dict[str, int], delta: ImageDelta, *,
+               compact: bool = False) -> bool:
+    """Do buffers of the given per-array lengths absorb ``delta``?
+
+    The ONE capacity rule shared by the store's delta-vs-snapshot decision
+    and the replication publisher's cursor (``launch/replicate.py``):
+    ``caps`` maps array name → allocated (or wire-announced) length, and
+    the delta fits iff every array a lookup at ``delta.n`` may gather from
+    is long enough.  ``compact`` switches Memento to its packed bitmap rule
+    (32 buckets per ``state`` word); the bounded-load ``load`` overlay is
+    bucket-indexed regardless of layout.  Keeping leader store and
+    publisher on the same predicate is what lets the publisher decide
+    snapshot-vs-delta for every follower at once (the leader-decides
+    invariant, DESIGN.md §9.3).
+    """
+    if compact and delta.algo == "memento":
+        # the bitmap is the bucket-indexed array: 32 buckets per word.
+        needed = {"state": -(-delta.n // 32)}
+    else:
+        needed = dict(required_lengths(delta.algo, delta.n))
+    if "load" in caps:  # bounded-load overlay: load words are bucket-indexed
+        needed["load"] = delta.n
+    return all(caps.get(name, 0) >= need for name, need in needed.items())
+
+
 @dataclass
 class SyncStats:
     """What one ``sync()`` did."""
@@ -312,15 +337,7 @@ class DeviceImageStore:
         return ch.device_delta(self._front.epoch)
 
     def _fits(self, delta: ImageDelta) -> bool:
-        caps = self.capacity
-        if self.compact and delta.algo == "memento":
-            # the bitmap is the bucket-indexed array: 32 buckets per word.
-            needed = {"state": -(-delta.n // 32)}
-        else:
-            needed = dict(required_lengths(delta.algo, delta.n))
-        if "load" in caps:  # bounded-load overlay: load words are bucket-indexed
-            needed["load"] = delta.n
-        return all(caps.get(name, 0) >= need for name, need in needed.items())
+        return delta_fits(self.capacity, delta, compact=self.compact)
 
     def _apply(self, delta: ImageDelta) -> DeviceImage:
         from repro.kernels.delta_apply import apply_updates

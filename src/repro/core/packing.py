@@ -167,12 +167,16 @@ def _probe_upsert(slot_b: np.ndarray, b: int) -> tuple[int, bool]:
 # pack / unpack
 # ---------------------------------------------------------------------------
 
-def pack_image(image: DeviceImage, *, slot_headroom: int = 1) -> DeviceImage:
+def pack_image(image: DeviceImage, *, slot_headroom: int = 1,
+               nslots: int | None = None) -> DeviceImage:
     """Dense :class:`DeviceImage` → the packed layout (same epoch, same
     scalars, ``packed=True``).  Arrays NOT in the dense table layout (e.g.
     a bounded-load overlay's ``load`` words) are carried through unchanged.
     ``slot_headroom`` over-provisions the Memento slot table (the store
-    packs with headroom 2 so epoch deltas insert without repacking)."""
+    packs with headroom 2 so epoch deltas insert without repacking);
+    ``nslots`` pins the slot count exactly — the replication publisher's
+    targeted catch-up snapshots (``launch/replicate.py``) must rebuild at
+    the slot capacity the stream already announced, not a fresh one."""
     if image.packed:
         return image
     arrays: dict[str, np.ndarray] = {}
@@ -189,8 +193,9 @@ def pack_image(image: DeviceImage, *, slot_headroom: int = 1) -> DeviceImage:
             state &= ~bits
         dtype = narrow_dtype(pad)
         slot_b, slot_c = build_slots(
-            repl, nslots=_slot_count(int(removed.size),
-                                     headroom=slot_headroom),
+            repl, nslots=(nslots if nslots is not None
+                          else _slot_count(int(removed.size),
+                                           headroom=slot_headroom)),
             dtype=dtype)
         arrays = {"state": state, "slot_b": slot_b, "slot_c": slot_c}
     elif image.algo == "anchor":

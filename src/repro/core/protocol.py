@@ -445,6 +445,53 @@ class DeltaEmitter:
                           epoch=self._epoch, n=n, updates=updates,
                           scalars=scalars)
 
+    def device_delta_range(self, since_epoch: int, until_epoch: int):
+        """Compose the events in ``(since_epoch, until_epoch]`` into one
+        delta — :meth:`device_delta` generalized to an intermediate target
+        epoch, the primitive behind cross-epoch frame batching
+        (``launch/replicate.py``): a publisher can chunk a long pending
+        range into several ``DELTA_BATCH`` frames without ever composing
+        past a chunk boundary.  ``n`` and the dynamic scalars come from the
+        log entry AT ``until_epoch`` (every ``_record`` call site commits
+        the full post-event scalar set), so the delta lands the follower on
+        exactly the epoch-``until`` image.  Returns ``None`` when
+        ``since_epoch`` predates the bounded log window.
+        """
+        if until_epoch > self._epoch:
+            raise ValueError(f"until_epoch {until_epoch} is in the future "
+                             f"(current epoch {self._epoch})")
+        if since_epoch > until_epoch:
+            raise ValueError(f"empty range ({since_epoch}, {until_epoch}]")
+        if since_epoch < self._epoch - len(self._delta_log):
+            return None  # out of the log window
+        start = len(self._delta_log) - (self._epoch - since_epoch)
+        stop = len(self._delta_log) - (self._epoch - until_epoch)
+        if stop == start:  # empty range: report the until-epoch state
+            if until_epoch == self._epoch:
+                n = getattr(self, "_image_n")()
+                scalars = dict(getattr(self, "_image_scalars")())
+            elif stop <= 0:  # until sits at the window edge: no entry for it
+                return None
+            else:
+                _e, _u, n, scalars = self._delta_log[stop - 1]
+                scalars = dict(scalars)
+            return ImageDelta(algo=self.image_algo, base_epoch=since_epoch,
+                              epoch=until_epoch, n=n, scalars=scalars)
+        merged: dict[str, dict[int, int]] = {}
+        for _epoch, updates, _ev_n, _ev_scalars in self._delta_log[start:stop]:
+            for name, edits in updates.items():
+                merged.setdefault(name, {}).update(edits)
+        _e, _u, n, scalars = self._delta_log[stop - 1]
+        updates = {
+            name: (np.fromiter(edits.keys(), dtype=np.int32, count=len(edits)),
+                   np.fromiter(edits.values(), dtype=np.int64,
+                               count=len(edits)).astype(np.int32))
+            for name, edits in merged.items()
+        }
+        return ImageDelta(algo=self.image_algo, base_epoch=since_epoch,
+                          epoch=until_epoch, n=n, updates=updates,
+                          scalars=dict(scalars))
+
     # -- per-algorithm hooks -------------------------------------------------
     def _image_n(self) -> int:
         raise NotImplementedError

@@ -93,6 +93,35 @@ def _scatter_jnp(table, meta):
     return table.at[idx].set(vals.astype(table.dtype), mode="drop")
 
 
+def compose_updates(update_seq) -> dict:
+    """Last-write-wins composition of a sequence of per-array scatter dicts
+    (each ``{name: (idx, vals)}``) into ONE such dict.
+
+    The follower-side half of cross-epoch delta batching
+    (``launch/replicate.py``): a drained batch of chained frames collapses
+    into a single :func:`apply_updates` scatter — one device dispatch per
+    drain instead of one per epoch — and positions written by several
+    epochs keep only their final value, exactly the dedup rule the leader's
+    ``device_delta`` composition applies.  Order within the sequence is the
+    epoch order; later writes win.
+    """
+    import numpy as np
+
+    merged: dict[str, dict[int, int]] = {}
+    for updates in update_seq:
+        for name, (idx, vals) in updates.items():
+            slots = merged.setdefault(name, {})
+            for i, v in zip(np.asarray(idx).tolist(),
+                            np.asarray(vals).tolist()):
+                slots[i] = v
+    return {
+        name: (np.fromiter(slots.keys(), np.int32, len(slots)),
+               np.fromiter(slots.values(), np.int64,
+                           len(slots)).astype(np.int32))
+        for name, slots in merged.items()
+    }
+
+
 def apply_updates(arrays: dict, updates: dict, *, plane: str = "jnp",
                   interpret: bool = True) -> dict:
     """Apply per-array ``{name: (idx, vals)}`` scatters to an image's

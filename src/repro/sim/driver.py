@@ -143,7 +143,7 @@ class ScenarioDriver:
                  replica_k: int = 1, check: bool = True,
                  sharded: bool = False, step_sample: int = 256,
                  balance_tol: float = 6.0, sync_mode: str = "block",
-                 followers: int = 0):
+                 followers: int = 0, repl_config: dict | None = None):
         if plane not in PLANES:
             raise ValueError(f"unknown plane {plane!r} (have {PLANES})")
         if sync_mode not in ("block", "overlap"):
@@ -187,15 +187,20 @@ class ScenarioDriver:
         self._route_prev: np.ndarray | None = None
         # in-process follower replicas (launch/replicate.py): every synced
         # membership event publishes the pending epochs and the convergence
-        # checker compares fingerprints leader-vs-follower.
+        # checker compares fingerprints leader-vs-follower.  repl_config
+        # passes topology/batching/packing straight to ReplicationGroup
+        # (e.g. {"topology": "tree", "arity": 4, "batch_epochs": 0,
+        # "packed": True}).
         self._repl = None
         if followers:
             from repro.launch.replicate import ReplicationGroup
             self._repl = ReplicationGroup(
                 self.h, followers,
-                plane="jnp" if plane == "host" else plane)
+                plane="jnp" if plane == "host" else plane,
+                **(repl_config or {}))
             self._repl.publish()  # initial snapshot frame
             self.metrics.followers = followers
+            self.metrics.fanout_depth = self._repl.depth
 
     # -- consumers ----------------------------------------------------------
     @property
@@ -362,6 +367,10 @@ class ScenarioDriver:
             conv: list[Violation] = []
             if self._repl is not None:
                 rec.follower_lag = max(self._repl.publish(), default=0)
+                last = self._repl.last_publish
+                rec.wire_frames = last["frames"]
+                rec.wire_bytes = last["bytes"]
+                rec.leader_sends = last["leader_sends"]
                 if self.check:
                     conv = check_follower_convergence(
                         i, self.store.image(), self._repl.followers)

@@ -46,6 +46,13 @@ class EventRecord:
     # cross-process replication: epochs the slowest follower was behind
     # when this event's publish round shipped (0 = already converged).
     follower_lag: int = 0
+    # wire accounting for that publish round (launch/replicate.py): frames
+    # the publisher encoded, bytes crossing any link (relays included),
+    # and frame transmissions the LEADER paid — O(arity) per round under
+    # the tree topology vs O(F) flat.
+    wire_frames: int = 0
+    wire_bytes: int = 0
+    leader_sends: int = 0
 
 
 class ScenarioMetrics:
@@ -55,6 +62,7 @@ class ScenarioMetrics:
         self.records: list[EventRecord] = []
         self.degradation: list[tuple[float, float]] = []
         self.followers = 0  # in-process replication followers attached
+        self.fanout_depth = 0  # relay hops leader → farthest follower
         self._crc = 0
         # per-op traffic accumulators: lookup, assign, and route timings
         # are different code paths and must not blend into one number
@@ -112,6 +120,10 @@ class ScenarioMetrics:
             out["followers"] = self.followers
             out["follower_lag_max"] = int(max(lags, default=0))
             out["follower_lag_mean"] = float(np.mean(lags)) if lags else 0.0
+            out["fanout_depth"] = self.fanout_depth
+            out["wire_frames_total"] = sum(r.wire_frames for r in member)
+            out["wire_bytes_total"] = sum(r.wire_bytes for r in member)
+            out["leader_sends_total"] = sum(r.leader_sends for r in member)
         for op, keys in self._keys.items():
             out[f"{op}_keys_total"] = keys
             out[f"{op}_us_per_key"] = self._secs[op] / keys * 1e6

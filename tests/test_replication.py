@@ -19,10 +19,12 @@ import numpy as np
 import pytest
 
 from repro.core import DeviceImageStore, image_fingerprint, make_hash
-from repro.launch.replicate import (KIND_DELTA, KIND_SNAPSHOT, DeltaPublisher,
-                                    FollowerImageStore, LoopbackChannel,
-                                    ReplicationGroup, decode_frame,
-                                    encode_delta, encode_snapshot)
+from repro.launch.replicate import (KIND_DELTA, KIND_DELTA_BATCH,
+                                    KIND_SNAPSHOT, KIND_SNAPSHOT_PACKED,
+                                    DeltaPublisher, FollowerImageStore,
+                                    LoopbackChannel, ReplicationGroup,
+                                    TreeTopology, decode_frame, encode_delta,
+                                    encode_snapshot, stamp_crc)
 
 from conformance import ALGORITHMS as ALGOS, lifo_only
 
@@ -95,11 +97,33 @@ def test_decode_rejects_garbage():
     h = _mk("memento")
     frame = encode_snapshot(h.device_image())
     with pytest.raises(ValueError):  # trailing words
-        decode_frame(np.concatenate([frame, np.zeros(3, np.int32)]))
+        decode_frame(stamp_crc(np.concatenate([frame, np.zeros(3, np.int32)])))
     beyond = np.array(frame)
     beyond[2] = len(ALGOS)  # first unassigned wire algo id
+    stamp_crc(beyond)  # a well-formed frame FROM THE FUTURE, not a corrupt one
     with pytest.raises(ValueError, match="algo id"):  # future-algo frame
         decode_frame(beyond)
+
+
+def test_crc_rejects_corruption_and_truncation():
+    """Every frame carries a CRC32 integrity word: a flipped payload word,
+    a tampered header, or a truncated buffer is rejected before any word
+    could reach the follower's scatter."""
+    h = _mk("memento")
+    h.remove(h.lookup(42))
+    for frame in (encode_snapshot(h.device_image()),
+                  encode_delta(h.device_delta(h.epoch - 1))):
+        decode_frame(frame)  # pristine frame passes
+        flipped = np.array(frame)
+        flipped[len(flipped) // 2] ^= 1  # one payload bit
+        with pytest.raises(ValueError, match="CRC"):
+            decode_frame(flipped)
+        tampered = np.array(frame)
+        tampered[4] += 1  # epoch header word
+        with pytest.raises(ValueError, match="CRC"):
+            decode_frame(tampered)
+        with pytest.raises(ValueError):  # truncation (CRC or header length)
+            decode_frame(np.array(frame)[:-2])
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +199,289 @@ def test_follower_rejects_mischained_delta():
         fol.apply_frame(encode_delta(late))
     fol.apply_frame(encode_delta(h.device_delta(e1)))  # correct chain lands
     assert fol.epoch == h.epoch
+
+
+# ---------------------------------------------------------------------------
+# cross-epoch batching, packed wire frames, drain reordering
+# ---------------------------------------------------------------------------
+
+def _twin_churn(hs, burst_seed, events=6):
+    """Drive identical churn on twin leaders (same rng per leader)."""
+    for h in hs:
+        r = np.random.default_rng([97, burst_seed])
+        for _ in range(events):
+            _churn_once(h, r)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_batched_deltas_bit_identical_to_per_epoch(algo):
+    """batch_epochs=0 (one DELTA_BATCH per publish) and batch_epochs=1
+    (one DELTA per epoch — the dense per-epoch baseline) land followers on
+    bit-identical fingerprints, and the batch ships strictly fewer bytes
+    (one header + deduped last-write-wins payload per burst)."""
+    h1, h2 = _mk(algo), _mk(algo)
+    g_batch = ReplicationGroup(h1, 1, batch_epochs=0)
+    g_step = ReplicationGroup(h2, 1, batch_epochs=1)
+    g_batch.publish()
+    g_step.publish()
+    for burst in range(6):
+        _twin_churn((h1, h2), burst, events=8)
+        g_batch.publish()
+        g_step.publish()
+        f1, f2 = g_batch.followers[0], g_step.followers[0]
+        assert f1.epoch == f2.epoch == h1.epoch == h2.epoch
+        want = image_fingerprint(h1.device_image())
+        assert f1.fingerprint() == f2.fingerprint() == want
+    assert g_batch.followers[0].batches > 0  # rode DELTA_BATCH frames
+    assert g_batch.stats.frames < g_step.stats.frames
+    assert g_batch.stats.total_bytes < g_step.stats.total_bytes
+
+
+def test_batch_epochs_chunks_the_pending_range():
+    h = _mk("memento")
+    pub = DeltaPublisher(h, batch_epochs=3)
+    pub.frames()  # initial snapshot
+    for i in range(7):
+        h.remove(h.lookup(1000 + i))
+    frames = pub.frames()  # 7 pending epochs → chunks of ≤ 3: 3 + 3 + 1
+    assert len(frames) == 3
+    kinds = [decode_frame(f).kind for f in frames]
+    assert kinds == [KIND_DELTA_BATCH, KIND_DELTA_BATCH, KIND_DELTA]
+    fol = FollowerImageStore()
+    with pytest.raises(ValueError, match="SNAPSHOT"):
+        fol.apply_frames(frames)  # chunks alone cannot land a fresh replica
+    # a targeted catch-up (snapshot at the published cursor) + the now-stale
+    # chunks land it — redelivered frames skip idempotently
+    fol.apply_frames(pub.catchup_frames(-1) + frames)
+    assert fol.epoch == h.epoch
+    assert fol.fingerprint() == image_fingerprint(h.device_image())
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_packed_follower_matches_dense_follower(algo):
+    """A compact follower (SNAPSHOT_PACKED + packed-layout deltas) and a
+    dense follower of twin leaders stay fingerprint-identical: the §8.2
+    layout changes the wire and the resident bytes, never the lookups."""
+    h1, h2 = _mk(algo), _mk(algo)
+    gd = ReplicationGroup(h1, 1)
+    gp = ReplicationGroup(h2, 1, packed=True)
+    gd.publish()
+    gp.publish()
+    fd, fp = gd.followers[0], gp.followers[0]
+    for burst in range(8):
+        _twin_churn((h1, h2), 100 + burst)
+        gd.publish()
+        gp.publish()
+        assert fp.epoch == fd.epoch
+        assert fp.fingerprint() == fd.fingerprint()
+    assert fp.image().packed and not fd.image().packed
+    np.testing.assert_array_equal(fp.lookup(KEYS), fd.lookup(KEYS))
+    assert fp.deltas > 0  # steady state rode packed-layout delta frames
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_packed_snapshot_frame_roundtrip(algo):
+    from repro.core.packing import pack_image
+
+    rng = np.random.default_rng(2)
+    h = _mk(algo)
+    for _ in range(10):
+        _churn_once(h, rng)
+    img = pack_image(h.device_image(), slot_headroom=2)
+    frame = encode_snapshot(img)
+    f = decode_frame(frame)
+    assert f.kind == KIND_SNAPSHOT_PACKED and f.packed
+    for name, arr in img.arrays.items():  # dtype narrowing survives the wire
+        assert f.arrays[name].dtype == np.asarray(arr).dtype
+        np.testing.assert_array_equal(f.arrays[name], np.asarray(arr))
+    fol = FollowerImageStore(compact=True)
+    fol.apply_frame(frame)
+    assert fol.fingerprint() == image_fingerprint(h.device_image())
+    with pytest.raises(ValueError, match="dense"):  # layout assertion works
+        FollowerImageStore(compact=False).apply_frame(frame)
+
+
+def test_packed_memento_snapshot_is_smaller_on_the_wire():
+    h = _mk("memento", n0=2048)
+    from repro.core.packing import pack_image
+
+    rng = np.random.default_rng(4)
+    for _ in range(64):
+        h.remove(h.lookup(int(rng.integers(1 << 30))))
+    dense = encode_snapshot(h.device_image())
+    packed = encode_snapshot(pack_image(h.device_image(), slot_headroom=2))
+    assert 4 * len(packed) < 4 * len(dense) / 4  # Θ(n/8 + r) vs Θ(4n)
+
+
+def test_drain_reorder_repairs_shuffles_not_losses():
+    rng = np.random.default_rng(14)
+    h = _mk("memento")
+    pub = DeltaPublisher(h, batch_epochs=1)
+    fol = FollowerImageStore()
+    fol.apply_frames(pub.frames())
+    for _ in range(6):
+        _churn_once(h, rng)
+    frames = pub.frames()
+    assert len(frames) == 6
+    d0 = fol.deltas
+    fol.apply_frames([frames[i] for i in (4, 0, 5, 2, 1, 3)])  # shuffled drain
+    assert fol.epoch == h.epoch
+    assert fol.fingerprint() == image_fingerprint(h.device_image())
+    assert fol.deltas == d0 + 6  # all six landed, in ONE composed apply
+    for _ in range(3):
+        _churn_once(h, rng)
+    frames = pub.frames()
+    with pytest.raises(ValueError, match="base epoch"):  # a REAL gap
+        fol.apply_frames(frames[1:])  # first frame lost, not shuffled
+    fol.apply_frames(frames)  # the full drain still lands afterwards
+    assert fol.epoch == h.epoch
+
+
+def test_stale_frames_skip_idempotently():
+    rng = np.random.default_rng(15)
+    h = _mk("anchor")
+    pub = DeltaPublisher(h, batch_epochs=1)
+    fol = FollowerImageStore()
+    fol.apply_frames(pub.frames())
+    for _ in range(4):
+        _churn_once(h, rng)
+    frames = pub.frames()
+    fol.apply_frames(frames)
+    fp = fol.fingerprint()
+    fol.apply_frames(frames)  # exact redelivery: every frame is stale
+    assert fol.fingerprint() == fp and fol.stale_skipped >= len(frames)
+
+
+# ---------------------------------------------------------------------------
+# tree fan-out and targeted catch-up
+# ---------------------------------------------------------------------------
+
+def test_tree_topology_shape():
+    t = TreeTopology(6, arity=2)  # nodes 0 (leader) .. 6
+    assert t.children(0) == [1, 2] and t.children(1) == [3, 4]
+    assert t.children(2) == [5, 6] and t.children(3) == []
+    assert t.parent(0) == -1 and t.parent(5) == 2
+    assert t.interior() == [0, 1, 2]
+    assert t.depth == 2
+    assert TreeTopology(6, arity=4).depth == 2
+    assert TreeTopology(3, arity=4).depth == 1
+    with pytest.raises(ValueError):
+        TreeTopology(3, arity=0)
+
+
+@pytest.mark.parametrize("arity", [2, 4])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_tree_fanout_converges_every_algorithm(algo, arity):
+    rng = np.random.default_rng(13)
+    h = _mk(algo)
+    store = DeviceImageStore(h)
+    g = ReplicationGroup(h, 7, topology="tree", arity=arity)
+    g.publish()
+    for _ in range(25):
+        _churn_once(h, rng)
+        store.sync()
+        g.publish()
+        assert g.converged(store.image())
+    # the leader paid O(arity) sends per frame; interior followers relayed
+    assert g.stats.leader_sends == min(arity, 7) * g.stats.frames
+    assert g.stats.total_sends == 7 * g.stats.frames  # one receive per node
+
+
+def test_tree_leader_pays_arity_not_fanout():
+    h1, h2 = _mk("memento"), _mk("memento")
+    gf = ReplicationGroup(h1, 7, topology="flat")
+    gt = ReplicationGroup(h2, 7, topology="tree", arity=2)
+    gf.publish()
+    gt.publish()
+    for burst in range(5):
+        _twin_churn((h1, h2), 200 + burst, events=4)
+        gf.publish()
+        gt.publish()
+    assert gt.followers[-1].fingerprint() == gf.followers[-1].fingerprint()
+    assert gf.stats.leader_sends == 7 * gf.stats.frames  # flat: O(F)
+    assert gt.stats.leader_sends == 2 * gt.stats.frames  # tree: O(arity)
+    # same bytes cross the wire — relays change WHO pays, not how much
+    assert gt.stats.total_bytes == gf.stats.total_bytes
+    assert gt.depth == 3 and gf.depth == 1
+
+
+def test_lagging_follower_targeted_catchup_via_delta():
+    rng = np.random.default_rng(5)
+    h = _mk("memento")
+    g = ReplicationGroup(h, 2)
+    g.publish()
+    g.set_online(1, False)
+    for _ in range(2):
+        for _ in range(4):
+            _churn_once(h, rng)
+        g.publish()  # follower 1 misses both rounds
+    g.set_online(1, True)
+    for _ in range(4):
+        _churn_once(h, rng)
+    g.publish()  # delivery detects the gap and prepends the targeted pull
+    assert g.converged(h.device_image())
+    assert g.stats.catchup_frames >= 1
+    # repaired by a composed DELTA_BATCH from the published-frame log — the
+    # only snapshot this follower ever saw is the initial one
+    assert g.followers[1].snapshots == 1
+
+
+def test_catch_up_and_attach_mid_stream():
+    rng = np.random.default_rng(8)
+    h = _mk("anchor")
+    g = ReplicationGroup(h, 1)
+    g.publish()
+    for _ in range(5):
+        _churn_once(h, rng)
+    g.set_online(0, False)
+    g.publish()  # ships to nobody; the cursor still advances
+    g.set_online(0, True)
+    assert g.followers[0].epoch < h.epoch
+    assert g.catch_up(0) >= 1  # explicit pull repairs it
+    assert g.followers[0].epoch == h.epoch
+    for _ in range(3):
+        _churn_once(h, rng)
+    fol = g.attach_follower()  # a NEW follower joins mid-stream
+    assert fol.epoch == h.epoch
+    assert fol.fingerprint() == image_fingerprint(h.device_image())
+    assert g.converged(h.device_image())
+
+
+def test_tree_offline_interior_node_subtree_catches_up():
+    rng = np.random.default_rng(17)
+    h = _mk("memento")
+    g = ReplicationGroup(h, 3, topology="tree", arity=2)
+    # nodes: leader 0 → {1, 2}; node 1 → {3}.  follower i is node i+1.
+    g.publish()
+    g.set_online(0, False)  # follower 0 = interior node 1
+    for _ in range(4):
+        _churn_once(h, rng)
+    g.publish()
+    assert g.followers[1].epoch == h.epoch  # node 2: fed by the leader
+    assert g.followers[0].epoch < h.epoch   # partitioned interior node
+    assert g.followers[2].epoch < h.epoch   # its subtree missed the relay
+    g.set_online(0, True)
+    for _ in range(3):
+        _churn_once(h, rng)
+    g.publish()  # both gaps detected; targeted pulls repair them in-round
+    assert g.stats.catchup_frames >= 2
+    assert g.converged(h.device_image())
+
+
+def test_driver_tree_storm_records_wire_metrics():
+    from repro.sim import make_trace, replay
+
+    trace = make_trace("churn_storm", seed=2, w=64, storms=2, burst=8,
+                       n_keys=256)
+    r = replay(trace, algo="memento", plane="jnp", sync_mode="overlap",
+               followers=3, repl_config={"topology": "tree", "arity": 2,
+                                         "batch_epochs": 0})
+    assert r.ok, [str(v) for v in r.violations]
+    s = r.summary()
+    assert s["followers"] == 3 and s["fanout_depth"] == 2
+    assert s["wire_frames_total"] > 0 and s["wire_bytes_total"] > 0
+    # tree: 2 leader sends per frame vs 3 flat
+    assert s["leader_sends_total"] == 2 * s["wire_frames_total"]
 
 
 def test_loopback_channel_drains_in_order():
@@ -266,3 +573,71 @@ def test_two_process_distributed_convergence(algo):
         line = [ln for ln in out.splitlines() if ln.startswith("RESULT")][-1]
         results.append(tuple(line.split()[1:]))
     assert results[0] == results[1], results  # same epoch, same fingerprint
+
+
+# ---------------------------------------------------------------------------
+# tree relay over a REAL 4-process jax.distributed mesh
+# ---------------------------------------------------------------------------
+
+_TREE_WORKER = textwrap.dedent("""
+    import os
+    import numpy as np
+    from repro.launch.mesh import init_distributed
+    pid = int(os.environ["REPL_PID"])
+    nproc = int(os.environ["REPL_NPROC"])
+    init_distributed("127.0.0.1:" + os.environ["REPL_PORT"], nproc, pid)
+    from repro.core import DeviceImageStore, image_fingerprint, make_hash
+    from repro.launch.replicate import DeltaPublisher, FollowerImageStore, \\
+        TreeBroadcast
+    chan = TreeBroadcast(arity=2)
+    steps = 12
+    if pid == 0:
+        rng = np.random.default_rng(0)
+        h = make_hash("memento", 64, variant="32")
+        store = DeviceImageStore(h)
+        pub = DeltaPublisher(h, batch_epochs=0)
+        chan.exchange(pub.frames())
+        for _ in range(steps):
+            for _ in range(3):  # a small burst per round → DELTA_BATCH
+                if rng.random() < 0.45 and h.working > 8:
+                    h.remove(h.lookup(int(rng.integers(1 << 30))))
+                else:
+                    h.add()
+            store.sync()
+            chan.exchange(pub.frames())
+        print("RESULT", store.epoch, image_fingerprint(store.image()),
+              flush=True)
+    else:
+        fol = FollowerImageStore()
+        for _ in range(steps + 1):
+            fol.apply_frames(chan.exchange())
+        print("RESULT", fol.epoch, fol.fingerprint(), flush=True)
+""")
+
+
+def test_four_process_tree_relay_convergence():
+    """4 OS processes on a real ``jax.distributed`` CPU mesh, arity-2 tree:
+    process 0 leads, process 1 relays the verbatim frames it applied to
+    process 3, process 2 is a leaf — every follower must reach the
+    leader's epoch and bit-identical fingerprint through the relay path."""
+    nproc = 4
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    procs = []
+    for pid in range(nproc):
+        env = dict(os.environ, JAX_PLATFORMS="cpu", REPL_PID=str(pid),
+                   REPL_PORT=str(port), REPL_NPROC=str(nproc),
+                   PYTHONPATH=src + os.pathsep + os.environ.get(
+                       "PYTHONPATH", ""))
+        procs.append(subprocess.Popen([sys.executable, "-c", _TREE_WORKER],
+                                      env=env, stdout=subprocess.PIPE,
+                                      stderr=subprocess.PIPE, text=True))
+    results = []
+    for p in procs:
+        out, err = p.communicate(timeout=240)
+        assert p.returncode == 0, f"worker failed:\n{out}\n{err}"
+        line = [ln for ln in out.splitlines() if ln.startswith("RESULT")][-1]
+        results.append(tuple(line.split()[1:]))
+    assert len(set(results)) == 1, results  # all four agree bit-identically
