@@ -65,8 +65,13 @@ def bench_scenarios(emit, *, w=64, n_keys=2048, probe_keys=1024,
             else:
                 kw = dict(w=w, n_keys=n_keys)
             trace = make_trace(name, seed=seed, **kw)
+            # the churn_storm protagonist cell replays with the telemetry
+            # plane live, so its summary embeds the full serving-stack
+            # registry snapshot into BENCH_scenarios.json (DESIGN.md §11)
+            telem = name == "churn_storm" and algo == "memento"
             r = replay(trace, algo=algo, plane="jnp",
-                       probe_keys=probe_keys, replica_k=replica_k)
+                       probe_keys=probe_keys, replica_k=replica_k,
+                       telemetry=telem)
             s = r.summary()
             s["violation_details"] = [str(v) for v in r.violations]
             if name in CROSS_PLANE:

@@ -11,6 +11,7 @@ Two modes:
       benchmarks/results/BENCH_engine.json      (unified engine + mesh plane)
       benchmarks/results/BENCH_scenarios.json   (scenario-engine lifecycles)
       benchmarks/results/BENCH_async.json       (overlapped epoch pipeline)
+      benchmarks/results/BENCH_obs.json         (telemetry-plane gates)
 
   Tables are keyed to the paper's figure numbers.  Rendering is a pure
   function of the artifacts, so CI can regenerate RESULTS.md and fail on
@@ -267,6 +268,48 @@ def _topology_table(repl: dict) -> str:
     return "\n".join(out)
 
 
+def _telemetry_counter_table(counters: dict) -> str:
+    """Registry counters grouped by subsystem prefix, one table."""
+    groups: dict[str, list[tuple[str, int]]] = {}
+    for name, v in sorted(counters.items()):
+        groups.setdefault(name.split(".", 1)[0], []).append((name, v))
+    out = ["| subsystem | counter | value |", "|---|---|---|"]
+    for prefix in ("engine", "store", "router", "plane", "repl", "sim"):
+        for name, v in groups.get(prefix, []):
+            out.append(f"| {prefix} | `{name}` | {v:,} |")
+    return "\n".join(out)
+
+
+def _telemetry_latency_table(hists: dict) -> str:
+    """Populated latency histograms: count + log-bucket quantiles (µs)."""
+    out = ["| histogram | count | p50 | p95 | p99 | max |",
+           "|---|---|---|---|---|---|"]
+    for name, h in sorted(hists.items()):
+        if not h["count"] or ".us" not in name:
+            continue
+        out.append(f"| `{name}` | {h['count']} | {h['p50']:.1f} | "
+                   f"{h['p95']:.1f} | {h['p99']:.1f} | {h['max']:.1f} |")
+    return "\n".join(out)
+
+
+def _obs_overhead_table(obs: dict) -> str:
+    lk, ins = obs["lookup"], obs["primitives"]
+    out = ["| measurement | value |", "|---|---|"]
+    out.append(f"| engine lookup, telemetry off (µs/key) | "
+               f"{lk['us_per_key_off']:.3f} |")
+    out.append(f"| engine lookup, telemetry on (µs/key) | "
+               f"{lk['us_per_key_on']:.3f} |")
+    out.append(f"| overhead (advisory, budget < 5 %) | "
+               f"{lk['overhead_pct']:+.1f} % |")
+    out.append(f"| live `counter.inc` / `histogram.observe` (ns/op) | "
+               f"{ins['counter_inc_ns_live']:.0f} / "
+               f"{ins['hist_observe_ns_live']:.0f} |")
+    out.append(f"| null `counter.inc` / `histogram.observe` (ns/op) | "
+               f"{ins['counter_inc_ns_null']:.0f} / "
+               f"{ins['hist_observe_ns_null']:.0f} |")
+    return "\n".join(out)
+
+
 def render_results() -> str:
     rows = _load_csv(RESULTS_DIR / "paper" / "bench.csv")
     churn = json.loads((RESULTS_DIR / "BENCH_churn.json").read_text())
@@ -274,6 +317,8 @@ def render_results() -> str:
     eng = json.loads((RESULTS_DIR / "BENCH_engine.json").read_text())
     scen = json.loads((RESULTS_DIR / "BENCH_scenarios.json").read_text())
     asy = json.loads((RESULTS_DIR / "BENCH_async.json").read_text())
+    obs_path = RESULTS_DIR / "BENCH_obs.json"
+    obs = json.loads(obs_path.read_text()) if obs_path.exists() else None
 
     s = []
     s.append("# RESULTS — measured reproduction tables\n")
@@ -442,6 +487,37 @@ def render_results() -> str:
     s.append(f"Async claims at capture time: **{claims}** "
              f"(followers={asy.get('followers')}, "
              f"cells={len(asy.get('results', {}))}).\n")
+
+    telem = scen["results"].get("churn_storm_memento", {}).get("telemetry")
+    if obs or telem:
+        s.append("## Beyond paper: runtime telemetry plane "
+                 "(DESIGN.md §11, `BENCH_obs.json`)\n")
+    if obs:
+        s.append("Cost of observing: the `repro.obs` registry instruments "
+                 "every serving layer.  Hard gates (all must PASS): "
+                 "telemetry never changes a lookup (bit-identical "
+                 "off/on/off), replay counter snapshots are deterministic, "
+                 "replay fingerprints match telemetry on vs off, and the "
+                 "Prometheus/JSONL exports round-trip.  The overhead row "
+                 "is advisory on shared runners.\n")
+        s.append(_obs_overhead_table(obs) + "\n")
+        claims = "PASS" if obs.get("claims_pass") else "MISMATCH"
+        s.append(f"Telemetry claims at capture time: **{claims}** "
+                 f"(lookup batch={obs['lookup']['n_keys']:,} keys, replay "
+                 f"events={obs['replay']['events']}, "
+                 f"sink events={obs['replay']['sink_events']}).\n")
+    if telem:
+        s.append("### Telemetry snapshot — `churn_storm` × memento, "
+                 "captured live during the scenario replay\n")
+        s.append("The registry snapshot `ScenarioDriver(telemetry=True)` "
+                 "embedded into `BENCH_scenarios.json`: every subsystem the "
+                 "storm touched, as the exposition endpoint would serve "
+                 "it.  Counters are bit-deterministic across replays of "
+                 "the resolved trace; histogram quantiles are log-bucketed "
+                 "wall-clock (advisory).\n")
+        s.append(_telemetry_counter_table(telem["counters"]) + "\n")
+        s.append("Latency distributions (µs):\n")
+        s.append(_telemetry_latency_table(telem["histograms"]) + "\n")
     return "\n".join(s)
 
 

@@ -41,6 +41,8 @@ def main(argv=None) -> int:
                     help="also run the unified-engine / sharded-plane benchmark")
     ap.add_argument("--scenarios", action="store_true",
                     help="also replay the scenario-engine lifecycle suite")
+    ap.add_argument("--obs", action="store_true",
+                    help="also run the telemetry-plane overhead benchmark")
     ap.add_argument("--async", dest="async_", action="store_true",
                     help="also run the overlapped-sync / follower-"
                          "replication storm benchmark")
@@ -128,6 +130,11 @@ def main(argv=None) -> int:
                             deg_w=128, deg_keys=256)
         else:
             bench_scenarios(emit)
+    if args.obs:
+        # telemetry-plane cost + determinism: NullRegistry no-op equality,
+        # enabled-overhead budget, replay counter determinism (DESIGN.md §11)
+        from .bench_obs import bench_obs
+        bench_obs(emit, quick=args.quick)
     if args.async_:
         # overlapped epoch pipeline: async dispatch vs blocking flip,
         # storm availability, follower convergence (DESIGN.md §9)

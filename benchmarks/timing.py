@@ -7,10 +7,20 @@ async dispatch can't end the clock before the device finishes).  This
 module is the ONE implementation — ``bench_engine``/``bench_churn``/
 ``bench_replicas``/``bench_async`` all import it instead of growing
 per-module ``_time()`` clones.
+
+The accumulator is an obs :class:`~repro.obs.metrics.Histogram` — the
+same log-bucketed primitive the runtime telemetry plane records into
+(DESIGN.md §11) — so benchmark timings and live latency metrics share one
+implementation.  Pass ``histogram=`` to land per-repeat samples on a
+registry you are snapshotting; the returned mean is computed from the
+histogram's exact sum/count deltas either way (bucketing never rounds
+it).
 """
 from __future__ import annotations
 
 import time
+
+from repro.obs.metrics import Histogram
 
 
 def _settle(out):
@@ -23,18 +33,28 @@ def _settle(out):
     return out
 
 
-def time_fn(fn, repeats: int = 3, *, warmup: int = 1) -> float:
+def time_fn(fn, repeats: int = 3, *, warmup: int = 1,
+            histogram: Histogram | None = None) -> float:
     """Mean wall-clock seconds per call of ``fn()``.
 
     Runs ``warmup`` untimed calls (compile + caches), then ``repeats``
     timed ones; every call's result is blocked on before its clock stops.
+    Each timed call's latency is observed (in µs) into ``histogram`` — a
+    fresh private one by default, or a shared registry histogram (e.g.
+    ``reg.histogram("bench.lookup.us")``) whose quantiles a telemetry
+    snapshot then exposes.  The mean comes from the histogram's sum/count
+    *deltas*, so pre-existing samples on a shared histogram never skew it.
     """
+    hist = histogram if histogram is not None else Histogram("bench.call.us")
     for _ in range(max(warmup, 0)):
         _settle(fn())
-    t0 = time.perf_counter()
+    c0, s0 = hist.count, hist.sum
     for _ in range(repeats):
+        t0 = time.perf_counter()
         _settle(fn())
-    return (time.perf_counter() - t0) / max(repeats, 1)
+        hist.observe((time.perf_counter() - t0) * 1e6)
+    n = hist.count - c0
+    return (hist.sum - s0) / 1e6 / max(n, 1)
 
 
 def block_image(image) -> None:

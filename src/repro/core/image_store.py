@@ -45,10 +45,12 @@ space).
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs.metrics import default_registry as _default_obs
 from .protocol import (ALGORITHM_REGISTRY, ConsistentHash, DeviceImage,
                        ImageDelta, required_lengths, round_up)
 
@@ -123,20 +125,22 @@ class SyncHandle:
             store._account(stats)
 
     @property
-    def done(self) -> bool:
+    def done(self) -> bool:  # obs-exempt: pure accessor
         return self._done
 
     @property
-    def stats(self) -> SyncStats:
+    def stats(self) -> SyncStats:  # obs-exempt: pure accessor
         """Target-epoch stats (valid before and after the flip)."""
         return self._stats
 
     def ready(self) -> bool:
         """True iff every dispatched device buffer has materialized.
 
+
         Non-blocking: uses ``jax.Array.is_ready()``.  Arrays without the
         probe (plain numpy in interpret paths) count as ready.
         """
+        # obs-exempt: readiness probe only, no device dispatch
         if self._done:
             return True
         return all(v.is_ready() for v in self._new.arrays.values()
@@ -145,6 +149,7 @@ class SyncHandle:
     def poll(self) -> bool:
         """Flip iff the device result is ready; never blocks.  Returns
         whether the handle is done (flipped or was a noop)."""
+        # obs-exempt: delegates to commit(), which records the flip
         if not self._done and self.ready():
             self.commit()
         return self._done
@@ -154,13 +159,19 @@ class SyncHandle:
         with self._store._lock:
             if self._done:
                 return self._stats
-            for v in self._new.arrays.values():
-                if hasattr(v, "block_until_ready"):
-                    v.block_until_ready()
-            self._store._flip(self._new, self._new_mirror, self._stats)
+            reg = self._store._obs()
+            with reg.span("store.sync.commit", epoch=self._stats.epoch):
+                with reg.span("store.sync.materialize"):
+                    for v in self._new.arrays.values():
+                        if hasattr(v, "block_until_ready"):
+                            v.block_until_ready()
+                with reg.span("store.sync.flip", epoch=self._stats.epoch):
+                    self._store._flip(self._new, self._new_mirror,
+                                      self._stats)
             self._done = True
             if self._store._pending is self:
                 self._store._pending = None
+            reg.gauge("store.pending").set(0)
         return self._stats
 
 
@@ -169,10 +180,11 @@ class DeviceImageStore:
 
     def __init__(self, ch: ConsistentHash, *, plane: str = "jnp",
                  headroom: int = 2, interpret: bool | None = None,
-                 compact: bool = False):
+                 compact: bool = False, registry=None):
         if plane not in ("jnp", "pallas"):
             raise ValueError(f"unknown plane {plane!r}")
         self._ch = ch
+        self._registry = registry  # None → follow the process default
         self.plane = plane
         self.headroom = max(1, headroom)
         self.compact = compact
@@ -187,6 +199,12 @@ class DeviceImageStore:
         self._lock = threading.RLock()
         self._pending: SyncHandle | None = None
         self._rebuild()
+
+    def _obs(self):
+        """The live telemetry registry (DESIGN.md §11): the injected one,
+        else whatever the process default currently is — so ``enable()``
+        after construction still reaches existing stores."""
+        return self._registry or _default_obs()
 
     # -- buffers ---------------------------------------------------------------
     def _snapshot(self) -> tuple[DeviceImage, dict | None]:
@@ -223,18 +241,18 @@ class DeviceImageStore:
         return self._ch.size
 
     @property
-    def epoch(self) -> int:
+    def epoch(self) -> int:  # obs-exempt: pure accessor
         return self._front.epoch
 
     @property
-    def capacity(self) -> dict[str, int]:
+    def capacity(self) -> dict[str, int]:  # obs-exempt: pure accessor
         return {k: int(v.shape[0]) for k, v in self._front.arrays.items()}
 
-    def image(self) -> DeviceImage:
+    def image(self) -> DeviceImage:  # obs-exempt: pure accessor
         """The serving (front) image.  Immutable: syncs replace, never edit."""
         return self._front
 
-    def previous_image(self) -> DeviceImage | None:
+    def previous_image(self) -> DeviceImage | None:  # obs-exempt: pure accessor
         """The retained pre-sync epoch (migration-diff comparand), if any."""
         return self._prev
 
@@ -248,13 +266,21 @@ class DeviceImageStore:
         ``previous_image()`` and the flip is atomic.  Any pending async
         epoch is committed first, so epochs stay linear.
         """
-        self.flush()
-        new, mirror, stats = self._prepare()
-        with self._lock:
-            if new is not None:
-                self._flip(new, mirror, stats)
-            else:
-                self._account(stats)
+        reg = self._obs()
+        t0 = time.perf_counter_ns() if reg.active else 0
+        with reg.span("store.sync", mode="block"):
+            self.flush()
+            with reg.span("store.sync.dispatch"):
+                new, mirror, stats = self._prepare()
+            with self._lock:
+                if new is not None:
+                    with reg.span("store.sync.flip", epoch=stats.epoch):
+                        self._flip(new, mirror, stats)
+                else:
+                    self._account(stats)
+        if reg.active:
+            reg.histogram("store.sync.us", mode=stats.mode).observe(
+                (time.perf_counter_ns() - t0) / 1e3)
         return stats
 
     def sync_async(self) -> SyncHandle:
@@ -268,26 +294,31 @@ class DeviceImageStore:
         epochs remain linear).  Lookups issued meanwhile are epoch-N
         consistent; lookups after the commit are epoch-N+1 consistent.
         """
-        self.flush()
-        new, mirror, stats = self._prepare()
+        reg = self._obs()
+        with reg.span("store.sync.dispatch", mode="overlap"):
+            self.flush()
+            new, mirror, stats = self._prepare()
         handle = SyncHandle(self, stats, new, mirror)
         if not handle.done:
             self._pending = handle
+            reg.gauge("store.pending").set(1)
         return handle
 
     def poll(self) -> bool:
         """Commit the pending async epoch iff its device result is ready
         (never blocks).  True when no flip remains outstanding."""
+        # obs-exempt: delegates to SyncHandle.commit (instrumented)
         h = self._pending
         return h.poll() if h is not None else True
 
     def flush(self) -> SyncStats | None:
         """Commit the pending async epoch, blocking if needed."""
+        # obs-exempt: delegates to SyncHandle.commit (instrumented)
         h = self._pending
         return h.commit() if h is not None else None
 
     @property
-    def pending(self) -> SyncHandle | None:
+    def pending(self) -> SyncHandle | None:  # obs-exempt: pure accessor
         """The in-flight ``sync_async`` handle, if any."""
         return self._pending
 
@@ -329,6 +360,18 @@ class DeviceImageStore:
         self.totals.events += stats.events
         self.totals.words += stats.words
         self.last_sync = stats
+        reg = self._obs()
+        if reg.active:  # mirror SyncTotals onto the registry (one source
+            reg.counter("store.syncs").inc()  # of counters for exporters)
+            reg.counter("store.sync_events").inc(stats.events)
+            if stats.mode == "delta":
+                reg.counter("store.delta_applies").inc()
+                reg.counter("store.delta_words").inc(stats.words)
+            elif stats.mode == "snapshot":
+                reg.counter("store.snapshot_rebuilds").inc()
+                reg.counter("store.snapshot_words").inc(stats.words)
+            reg.sink.emit("sync", mode=stats.mode, events=stats.events,
+                          words=stats.words, epoch=stats.epoch)
 
     def _drain_delta(self) -> ImageDelta | None:
         ch = self._ch
@@ -386,8 +429,16 @@ class DeviceImageStore:
         from repro.kernels.engine import engine_lookup
 
         plane = plane or self.plane
-        return np.asarray(engine_lookup(keys, self._front, k=k, plane=plane,
-                                        **kw))
+        reg = self._obs()
+        t0 = time.perf_counter_ns() if reg.active else 0
+        out = np.asarray(engine_lookup(keys, self._front, k=k, plane=plane,
+                                       **kw))
+        if reg.active:
+            reg.counter("store.lookups").inc()
+            reg.counter("store.lookup_keys").inc(int(out.shape[0]))
+            reg.histogram("store.lookup.us").observe(
+                (time.perf_counter_ns() - t0) / 1e3)
+        return out
 
     def migration_diff(self, keys, *, plane: str = "jnp", k: int = 1, **kw):
         """Moved-key mask between the retained epoch and the front epoch
@@ -396,5 +447,6 @@ class DeviceImageStore:
 
         if self._prev is None:
             raise ValueError("no previous epoch retained (sync() first)")
-        return engine_diff(keys, self._prev, self._front, plane=plane, k=k,
-                           **kw)
+        with self._obs().span("store.diff", epoch=self._front.epoch):
+            return engine_diff(keys, self._prev, self._front, plane=plane,
+                               k=k, **kw)

@@ -34,6 +34,8 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.obs.metrics import default_registry as _obs_registry
+
 CACHE_ENV = "REPRO_TUNE_CACHE"
 CACHE_VERSION = 1
 DEFAULT_CACHE_PATH = (Path(__file__).resolve().parents[3]
@@ -161,7 +163,12 @@ def set_active_cache(cache: TuneCache | None) -> None:
 
 def lookup_tuned(op, n_keys: int, table_n: int,
                  backend: str | None = None) -> TunedConfig | None:
-    return active_cache().get(grid_key(op, n_keys, table_n, backend))
+    cfg = active_cache().get(grid_key(op, n_keys, table_n, backend))
+    reg = _obs_registry()
+    if reg.active:
+        reg.counter("engine.autotune.hit" if cfg is not None
+                    else "engine.autotune.miss").inc()
+    return cfg
 
 
 def resolve_block_rows(op, n_keys: int, table_n: int,

@@ -40,6 +40,7 @@ kernels ran, block padding included.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 
 import jax
@@ -54,6 +55,7 @@ from repro.core.jax_lookup import lookup_dispatch
 from repro.core.packing import PACKED_LAYOUT, build_slots
 from repro.core.protocol import (ALGORITHMS, IMAGE_LAYOUT, REPLICA_SALT_CAP,
                                  image_scalar_vec)
+from repro.obs.metrics import default_registry as _obs_registry
 from .primitives import fmix32, gather1d, hash2, jump32, power32, table_shape2d
 
 _U = jnp.uint32
@@ -75,6 +77,20 @@ def _resolve_block_rows(op, n_keys: int, table_n: int,
         return block_rows
     from . import autotune  # lazy: autotune ↔ engine would cycle at import
     return autotune.resolve_block_rows(op, n_keys, table_n)
+
+
+def _obs_dispatch(reg, op: EngineOp, n_keys: int, t0_ns: int) -> None:
+    """Fold one engine dispatch into the live telemetry registry
+    (DESIGN.md §11): dispatches served, keys, batch-size distribution, and
+    a per-:class:`EngineOp` latency histogram keyed by the autotuner's op
+    tag.  Counters are integers of replayed control flow, so a replay's
+    counter snapshot is bit-identical; only the latency buckets float."""
+    from .autotune import op_tag
+    reg.counter("engine.dispatches").inc()
+    reg.counter("engine.keys").inc(n_keys)
+    reg.histogram("engine.batch_keys").observe(n_keys)
+    reg.histogram("engine.dispatch.us", op=op_tag(op)).observe(
+        (time.perf_counter_ns() - t0_ns) / 1e3)
 
 
 # ---------------------------------------------------------------------------
@@ -631,6 +647,8 @@ def engine_lookup(keys, image, *, k: int = 1, load=None, cap: int | None = None,
     table = _op_table(image, table)
     op = EngineOp(algo=image.algo, k=k, bounded=bounded, table=table)
     keys = jnp.asarray(keys, dtype=_U)
+    _reg = _obs_registry()
+    _t0 = time.perf_counter_ns() if _reg.active else 0
     if plane == "jnp":
         if table == "compact":
             raise ValueError("jnp plane serves the dense layout")
@@ -656,6 +674,9 @@ def engine_lookup(keys, image, *, k: int = 1, load=None, cap: int | None = None,
                               interpret=interpret)
         flat = [o.reshape(-1)[:nk] for o in outs]
         out = flat[0] if k == 1 else jnp.stack(flat).T
+    if _reg.active:
+        _reg.counter("engine.lookups").inc()
+        _obs_dispatch(_reg, op, int(keys.shape[0]), _t0)
     if bounded:
         # Slots are only accepted when distinct AND below the cap, so an
         # over-cap bucket OR a duplicate row means that lane exhausted the
@@ -715,6 +736,24 @@ def engine_diff(keys, old_image, new_image, *, k: int = 1,
     """Fused epoch diff: lookup a key batch under two images in ONE program
     (jnp) / ONE launch (pallas, both epoch tables in VMEM).  ``k>1`` diffs
     whole replica sets — the movement planners' view of replica churn."""
+    reg = _obs_registry()
+    if not reg.active:
+        return _engine_diff(keys, old_image, new_image, k=k, plane=plane,
+                            interpret=interpret, block_rows=block_rows)
+    t0 = time.perf_counter_ns()
+    out = _engine_diff(keys, old_image, new_image, k=k, plane=plane,
+                       interpret=interpret, block_rows=block_rows)
+    reg.counter("engine.diffs").inc()
+    reg.counter("engine.moved_keys").inc(out.num_moved)
+    _obs_dispatch(reg, EngineOp(algo=new_image.algo, k=k, diff=True,
+                                table=_op_table(new_image)),
+                  int(np.shape(keys)[0]), t0)
+    return out
+
+
+def _engine_diff(keys, old_image, new_image, *, k: int = 1,
+                 plane: str = "jnp", interpret: bool | None = None,
+                 block_rows: int | None = None) -> EngineDiff:
     keys = jnp.asarray(keys, dtype=_U)
     if plane == "jnp":
         if old_image.algo != new_image.algo:
@@ -780,6 +819,8 @@ def engine_chain_walk(chain, probe, pending, image, load, cap, *,
     of its rehash chain with ``load[b] < cap``.  Returns numpy
     ``(b, chain, probe)``; non-pending lanes come back unchanged."""
     op = EngineOp(algo=image.algo, mode="walk", table=_op_table(image))
+    _reg = _obs_registry()
+    _t0 = time.perf_counter_ns() if _reg.active else 0
     chain = jnp.asarray(chain, dtype=_U)
     probe = jnp.asarray(probe, dtype=jnp.int32)
     pending = jnp.asarray(pending, dtype=jnp.bool_)
@@ -788,6 +829,9 @@ def engine_chain_walk(chain, probe, pending, image, load, cap, *,
         arrays, scalars = _jnp_operands([image])
         b, ch, pr = _engine_jnp((chain, probe, pending), arrays, scalars,
                                 load, jnp.asarray(cap, jnp.int32), op=op)
+        if _reg.active:
+            _reg.counter("engine.walk_steps").inc()
+            _obs_dispatch(_reg, op, int(chain.shape[0]), _t0)
         return (np.asarray(b), np.asarray(ch).astype(np.uint32),
                 np.asarray(pr))
     if plane != "pallas":
@@ -804,6 +848,9 @@ def engine_chain_walk(chain, probe, pending, image, load, cap, *,
         tuple(_tables2d(tables)), op=op,
         block_rows=_resolve_block_rows(op, nk, int(image.n), block_rows),
         interpret=interpret)
+    if _reg.active:
+        _reg.counter("engine.walk_steps").inc()
+        _obs_dispatch(_reg, op, nk, _t0)
     take = lambda x: np.asarray(x.reshape(-1)[:nk])  # noqa: E731
     return take(b), take(ch).astype(np.uint32), take(pr)
 
@@ -826,6 +873,7 @@ def bounded_assign(keys, image, load, cap: int, *, plane: str = "jnp",
     out = np.full(m, -1, np.int32)
     pending = np.ones(m, bool)
     load = np.asarray(load, dtype=np.int32).copy()
+    rounds = 0
     while pending.any():
         b, chain, probe = engine_chain_walk(chain, probe, pending, image,
                                             load, cap, plane=plane,
@@ -837,6 +885,11 @@ def bounded_assign(keys, image, load, cap: int, *, plane: str = "jnp",
         out[accept_idx] = b[accept_idx]
         np.add.at(load, b[accept_idx], 1)
         pending[accept_idx] = False
+        rounds += 1
+    reg = _obs_registry()
+    if reg.active:
+        reg.counter("engine.bounded_assigns").inc()
+        reg.counter("engine.bounded_rounds").inc(rounds)
     return out, load
 
 

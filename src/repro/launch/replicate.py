@@ -68,6 +68,8 @@ from repro.core.packing import PACKED_LAYOUT, pack_image
 from repro.core.protocol import (ALGORITHM_REGISTRY, ALGORITHMS,
                                  IMAGE_LAYOUT, DeviceImage, ImageDelta,
                                  image_fingerprint, round_up)
+from repro.obs.metrics import default_registry as _default_obs
+from repro.obs.metrics import ensure_real
 
 #: frame type tags
 KIND_DELTA = 1
@@ -305,8 +307,9 @@ class DeltaPublisher:
     _CATCHUP_LOG_CAP = 512
 
     def __init__(self, ch, *, headroom: int = 2, batch_epochs: int = 0,
-                 packed: bool = False):
+                 packed: bool = False, registry=None):
         self._ch = ch
+        self._registry = registry  # None → follow the process default
         self.headroom = max(1, headroom)
         self.batch_epochs = max(0, int(batch_epochs))
         self.packed = bool(packed)
@@ -318,8 +321,12 @@ class DeltaPublisher:
         # (base, epoch, wire updates, n, scalars) — catch-up composition.
         self._log: list[tuple] = []
 
+    def _obs(self):
+        """The live telemetry registry (injected, else process default)."""
+        return self._registry or _default_obs()
+
     @property
-    def published_epoch(self) -> int | None:
+    def published_epoch(self) -> int | None:  # obs-exempt: pure accessor
         return self._epoch
 
     @property
@@ -357,6 +364,17 @@ class DeltaPublisher:
     def frames(self) -> list[np.ndarray]:
         """Frames advancing subscribers to the current host epoch
         (empty when already published)."""
+        reg = self._obs()
+        with reg.span("repl.encode"):
+            out = self._encode_frames()
+        if reg.active and out:
+            for buf in out:
+                kind = ("snapshot" if _peek_kind(buf) in _SNAPSHOT_KINDS
+                        else "delta")
+                reg.counter("repl.frames_encoded", kind=kind).inc()
+        return out
+
+    def _encode_frames(self) -> list[np.ndarray]:
         cur = getattr(self._ch, "epoch", None)
         if self._epoch is None:
             return [self._snapshot_frame()]
@@ -410,6 +428,7 @@ class DeltaPublisher:
         if follower_epoch > self._epoch:
             raise ValueError(f"follower epoch {follower_epoch} is ahead of "
                              f"the published cursor {self._epoch}")
+        self._obs().counter("repl.catchup_serves").inc()
         start = next((i for i, ent in enumerate(self._log)
                       if ent[0] == follower_epoch), None)
         if start is not None:
@@ -471,11 +490,12 @@ class FollowerImageStore:
     """
 
     def __init__(self, *, plane: str = "jnp", interpret: bool | None = None,
-                 compact: bool | None = None):
+                 compact: bool | None = None, registry=None):
         if plane not in ("jnp", "pallas"):
             raise ValueError(f"unknown plane {plane!r}")
         self.plane = plane
         self.compact = compact
+        self._registry = registry  # None → follow the process default
         if interpret is None:
             import jax
             interpret = jax.default_backend() != "tpu"
@@ -487,16 +507,20 @@ class FollowerImageStore:
         self.batches = 0        # multi-epoch DELTA_BATCH frames applied
         self.stale_skipped = 0  # idempotently dropped (epoch ≤ current)
 
+    def _obs(self):
+        """The live telemetry registry (injected, else process default)."""
+        return self._registry or _default_obs()
+
     @property
-    def epoch(self) -> int:
+    def epoch(self) -> int:  # obs-exempt: pure accessor
         return -1 if self._front is None else self._front.epoch
 
-    def image(self) -> DeviceImage:
+    def image(self) -> DeviceImage:  # obs-exempt: pure accessor
         if self._front is None:
             raise ValueError("no snapshot received yet")
         return self._front
 
-    def fingerprint(self) -> str:
+    def fingerprint(self) -> str:  # obs-exempt: host-side hash, no wire
         """Canonical convergence fingerprint: packed replicas hash their
         dense-equivalent image so dense and compact followers of the same
         leader epoch fingerprint equal."""
@@ -513,6 +537,7 @@ class FollowerImageStore:
 
     # -- frame application -----------------------------------------------------
     def apply_frame(self, buf: np.ndarray) -> None:
+        # obs-exempt: delegates to apply_frames (instrumented)
         self.apply_frames([buf])
 
     def apply_frames(self, bufs: list[np.ndarray]) -> int:
@@ -525,6 +550,21 @@ class FollowerImageStore:
         A chain with a REAL gap (a base epoch no frame in the batch
         reaches) still raises — reordering repairs shuffles, not losses.
         """
+        reg = self._obs()
+        before = (self.snapshots, self.deltas, self.stale_skipped)
+        with reg.span("repl.drain", n_frames=len(bufs)):
+            applied = self._drain(bufs)
+        if reg.active:
+            reg.counter("repl.frames_applied").inc(applied)
+            reg.counter("repl.snapshots_installed").inc(
+                self.snapshots - before[0])
+            reg.counter("repl.deltas_applied").inc(self.deltas - before[1])
+            reg.counter("repl.stale_skipped").inc(
+                self.stale_skipped - before[2])
+            reg.gauge("repl.follower_epoch").set(self.epoch)
+        return applied
+
+    def _drain(self, bufs: list[np.ndarray]) -> int:
         frames = [decode_frame(b) for b in bufs]
         if not frames:
             return 0
@@ -608,8 +648,12 @@ class FollowerImageStore:
         packed replicas dispatch the compact reader, no dense decode)."""
         from repro.kernels.engine import engine_lookup
 
-        return np.asarray(engine_lookup(keys, self.image(), k=k,
-                                        plane=self.plane, **kw))
+        reg = self._obs()
+        out = np.asarray(engine_lookup(keys, self.image(), k=k,
+                                       plane=self.plane, **kw))
+        if reg.active:
+            reg.counter("repl.follower_lookup_keys").inc(int(out.shape[0]))
+        return out
 
 
 # -- topology -----------------------------------------------------------------
@@ -801,13 +845,20 @@ class ReplicationGroup:
 
     def __init__(self, ch, num_followers: int = 1, *, plane: str = "jnp",
                  headroom: int = 2, topology: str = "flat", arity: int = 2,
-                 batch_epochs: int = 0, packed: bool = False):
+                 batch_epochs: int = 0, packed: bool = False, registry=None):
         if topology not in ("flat", "tree"):
             raise ValueError(f"unknown topology {topology!r}")
+        # lag/repair gauges are part of the group's public API, so they
+        # must record even with telemetry globally off: the injected (or
+        # process-default) registry when it is live, else a private one.
+        self.telemetry = ensure_real(registry or _default_obs())
         self.publisher = DeltaPublisher(ch, headroom=headroom,
                                         batch_epochs=batch_epochs,
-                                        packed=packed)
-        self.followers = [FollowerImageStore(plane=plane, compact=packed or None)
+                                        packed=packed,
+                                        registry=self.telemetry)
+        self.followers = [FollowerImageStore(plane=plane,
+                                             compact=packed or None,
+                                             registry=self.telemetry)
                           for _ in range(num_followers)]
         self.tree = (TreeTopology(num_followers, arity=arity)
                      if topology == "tree" else None)
@@ -820,7 +871,7 @@ class ReplicationGroup:
                              "catchup_frames": 0}
 
     @property
-    def depth(self) -> int:
+    def depth(self) -> int:  # obs-exempt: pure accessor
         """Fan-out depth: relay hops from leader to the farthest follower."""
         if self.tree is not None:
             return self.tree.depth
@@ -829,28 +880,45 @@ class ReplicationGroup:
     def set_online(self, i: int, online: bool = True) -> None:
         """Partition (or heal) follower ``i``: offline followers receive no
         frames — and, in a tree, relay none to their subtree."""
+        # obs-exempt: topology toggle, no frames move here
         self._online[i] = bool(online)
 
     # -- publishing ------------------------------------------------------------
     def publish(self) -> list[int]:
-        frames = self.publisher.frames()
-        target = getattr(self._ch, "epoch", 0)
-        lags = [max(0, target - max(f.epoch, 0)) for f in self.followers]
+        reg = self.telemetry
         before = (self.stats.frames, self.stats.total_bytes,
                   self.stats.leader_sends, self.stats.catchup_frames)
-        if frames:
-            self.stats.publishes += 1
-            self.stats.frames += len(frames)
-            if self.tree is None:
-                self._deliver_flat(frames)
-            else:
-                self._deliver_tree(frames)
+        with reg.span("repl.publish", topology=self.topology):
+            frames = self.publisher.frames()
+            target = getattr(self._ch, "epoch", 0)
+            lags = [max(0, target - max(f.epoch, 0))
+                    for f in self.followers]
+            if frames:
+                self.stats.publishes += 1
+                self.stats.frames += len(frames)
+                with reg.span("repl.relay", n_frames=len(frames)):
+                    if self.tree is None:
+                        self._deliver_flat(frames)
+                    else:
+                        self._deliver_tree(frames)
         self.last_publish = {
             "frames": self.stats.frames - before[0],
             "bytes": self.stats.total_bytes - before[1],
             "leader_sends": self.stats.leader_sends - before[2],
             "catchup_frames": self.stats.catchup_frames - before[3],
         }
+        if frames:
+            reg.counter("repl.publishes").inc()
+        reg.counter("repl.wire_frames").inc(self.last_publish["frames"])
+        reg.counter("repl.wire_bytes").inc(self.last_publish["bytes"])
+        reg.counter("repl.leader_sends").inc(
+            self.last_publish["leader_sends"])
+        for i, lag in enumerate(lags):
+            reg.gauge("repl.follower_lag", follower=i).set(lag)
+        reg.gauge("repl.follower_lag_max").set(max(lags, default=0))
+        reg.sink.emit("publish", **self.last_publish,
+                      epoch=self.publisher.published_epoch,
+                      lag_max=max(lags, default=0))
         return lags
 
     @staticmethod
@@ -902,7 +970,8 @@ class ReplicationGroup:
                  if _peek_kind(b) in _DELTA_KINDS]
         if not has_snap and bases and min(bases) > fol.epoch:
             batch = self._pull_catchup(fol.epoch) + batch
-        fol.apply_frames(batch)
+        with self.telemetry.span("repl.apply", follower=i):
+            fol.apply_frames(batch)
 
     def _pull_catchup(self, epoch: int) -> list[np.ndarray]:
         cf = self.publisher.catchup_frames(epoch)
@@ -913,12 +982,16 @@ class ReplicationGroup:
         self.stats.total_sends += len(cf)
         self.stats.leader_bytes += nbytes
         self.stats.total_bytes += nbytes
+        self.telemetry.counter("repl.catchup_repairs").inc()
+        self.telemetry.counter("repl.catchup_frames").inc(len(cf))
+        self.telemetry.counter("repl.catchup_bytes").inc(nbytes)
         return cf
 
     # -- the pull path ---------------------------------------------------------
     def catch_up(self, i: int) -> int:
         """Explicitly repair follower ``i`` to the published cursor via the
         targeted pull; returns the number of catch-up frames served."""
+        # obs-exempt: delegates to publish/_pull_catchup (instrumented)
         self.publish()  # the stream ships to everyone first (leader-decides)
         fol = self.followers[i]
         if fol.epoch == self.publisher.published_epoch:
@@ -932,14 +1005,17 @@ class ReplicationGroup:
         its own (empty) base instead of stalling until the next publish."""
         self.publish()
         fol = FollowerImageStore(plane=self._plane,
-                                 compact=self.publisher.packed or None)
+                                 compact=self.publisher.packed or None,
+                                 registry=self.telemetry)
         cf = self._pull_catchup(fol.epoch)
         fol.apply_frames(cf)
         self.followers.append(fol)
         self._online.append(True)
+        self.telemetry.counter("repl.followers_attached").inc()
         return fol
 
     def converged(self, leader_image: DeviceImage) -> bool:
+        # obs-exempt: host-side fingerprint comparison, no wire
         want = image_fingerprint(leader_image)
         return all(f.epoch == leader_image.epoch and f.fingerprint() == want
                    for f in self.followers)

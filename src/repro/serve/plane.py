@@ -30,11 +30,13 @@ check).
 from __future__ import annotations
 
 import functools
+import time
 
 import numpy as np
 
 from repro.core.packing import image_table_names
 from repro.core.protocol import image_scalar_vec
+from repro.obs.metrics import default_registry as _default_obs
 
 
 def _is_store(source) -> bool:
@@ -55,7 +57,8 @@ class ShardedLookupPlane:
 
     def __init__(self, source, *, mesh=None, axes: tuple[str, ...] | None = None,
                  k: int = 1, plane: str = "jnp", interpret: bool | None = None,
-                 block_rows: int | None = None, sync_mode: str = "block"):
+                 block_rows: int | None = None, sync_mode: str = "block",
+                 registry=None):
         import jax
 
         if plane not in ("jnp", "pallas", "auto"):
@@ -76,14 +79,19 @@ class ShardedLookupPlane:
                            if interpret is None else interpret)
         self._block_rows = block_rows
         self._source = source
+        self._registry = registry  # None → follow the process default
         self._image = None       # host-side image the device copy mirrors
         self._dev = None         # (arrays dict, scalars tuple) replicated
         self._rep_cache: dict = {}  # name → (source array, replicated copy)
         self._fns: dict = {}     # (algo, shape sig, padded) → jitted program
 
+    def _obs(self):
+        """The live telemetry registry (injected, else process default)."""
+        return self._registry or _default_obs()
+
     # -- mesh geometry -------------------------------------------------------
     @property
-    def num_shards(self) -> int:
+    def num_shards(self) -> int:  # obs-exempt: mesh geometry
         n = 1
         sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
         for a in self.axes:
@@ -91,7 +99,7 @@ class ShardedLookupPlane:
         return n
 
     @property
-    def lanes(self) -> int:
+    def lanes(self) -> int:  # obs-exempt: mesh geometry
         """Key-count granularity: every shard gets 128-aligned rows."""
         return self.num_shards * 128
 
@@ -131,6 +139,7 @@ class ShardedLookupPlane:
         img = self._current_image()
         if self._dev is not None and img is self._image:
             return
+        self._obs().counter("plane.repins").inc()
         rep = NamedSharding(self.mesh, P())
         names = image_table_names(img)
         arrays = {}
@@ -238,12 +247,17 @@ class ShardedLookupPlane:
     # -- public data plane ---------------------------------------------------
     def lookup(self, keys) -> np.ndarray:
         """Sharded batched lookup: keys [K] → np int32 [K] (k=1) or [K, k]."""
+        reg = self._obs()
+        t0 = time.perf_counter_ns() if reg.active else 0
         self._poll_source()
         self._ensure()
         dev, n, padded = self._stage(keys)
         arrays, scalars = self._dev
         out = self._sharded_fn(padded)(dev, arrays, scalars)
-        return self._finish(out, n)
+        res = self._finish(out, n)
+        if reg.active:
+            self._record_batch(reg, n, padded, t0)
+        return res
 
     def route_stream(self, batches):
         """Stream key batches through the plane with double buffering.
@@ -252,18 +266,31 @@ class ShardedLookupPlane:
         buffers and the one-batch pipeline keep host staging of batch
         *i+1* overlapped with device compute of batch *i*.
         """
+        reg = self._obs()
         pending = None  # (device out, n)
         for batch in batches:
+            t0 = time.perf_counter_ns() if reg.active else 0
             self._poll_source()  # overlap: commit a ready async epoch
             self._ensure()  # pick up any epoch flip between batches
             arrays, scalars = self._dev
             dev, n, padded = self._stage(batch)
             out = self._sharded_fn(padded)(dev, arrays, scalars)  # async
+            if reg.active:  # dispatch latency — materialization overlaps
+                self._record_batch(reg, n, padded, t0)
             if pending is not None:
                 yield self._finish(*pending)
             pending = (out, n)
         if pending is not None:
             yield self._finish(*pending)
+
+    def _record_batch(self, reg, n: int, padded: int, t0_ns: int) -> None:
+        """Per-batch plane telemetry: batch/key counters, the per-shard
+        batch-size distribution, and the host-side dispatch latency."""
+        reg.counter("plane.batches").inc()
+        reg.counter("plane.keys").inc(n)
+        reg.histogram("plane.shard_keys").observe(padded // self.num_shards)
+        reg.histogram("plane.dispatch.us").observe(
+            (time.perf_counter_ns() - t0_ns) / 1e3)
 
     def _finish(self, out, n) -> np.ndarray:
         out = np.asarray(out)

@@ -25,6 +25,7 @@ streams of batches across every device via the mesh-sharded
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
@@ -32,14 +33,51 @@ import numpy as np
 
 from repro.core import ConsistentHash, DeviceImageStore, make_hash
 from repro.core.hashing import key_to_u32
+from repro.obs.metrics import default_registry as _default_obs
+from repro.obs.metrics import ensure_real
 
 
-@dataclass
 class RouterStats:
-    routed: int = 0
-    moved_on_failure: int = 0
-    affinity_hits: int = 0
-    failovers: int = 0
+    """Live view over the router's ``router.*`` telemetry counters.
+
+    The historical dataclass API is preserved — ``stats.routed`` reads,
+    ``stats.routed += n`` writes — but the counters on a
+    :class:`~repro.obs.metrics.MetricRegistry` are the store, so the same
+    numbers flow to the exposition/snapshot exporters (DESIGN.md §11).
+    With telemetry off the view rides a private registry
+    (:func:`~repro.obs.metrics.ensure_real`), so the API never goes dark.
+    Attribute writes are deltas on monotonic counters; rewinding (setting
+    a smaller value) is a no-op.
+    """
+
+    FIELDS = ("routed", "moved_on_failure", "affinity_hits", "failovers")
+
+    def __init__(self, registry=None):
+        object.__setattr__(self, "_counters",
+                           {f: ensure_real(registry).counter(f"router.{f}")
+                            for f in self.FIELDS})
+
+    def __getattr__(self, name):
+        counters = object.__getattribute__(self, "_counters")
+        if name in counters:
+            return counters[name].value
+        raise AttributeError(name)
+
+    def __setattr__(self, name, value) -> None:
+        counters = self._counters
+        if name in counters:
+            delta = int(value) - counters[name].value
+            if delta > 0:
+                counters[name].inc(delta)
+            return
+        object.__setattr__(self, name, value)
+
+    def as_dict(self) -> dict:
+        return {f: getattr(self, f) for f in self.FIELDS}
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{f}={getattr(self, f)}" for f in self.FIELDS)
+        return f"RouterStats({inner})"
 
 
 class SessionRouter:
@@ -57,7 +95,7 @@ class SessionRouter:
                  store: DeviceImageStore | None = None,
                  compact_images: bool = False,
                  block_rows: int | None = None,
-                 sync_mode: str = "block"):
+                 sync_mode: str = "block", registry=None):
         if isinstance(algo, str):
             # variant="32": host lookups bit-identical to the device plane.
             self.ch = make_hash(algo, num_replicas, capacity=capacity, variant="32")
@@ -77,7 +115,11 @@ class SessionRouter:
         # explicit Pallas tile height (None → the autotuner's winner)
         self.compact_images = compact_images
         self.block_rows = block_rows
-        self.stats = RouterStats()
+        self._registry = registry  # None → follow the process default
+        # stats land on the injected registry when it records, else on the
+        # process default, else on the view's own private registry — the
+        # public counter API works with telemetry globally off.
+        self.stats = RouterStats(registry or _default_obs())
         self.max_sessions = max_sessions
         # session id → last replica (metrics), LRU-bounded: million-session
         # fleets must not grow host memory without limit.
@@ -100,18 +142,25 @@ class SessionRouter:
 
     @property
     def memento(self) -> ConsistentHash:
-        """Back-compat alias from the Memento-only router."""
+        """Back-compat alias from the Memento-only router."""  # obs-exempt
         return self.ch
+
+    def _obs(self):
+        """The live telemetry registry (injected, else process default)."""
+        return self._registry or _default_obs()
 
     # -- single-request path --------------------------------------------------
     def replica_set(self, session_id) -> list[int]:
         """The session's k distinct candidate replicas (replica 0 = the
         classic single-lookup placement).  k is clamped to the surviving
         fleet so deep failure cascades degrade instead of raising."""
+        self._obs().counter("router.replica_set_calls").inc()
         k = min(self.replicas_k, self.ch.working)
         return self.ch.lookup_k(key_to_u32(session_id), k)
 
     def route(self, session_id) -> int:
+        reg = self._obs()
+        t0 = time.perf_counter_ns() if reg.active else 0
         self._poll_store()
         if self.replicas_k > 1 and self._failed:
             reps = self.replica_set(session_id)
@@ -129,6 +178,9 @@ class SessionRouter:
         self._last.move_to_end(session_id)  # no-op for fresh keys
         if len(self._last) > self.max_sessions:
             self._last.popitem(last=False)  # evict the coldest session
+        if reg.active:
+            reg.histogram("router.route.us").observe(
+                (time.perf_counter_ns() - t0) / 1e3)
         return r
 
     # -- bulk path (device plane) ----------------------------------------------
@@ -136,10 +188,11 @@ class SessionRouter:
         if self._store is None:
             plane = "pallas" if self.use_device_plane else "jnp"
             self._store = DeviceImageStore(self.ch, plane=plane,
-                                           compact=self.compact_images)
+                                           compact=self.compact_images,
+                                           registry=self._registry)
         return self._store
 
-    def device_image(self):
+    def device_image(self):  # obs-exempt: pure accessor
         return self.image_store().image()
 
     def _failover_pick(self, sets: np.ndarray) -> np.ndarray:
@@ -158,24 +211,37 @@ class SessionRouter:
 
     def route_batch(self, session_ids: np.ndarray) -> np.ndarray:
         from repro.core.hashing import np_key_to_u32
+        reg = self._obs()
+        t0 = time.perf_counter_ns() if reg.active else 0
         self._poll_store()
         keys = np_key_to_u32(np.asarray(session_ids))
         plane = "pallas" if self.use_device_plane else "jnp"
         if self.replicas_k > 1 and self._failed:
             # k-replica sets in one device pass; same rule as route()
-            return self._failover_pick(self.replica_set_batch(session_ids))
-        return self.image_store().lookup(keys, plane=plane,
-                                         block_rows=self.block_rows)
+            out = self._failover_pick(self.replica_set_batch(session_ids))
+        else:
+            out = self.image_store().lookup(keys, plane=plane,
+                                            block_rows=self.block_rows)
+        if reg.active:
+            reg.counter("router.batch_keys").inc(len(keys))
+            reg.histogram("router.route_batch.us").observe(
+                (time.perf_counter_ns() - t0) / 1e3)
+        return out
 
     def replica_set_batch(self, session_ids: np.ndarray) -> np.ndarray:
         """k-replica sets for a session batch in one engine launch:
         int32 [len(ids), k], column 0 = the classic placement."""
         from repro.core.hashing import np_key_to_u32
+        reg = self._obs()
+        t0 = time.perf_counter_ns() if reg.active else 0
         keys = np_key_to_u32(np.asarray(session_ids))
         plane = "pallas" if self.use_device_plane else "jnp"
         k = min(self.replicas_k, self.ch.working)
         out = self.image_store().lookup(keys, plane=plane, k=k,
                                         block_rows=self.block_rows)
+        if reg.active:
+            reg.histogram("router.replica_set.us", k=k).observe(
+                (time.perf_counter_ns() - t0) / 1e3)
         return out.reshape(-1, 1) if k == 1 else out
 
     # -- streaming path (mesh-sharded plane) ----------------------------------
@@ -188,7 +254,8 @@ class SessionRouter:
         if self._plane is None or mesh is not None or axes is not None:
             plane = ShardedLookupPlane(self.image_store(), mesh=mesh,
                                        axes=axes, block_rows=self.block_rows,
-                                       sync_mode=self.sync_mode)
+                                       sync_mode=self.sync_mode,
+                                       registry=self._registry)
             if mesh is None and axes is None:
                 self._plane = plane
             return plane
@@ -205,11 +272,13 @@ class SessionRouter:
         replica-aware one dispatches per batch so the failover mask is
         applied with the same rule as the scalar path."""
         from repro.core.hashing import np_key_to_u32
+        reg = self._obs()
         plane = self.sharded_plane(mesh=mesh)
         if self.replicas_k == 1:
             def to_keys():
                 for ids in session_id_batches:
                     self.stats.routed += len(ids)
+                    reg.counter("router.stream_batches").inc()
                     yield np_key_to_u32(np.asarray(ids))
 
             yield from plane.route_stream(to_keys())
@@ -219,6 +288,7 @@ class SessionRouter:
             ids = np.asarray(ids)
             self._poll_store()  # overlap: land a ready flip, retire marks
             self.stats.routed += len(ids)
+            reg.counter("router.stream_batches").inc()
             keys = np_key_to_u32(ids)
             if not self._failed:
                 yield plane.lookup(keys)
@@ -232,7 +302,8 @@ class SessionRouter:
         if self._plane_k is None or self._plane_k.k != k or mesh is not None:
             plane = ShardedLookupPlane(self.image_store(), mesh=mesh, k=k,
                                        block_rows=self.block_rows,
-                                       sync_mode=self.sync_mode)
+                                       sync_mode=self.sync_mode,
+                                       registry=self._registry)
             if mesh is None:
                 self._plane_k = plane
             return plane
@@ -268,15 +339,19 @@ class SessionRouter:
         """Health-checker hook: route around ``replica`` NOW, before any
         membership delta is emitted or applied (DESIGN.md §4.3)."""
         self._failed.add(replica)
+        self._obs().counter("router.failover_marks").inc()
 
     def fail_replica(self, replica: int) -> dict:
+        reg = self._obs()
         before = dict(self._last)
         self.mark_failed(replica)  # failover active while the delta lands
         removed = False
         try:
-            self.ch.remove(replica)
-            removed = True
-            self._push_delta()
+            with reg.span("router.fail_replica", replica=replica):
+                self.ch.remove(replica)
+                removed = True
+                self._push_delta()
+            reg.counter("router.membership_events", op="fail").inc()
         finally:
             host_ep = getattr(self.ch, "epoch", None)
             if (removed and self.sync_mode == "overlap"
@@ -304,12 +379,15 @@ class SessionRouter:
         return info
 
     def restore_replica(self) -> int:
-        b = self.ch.add()
-        self._push_delta()
+        reg = self._obs()
+        with reg.span("router.restore_replica"):
+            b = self.ch.add()
+            self._push_delta()
+        reg.counter("router.membership_events", op="restore").inc()
         return b
 
     @property
-    def replicas(self) -> set[int]:
+    def replicas(self) -> set[int]:  # obs-exempt: pure accessor
         return self.ch.working_set()
 
 

@@ -143,7 +143,8 @@ class ScenarioDriver:
                  replica_k: int = 1, check: bool = True,
                  sharded: bool = False, step_sample: int = 256,
                  balance_tol: float = 6.0, sync_mode: str = "block",
-                 followers: int = 0, repl_config: dict | None = None):
+                 followers: int = 0, repl_config: dict | None = None,
+                 telemetry=False):
         if plane not in PLANES:
             raise ValueError(f"unknown plane {plane!r} (have {PLANES})")
         if sync_mode not in ("block", "overlap"):
@@ -159,13 +160,27 @@ class ScenarioDriver:
         # (the hot path's cost) and sync_us (the full flip latency), with
         # checker semantics and replay fingerprints unchanged vs "block".
         self.sync_mode = sync_mode
+        # telemetry plane (DESIGN.md §11): False → off (every component
+        # falls through to the process default, normally a NullRegistry);
+        # True → a fresh scoped MetricRegistry; a registry object → used
+        # as-is.  The scoped registry is injected into every serving
+        # component below AND installed as the process default for the
+        # duration of run(), so module-level instrumentation (engine
+        # dispatch, autotune) lands on it too.
+        if telemetry:
+            from repro.obs.metrics import MetricRegistry
+            self.obs = (telemetry if getattr(telemetry, "active", False)
+                        else MetricRegistry())
+        else:
+            self.obs = None
         self.h = make_hash(algo, trace.initial_nodes,
                            capacity=trace.capacity_factor * trace.initial_nodes,
                            variant="32")
         # the ONE store every consumer shares (router included); the host
         # plane still needs it for delta bookkeeping and the epoch diff
         self.store = DeviceImageStore(
-            self.h, plane="jnp" if plane == "host" else plane)
+            self.h, plane="jnp" if plane == "host" else plane,
+            registry=self.obs)
         # independent streams: membership victims vs traffic keys — a
         # resolved-trace replay consumes no membership randomness yet must
         # draw identical traffic (see module doc)
@@ -174,7 +189,7 @@ class ScenarioDriver:
         self.probe = np.random.default_rng([trace.seed, 2]).integers(
             0, 2**32, size=probe_keys, dtype=np.uint32)
         self._step_sample = self.probe[:step_sample]
-        self.metrics = ScenarioMetrics()
+        self.metrics = ScenarioMetrics(registry=self.obs)
         self.violations: list[Violation] = []
         self._router = None
         self._sharded = sharded
@@ -197,6 +212,7 @@ class ScenarioDriver:
             self._repl = ReplicationGroup(
                 self.h, followers,
                 plane="jnp" if plane == "host" else plane,
+                registry=self.obs,
                 **(repl_config or {}))
             self._repl.publish()  # initial snapshot frame
             self.metrics.followers = followers
@@ -213,7 +229,7 @@ class ScenarioDriver:
                 0, algo=self.h, store=self.store,
                 use_device_plane=(self.plane == "pallas"),
                 replicas_k=self.trace.meta.get("replicas_k", 1),
-                sync_mode=self.sync_mode)
+                sync_mode=self.sync_mode, registry=self.obs)
         return self._router
 
     # -- traffic ------------------------------------------------------------
@@ -236,15 +252,28 @@ class ScenarioDriver:
             if plane is None:
                 from repro.serve.plane import ShardedLookupPlane
                 plane = self._planes_sharded[k] = ShardedLookupPlane(
-                    self.store, k=k, plane=self.plane)  # host returned above
+                    self.store, k=k, plane=self.plane,  # host returned above
+                    registry=self.obs)
             return np.asarray(plane.lookup(keys))
         return self.store.lookup(keys, k=k)
 
     # -- the event loop ------------------------------------------------------
     def run(self) -> ScenarioResult:
-        for i, ev in enumerate(self.trace.events):
-            handler = getattr(self, f"_do_{ev.op}")
-            handler(i, ev)
+        # install the scoped telemetry registry as the process default for
+        # the replay so module-level instrumentation (engine_lookup,
+        # autotune) records here too; always restored on the way out.
+        prev = None
+        if self.obs is not None:
+            from repro.obs.metrics import set_default_registry
+            prev = set_default_registry(self.obs)
+        try:
+            for i, ev in enumerate(self.trace.events):
+                handler = getattr(self, f"_do_{ev.op}")
+                handler(i, ev)
+        finally:
+            if self.obs is not None:
+                from repro.obs.metrics import set_default_registry
+                set_default_registry(prev)
         res = ScenarioResult(
             trace=self.trace, algo=self.algo, plane=self.plane,
             metrics=self.metrics, violations=self.violations,

@@ -16,6 +16,14 @@
 
 ``summary()`` flattens it into the JSON-able dict
 ``benchmarks/bench_scenarios.py`` writes to ``BENCH_scenarios.json``.
+
+Accounting rides the runtime telemetry primitives (DESIGN.md §11): the
+accumulators are ``sim.*`` counters/histograms on a
+:class:`~repro.obs.metrics.MetricRegistry` — the driver's scoped registry
+when one is injected (``ScenarioDriver(telemetry=...)``), else a private
+one — so replay summaries and live telemetry read the SAME numbers and
+can never disagree.  With an injected live registry, ``summary()`` embeds
+its full snapshot under ``"telemetry"``.
 """
 from __future__ import annotations
 
@@ -23,6 +31,8 @@ import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.obs.metrics import ensure_real
 
 
 @dataclass
@@ -56,26 +66,60 @@ class EventRecord:
 
 
 class ScenarioMetrics:
-    """Accumulator the driver feeds; one instance per replay."""
+    """Accumulator the driver feeds; one instance per replay.
 
-    def __init__(self) -> None:
+    ``registry`` — a live :class:`~repro.obs.metrics.MetricRegistry` to
+    accumulate on (the driver's telemetry plane); ``None`` gets a private
+    one.  Either way the ``sim.*`` instruments on that registry ARE the
+    accumulators ``summary()`` reads — there is no second bookkeeping.
+    """
+
+    #: membership ops whose movement/sync/wire fields feed the summary
+    MEMBER_OPS = ("remove", "add", "fail", "restore")
+
+    def __init__(self, registry=None) -> None:
+        self.obs = ensure_real(registry)
+        self._embed = registry is not None and getattr(registry, "active",
+                                                       False)
         self.records: list[EventRecord] = []
         self.degradation: list[tuple[float, float]] = []
         self.followers = 0  # in-process replication followers attached
         self.fanout_depth = 0  # relay hops leader → farthest follower
         self._crc = 0
-        # per-op traffic accumulators: lookup, assign, and route timings
-        # are different code paths and must not blend into one number
-        self._keys: dict[str, int] = {}
-        self._secs: dict[str, float] = {}
+        # per-op traffic is labelled, not blended: lookup, assign, and
+        # route timings are different code paths
+        self._ops: set[str] = set()
 
     # -- feeding -----------------------------------------------------------
     def add_record(self, rec: EventRecord) -> None:
         self.records.append(rec)
+        reg = self.obs
+        reg.counter("sim.events").inc()
+        if rec.violations:
+            reg.counter("sim.violations").inc(rec.violations)
+        if rec.op in self.MEMBER_OPS:
+            reg.counter("sim.membership_events").inc(len(rec.buckets))
+            if rec.moved:
+                reg.counter("sim.moved_probe").inc(rec.moved)
+            if rec.sync_mode == "delta":
+                reg.counter("sim.delta_applies").inc()
+                reg.counter("sim.delta_words").inc(rec.sync_words)
+            elif rec.sync_mode == "snapshot":
+                reg.counter("sim.snapshot_rebuilds").inc()
+                reg.counter("sim.snapshot_words").inc(rec.sync_words)
+            if rec.sync_mode:
+                reg.histogram("sim.sync.us").observe(rec.sync_us)
+                if rec.dispatch_us:
+                    reg.histogram("sim.dispatch.us").observe(rec.dispatch_us)
+            if rec.wire_frames:
+                reg.counter("sim.wire_frames").inc(rec.wire_frames)
+                reg.counter("sim.wire_bytes").inc(rec.wire_bytes)
+                reg.counter("sim.leader_sends").inc(rec.leader_sends)
         if rec.keys and rec.us_per_key:
-            self._keys[rec.op] = self._keys.get(rec.op, 0) + rec.keys
-            self._secs[rec.op] = (self._secs.get(rec.op, 0.0)
-                                  + rec.us_per_key * rec.keys / 1e6)
+            self._ops.add(rec.op)
+            reg.counter("sim.traffic_keys", op=rec.op).inc(rec.keys)
+            reg.histogram("sim.traffic_s", op=rec.op).observe(
+                rec.us_per_key * rec.keys / 1e6)
 
     def fingerprint_update(self, arr: np.ndarray) -> None:
         """Fold a data-plane result into the replay fingerprint."""
@@ -92,41 +136,46 @@ class ScenarioMetrics:
         return f"{self._crc & 0xFFFFFFFF:08x}"
 
     def summary(self) -> dict:
-        recs = self.records
-        member = [r for r in recs if r.op in ("remove", "add", "fail",
-                                              "restore")]
-        syncs = [r for r in member if r.sync_mode]
+        reg = self.obs
+
+        def c(name: str, **labels) -> int:
+            return reg.counter(name, **labels).value
+
+        flips = reg.histogram("sim.sync.us")
         out = {
-            "events": len(recs),
-            "membership_events": sum(len(r.buckets) for r in member),
-            "moved_probe_total": sum(r.moved for r in member),
-            "delta_words_total": sum(r.sync_words for r in syncs
-                                     if r.sync_mode == "delta"),
-            "snapshot_words_total": sum(r.sync_words for r in syncs
-                                        if r.sync_mode == "snapshot"),
-            "snapshot_rebuilds": sum(r.sync_mode == "snapshot" for r in syncs),
-            "delta_applies": sum(r.sync_mode == "delta" for r in syncs),
-            "epoch_flip_us_mean": (float(np.mean([r.sync_us for r in syncs]))
-                                   if syncs else 0.0),
-            "violations": sum(r.violations for r in recs),
+            "events": c("sim.events"),
+            "membership_events": c("sim.membership_events"),
+            "moved_probe_total": c("sim.moved_probe"),
+            "delta_words_total": c("sim.delta_words"),
+            "snapshot_words_total": c("sim.snapshot_words"),
+            "snapshot_rebuilds": c("sim.snapshot_rebuilds"),
+            "delta_applies": c("sim.delta_applies"),
+            "epoch_flip_us_mean": flips.mean if flips.count else 0.0,
+            "violations": c("sim.violations"),
             "fingerprint": self.fingerprint,
         }
-        overlapped = [r for r in syncs if r.dispatch_us]
-        if overlapped:
-            out["sync_dispatch_us_mean"] = float(
-                np.mean([r.dispatch_us for r in overlapped]))
+        dispatch = reg.histogram("sim.dispatch.us")
+        if dispatch.count:
+            out["sync_dispatch_us_mean"] = dispatch.mean
         if self.followers:
-            lags = [r.follower_lag for r in member]
+            lags = [r.follower_lag for r in self.records
+                    if r.op in self.MEMBER_OPS]
             out["followers"] = self.followers
             out["follower_lag_max"] = int(max(lags, default=0))
             out["follower_lag_mean"] = float(np.mean(lags)) if lags else 0.0
             out["fanout_depth"] = self.fanout_depth
-            out["wire_frames_total"] = sum(r.wire_frames for r in member)
-            out["wire_bytes_total"] = sum(r.wire_bytes for r in member)
-            out["leader_sends_total"] = sum(r.leader_sends for r in member)
-        for op, keys in self._keys.items():
+            out["wire_frames_total"] = c("sim.wire_frames")
+            out["wire_bytes_total"] = c("sim.wire_bytes")
+            out["leader_sends_total"] = c("sim.leader_sends")
+        for op in sorted(self._ops):
+            keys = c("sim.traffic_keys", op=op)
             out[f"{op}_keys_total"] = keys
-            out[f"{op}_us_per_key"] = self._secs[op] / keys * 1e6
+            out[f"{op}_us_per_key"] = (
+                reg.histogram("sim.traffic_s", op=op).sum / keys * 1e6)
         if self.degradation:
             out["degradation"] = [[f, s] for f, s in self.degradation]
+        if self._embed:
+            # the full serving-stack registry snapshot rides along into
+            # BENCH_scenarios.json (the ISSUE's telemetry-snapshot table)
+            out["telemetry"] = self.obs.snapshot()
         return out

@@ -1,0 +1,442 @@
+"""Telemetry plane (repro.obs, DESIGN.md §11): bucket math, registry
+thread-safety under epoch-flip races, span nesting, export round-trips,
+the no-op strictness of the NullRegistry, the scenario-replay
+determinism gates, and the instrumentation-coverage scan that keeps
+every serving-layer public method either instrumented or explicitly
+``# obs-exempt``."""
+from __future__ import annotations
+
+import inspect
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import (Histogram, MetricRegistry, NullRegistry,
+                       TelemetrySink, bucket_index, bucket_upper,
+                       default_registry, render_prometheus,
+                       set_default_registry, snapshot_text)
+from repro.obs.metrics import (BUCKETS_PER_OCTAVE, MAX_EXP, MIN_EXP,
+                               ensure_real)
+
+# ---------------------------------------------------------------------------
+# histogram bucket math
+
+
+def test_bucket_index_fixtures():
+    """Known values land in the right log bucket; boundaries are exact."""
+    # factor-2^(1/4) buckets: 1.0 sits exactly on a boundary (index -1 has
+    # upper 2^0 = 1.0, so 1.0 belongs to the bucket whose UPPER is 1.0)
+    assert bucket_upper(bucket_index(1.0)) >= 1.0
+    for v in (1e-3, 0.5, 1.0, 3.7, 1024.0, 1e6):
+        idx = bucket_index(v)
+        assert bucket_upper(idx - 1) < v <= bucket_upper(idx) or \
+            idx in (MIN_EXP, MAX_EXP)
+    # exact powers of two on their boundary, never one bucket high
+    for e in (0, 1, 4, 10):
+        assert bucket_upper(bucket_index(2.0 ** e)) == 2.0 ** e
+
+
+def test_bucket_index_clamps_degenerate_values():
+    """0, negatives, and denormals clamp to the floor bucket; huge values
+    to the ceiling — observe() can never throw on a weird latency."""
+    assert bucket_index(0.0) == MIN_EXP
+    assert bucket_index(-5.0) == MIN_EXP
+    assert bucket_index(1e-30) == MIN_EXP
+    assert bucket_index(1e80) == MAX_EXP
+
+
+def test_quantile_relative_error_bound():
+    """Factor-2^(1/4) buckets ⇒ any quantile is within 19 % above the
+    true value (and max is exact)."""
+    rng = np.random.default_rng(7)
+    vals = rng.lognormal(mean=3.0, sigma=2.0, size=5000)
+    h = Histogram("t")
+    for v in vals:
+        h.observe(float(v))
+    for q in (0.5, 0.95, 0.99):
+        true = float(np.quantile(vals, q, method="inverted_cdf"))
+        got = h.quantile(q)
+        assert true <= got <= true * 2 ** (1 / BUCKETS_PER_OCTAVE) * 1.0001, \
+            (q, true, got)
+    assert h.quantile(1.0) == pytest.approx(h.max)
+    assert h.mean == pytest.approx(float(vals.sum()) / len(vals))
+
+
+def test_histogram_merge_associative_and_commutative():
+    rng = np.random.default_rng(11)
+    parts = [rng.exponential(50, size=200) for _ in range(3)]
+
+    def mk(*chunks):
+        h = Histogram("m")
+        for c in chunks:
+            for v in c:
+                h.observe(float(v))
+        return h
+
+    def merged(a, b):
+        out = mk()
+        out.merge(a)
+        out.merge(b)
+        return out
+
+    a, b, c = (mk(p) for p in parts)
+    ab_c = merged(merged(mk(parts[0]), mk(parts[1])), mk(parts[2]))
+    a_bc = merged(mk(parts[0]), merged(mk(parts[1]), mk(parts[2])))
+    ba = merged(mk(parts[1]), mk(parts[0]))
+    whole = mk(*parts)
+    for h in (ab_c, a_bc):
+        assert h.buckets == whole.buckets
+        assert h.count == whole.count
+        assert h.sum == pytest.approx(whole.sum)
+        assert (h.min, h.max) == (whole.min, whole.max)
+    assert ba.buckets == merged(mk(parts[0]), mk(parts[1])).buckets
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+
+
+def test_registry_labels_and_kind_mismatch():
+    reg = MetricRegistry()
+    c1 = reg.counter("x.hits", op="lookup")
+    c2 = reg.counter("x.hits", op="lookup")
+    c3 = reg.counter("x.hits", op="diff")
+    assert c1 is c2 and c1 is not c3
+    c1.inc(3)
+    assert reg.counter("x.hits", op="lookup").value == 3
+    with pytest.raises(TypeError):
+        reg.histogram("x.hits", op="lookup")  # same key, different kind
+    with pytest.raises(ValueError):
+        c1.inc(-1)  # counters are monotonic
+
+
+def test_registry_thread_safety_under_epoch_flip_race():
+    """The test_image_store hammer pattern, pointed at telemetry: a
+    thread hammers instrumented ``store.lookup`` while the main thread
+    races epoch flips through ``sync_async``.  Every counter lands
+    (exact totals), no exception escapes either thread."""
+    from repro.core import DeviceImageStore, make_hash
+
+    reg = MetricRegistry()
+    h = make_hash("memento", 32, variant="32")
+    store = DeviceImageStore(h, registry=reg)
+    keys = np.arange(64, dtype=np.uint32)
+    store.lookup(keys)  # warm the jit before the clocked race
+
+    base_lookups = reg.counter("store.lookups").value
+    stop = threading.Event()
+    errors: list[Exception] = []
+    done = [0]
+
+    def hammer():
+        try:
+            while not stop.is_set():
+                store.lookup(keys)
+                done[0] += 1
+        except Exception as e:  # surfaced in the main thread
+            errors.append(e)
+
+    t = threading.Thread(target=hammer)
+    t.start()
+    try:
+        rng = np.random.default_rng(3)
+        for _ in range(12):
+            h.remove(int(rng.choice(sorted(h.working_set())[1:])))
+            handle = store.sync_async()
+            while not handle.poll():
+                pass
+    finally:
+        stop.set()
+        t.join()
+    assert not errors, errors
+    assert done[0] > 0
+    assert reg.counter("store.lookups").value == base_lookups + done[0]
+    assert reg.counter("store.lookup_keys").value == \
+        (base_lookups + done[0]) * len(keys)
+    assert reg.counter("store.syncs").value == 12
+
+
+def test_counter_exact_under_contention():
+    reg = MetricRegistry()
+    c = reg.counter("contended")
+    n, per = 8, 5000
+
+    def worker():
+        for _ in range(per):
+            c.inc()
+
+    ts = [threading.Thread(target=worker) for _ in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == n * per
+
+
+# ---------------------------------------------------------------------------
+# null registry strictness
+
+
+def test_null_registry_is_stateless_and_shared():
+    null = NullRegistry()
+    assert not null.active
+    c = null.counter("anything", label="x")
+    assert c is null.histogram("other")  # one shared no-op instrument
+    c.inc(5)
+    c.observe(3.0)
+    assert c.value == 0
+    assert null.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+    assert null.sink.to_jsonl() == ""
+    with null.span("noop", a=1):  # a usable (empty) context manager
+        pass
+    assert null.tracer.completed() == []
+
+
+def test_default_registry_starts_null_and_restores():
+    assert not default_registry().active
+    reg = MetricRegistry()
+    prev = set_default_registry(reg)
+    try:
+        assert default_registry() is reg
+    finally:
+        set_default_registry(prev)
+    assert not default_registry().active
+
+
+def test_ensure_real_gives_private_registry_when_telemetry_off():
+    r = ensure_real(None)
+    assert r.active  # public stats APIs keep working with telemetry off
+    live = MetricRegistry()
+    assert ensure_real(live) is live
+    assert ensure_real(NullRegistry()) is not None
+    assert ensure_real(NullRegistry()).active
+
+
+# ---------------------------------------------------------------------------
+# spans
+
+
+def test_span_nesting_parent_child_and_order():
+    reg = MetricRegistry()
+    with reg.span("outer", mode="x") as outer:
+        with reg.span("mid") as mid:
+            with reg.span("inner"):
+                pass
+        with reg.span("mid2"):
+            pass
+    tr = reg.tracer
+    names = [s.name for s in tr.completed()]
+    # completion order is deterministic: children close before parents
+    assert names == ["inner", "mid", "mid2", "outer"]
+    spans = {s.name: s for s in tr.completed()}
+    assert spans["outer"].parent == 0 and spans["outer"].depth == 1
+    assert spans["mid"].parent == spans["outer"].id
+    assert spans["inner"].parent == spans["mid"].id
+    assert spans["inner"].depth == 3
+    assert spans["outer"].attrs == {"mode": "x"}
+    assert {s.name for s in tr.children_of(outer)} == {"mid", "mid2"}
+    assert outer.dur_us >= mid.dur_us >= 0.0
+    assert [d for d, _, _ in tr.tree()] == [3, 2, 2, 1]
+
+
+def test_span_ring_is_bounded():
+    from repro.obs.trace import Tracer
+
+    tr = Tracer(max_spans=8)
+    for i in range(20):
+        with tr.span(f"s{i}"):
+            pass
+    assert len(tr.completed()) == 8
+    assert tr.dropped == 12
+    assert tr.completed()[-1].name == "s19"
+
+
+def test_span_emits_sink_events():
+    reg = MetricRegistry()
+    with reg.span("a", epoch=3):
+        pass
+    evs = reg.sink.events("span")
+    assert len(evs) == 1
+    assert evs[0]["name"] == "a" and evs[0]["epoch"] == 3
+    assert evs[0]["dur_us"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# export
+
+
+def _fixture_registry() -> MetricRegistry:
+    reg = MetricRegistry()
+    reg.counter("eng.hits", op="lookup").inc(7)
+    reg.counter("eng.hits", op="diff").inc(2)
+    reg.gauge("lag", follower="0").set(4)
+    h = reg.histogram("lat.us")
+    for v in (1.0, 2.0, 2.0, 100.0):
+        h.observe(v)
+    return reg
+
+
+def test_prometheus_exposition_shape():
+    txt = render_prometheus(_fixture_registry())
+    lines = txt.splitlines()
+    assert '# TYPE repro_eng_hits counter' in lines
+    assert 'repro_eng_hits{op="diff"} 2' in lines
+    assert 'repro_eng_hits{op="lookup"} 7' in lines
+    assert 'repro_lag{follower="0"} 4' in lines
+    assert '# TYPE repro_lat_us histogram' in lines
+    assert 'repro_lat_us_bucket{le="+Inf"} 4' in lines
+    assert 'repro_lat_us_count 4' in lines
+    assert 'repro_lat_us_sum 105.0' in lines
+    # cumulative bucket counts never decrease
+    cums = [int(l.rsplit(" ", 1)[1]) for l in lines
+            if l.startswith("repro_lat_us_bucket")]
+    assert cums == sorted(cums) and cums[-1] == 4
+    # deterministic: same registry renders byte-identical
+    assert txt == render_prometheus(_fixture_registry())
+
+
+def test_snapshot_text_round_trip():
+    reg = _fixture_registry()
+    snap = json.loads(snapshot_text(reg))
+    assert snap["counters"]['eng.hits{op="lookup"}'] == 7
+    assert snap["gauges"]['lag{follower="0"}'] == 4
+    hist = snap["histograms"]["lat.us"]
+    assert hist["count"] == 4 and hist["sum"] == 105.0
+    assert hist["max"] == 100.0
+    assert snapshot_text(reg) == snapshot_text(reg)
+
+
+def test_sink_jsonl_round_trip_and_bound():
+    sink = TelemetrySink(max_events=4)
+    for i in range(7):
+        sink.emit("tick", i=i)
+    assert sink.emitted == 7 and sink.dropped == 3
+    evs = sink.events()
+    assert [e["i"] for e in evs] == [3, 4, 5, 6]
+    assert TelemetrySink.parse_jsonl(sink.to_jsonl()) == evs
+
+
+# ---------------------------------------------------------------------------
+# RouterStats view (the dict API rides registry counters now)
+
+
+def test_router_stats_view_keeps_dict_api():
+    from repro.serve.router import RouterStats
+
+    reg = MetricRegistry()
+    stats = RouterStats(reg)
+    stats.routed += 5
+    stats.failovers += 1
+    assert stats.routed == 5
+    assert reg.counter("router.routed").value == 5
+    assert stats.as_dict() == {"routed": 5, "moved_on_failure": 0,
+                               "affinity_hits": 0, "failovers": 1}
+    stats.routed = 2  # backwards writes can't decrement a counter
+    assert stats.routed == 5
+
+
+# ---------------------------------------------------------------------------
+# scenario-replay determinism gates (the ISSUE's acceptance bar)
+
+
+def _storm():
+    from repro.sim.traces import churn_storm_trace
+    return churn_storm_trace(0, w=32, storms=1, burst=4, n_keys=128)
+
+
+def test_replay_telemetry_deterministic_and_fingerprint_stable():
+    from repro.sim.driver import replay
+
+    resolved = replay(_storm(), algo="memento", plane="jnp").resolved
+    r_off = replay(resolved, algo="memento", plane="jnp")
+    r1 = replay(resolved, algo="memento", plane="jnp", telemetry=True)
+    r2 = replay(resolved, algo="memento", plane="jnp", telemetry=True)
+    assert not default_registry().active  # scoped install restored
+    # telemetry may never change a placement
+    assert r_off.fingerprint == r1.fingerprint == r2.fingerprint
+    t1, t2 = r1.summary()["telemetry"], r2.summary()["telemetry"]
+    assert t1["counters"] == t2["counters"]
+    assert t1["gauges"] == t2["gauges"]
+    assert {k: v["count"] for k, v in t1["histograms"].items()} == \
+        {k: v["count"] for k, v in t2["histograms"].items()}
+    assert any(v["count"] > 0 and k.startswith("engine.dispatch.us")
+               for k, v in t1["histograms"].items())
+    assert "telemetry" not in r_off.summary()
+    # the summary numbers agree between telemetered and plain replays
+    s_off, s_on = r_off.summary(), r1.summary()
+    for k, v in s_off.items():
+        if isinstance(v, (int, str)) and not k.endswith("us_mean"):
+            assert s_on[k] == v, k
+
+
+def test_replay_accepts_external_registry():
+    from repro.sim.driver import replay
+
+    reg = MetricRegistry()
+    res = replay(_storm(), algo="memento", plane="jnp", telemetry=reg)
+    assert res.metrics.obs is reg
+    assert reg.counter("sim.events").value == len(res.metrics.records)
+    assert reg.counter("store.syncs").value > 0
+
+
+def test_time_fn_histogram_deltas():
+    from benchmarks.timing import time_fn
+
+    h = Histogram("bench.us")
+    h.observe(1e6)  # pre-existing sample must not skew the mean
+    mean_s = time_fn(lambda: None, repeats=4, warmup=0, histogram=h)
+    assert h.count == 5
+    assert 0.0 <= mean_s < 0.1
+
+
+# ---------------------------------------------------------------------------
+# instrumentation-coverage scan: every public method on the serving
+# surfaces either records telemetry or carries an explicit allowlist
+# marker (`# obs-exempt`) saying why it does no device/wire work.
+
+SURFACES = [
+    ("repro.core.image_store", ("DeviceImageStore", "SyncHandle")),
+    ("repro.serve.router", ("SessionRouter",)),
+    ("repro.serve.plane", ("ShardedLookupPlane",)),
+    ("repro.launch.replicate", ("DeltaPublisher", "FollowerImageStore",
+                                "ReplicationGroup")),
+]
+
+#: source fragments that prove a method (or its delegate) records
+INSTRUMENTED = ("_obs(", "self.telemetry", "_record_batch(", "_account(",
+                "registry", "ensure_real(", ".span(", ".counter(",
+                ".histogram(", ".gauge(")
+
+
+def _public_methods(cls):
+    for name, member in vars(cls).items():
+        if name.startswith("_"):
+            continue
+        fn = member.fget if isinstance(member, property) else member
+        if callable(fn):
+            yield name, fn
+
+
+@pytest.mark.parametrize("modname,classes", SURFACES,
+                         ids=[m for m, _ in SURFACES])
+def test_serving_surfaces_fully_instrumented(modname, classes):
+    import importlib
+
+    mod = importlib.import_module(modname)
+    missing = []
+    for clsname in classes:
+        for name, fn in _public_methods(getattr(mod, clsname)):
+            try:
+                src = inspect.getsource(fn)
+            except (OSError, TypeError):
+                continue
+            if "obs-exempt" in src:
+                continue
+            if not any(tok in src for tok in INSTRUMENTED):
+                missing.append(f"{clsname}.{name}")
+    assert not missing, (
+        f"uninstrumented public methods on {modname}: {missing} — record "
+        "telemetry or mark the def with `# obs-exempt: <why>`")
